@@ -1,0 +1,49 @@
+"""Paper Fig. 6 analogue: communication/linalg share of a generation vs
+evaluation cost, from the CMA dry-run artifact + the parallel-time model.
+
+The paper profiles a K=2⁸ descent on 256 MPI processes and shows MPI share
+collapsing as per-evaluation cost grows from 0 to 100 ms.  Here the ES-side
+costs come from the compiled artifact (collective + linalg time at hardware
+bandwidth) and the evaluation term is swept analytically.
+
+  PYTHONPATH=src python -m benchmarks.bench_comm_share
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from benchmarks.roofline import HBM_BW, ICI_BW, PEAK_FLOPS, ARTIFACT_DIR
+
+COSTS_MS = (0.0, 0.009, 1.0, 10.0, 100.0)   # paper: BBOB native ≈ ≤9ms @ d1000
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--artifact", default=None)
+    args = ap.parse_args(argv)
+    path = args.artifact
+    if path is None:
+        cands = sorted(glob.glob(os.path.join(ARTIFACT_DIR, "cma__*__pod.json")))
+        if not cands:
+            print("no CMA artifact — run: python -m repro.launch.dryrun --cma")
+            return 1
+        path = cands[0]
+    with open(path) as f:
+        m = json.load(f)
+    t_comm = m["collective_bytes"]["total"] / ICI_BW
+    t_es = max(m["flops"] / PEAK_FLOPS, m["bytes_accessed"] / HBM_BW)
+    print(f"# per-generation ES overhead from {os.path.basename(path)}: "
+          f"linalg/memory {t_es * 1e6:.1f}µs, collectives {t_comm * 1e6:.2f}µs")
+    print("eval_cost_ms,comm_share,linalg_share,eval_share")
+    for c in COSTS_MS:
+        t_eval = c * 1e-3          # one eval per core per generation round
+        tot = t_eval + t_es + t_comm
+        print(f"{c},{t_comm / tot:.4f},{t_es / tot:.4f},{t_eval / tot:.4f}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,86 @@
+"""Paper Fig. 8 / Table 4 analogue: ECDF of (function, target, run) triplets
+hit vs modeled wall time, for the three algorithms.
+
+  PYTHONPATH=src python -m benchmarks.bench_ecdf [--fids 1,8,10] [--dim 10]
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from benchmarks.bench_strategies import (TARGETS, kd_hit_times, kr_hit_times,
+                                         seq_hit_times)
+from benchmarks.parallel_time import CostModel
+from repro.core.ipop import run_ipop
+from repro.core.strategies import KDistributed, KReplicated
+from repro.fitness import bbob
+
+
+def collect_hits(fids, dim, devices, cost_ms, runs, gens, max_evals):
+    cm = CostModel(eval_cost_s=cost_ms * 1e-3)
+    hits = {"seq": [], "kdist": [], "krep": []}
+    ends = {"seq": 0.0, "kdist": 0.0, "krep": 0.0}
+    for fid in fids:
+        inst = bbob.make_instance(fid, dim, 1)
+        fit = lambda X: bbob.evaluate(fid, inst, X)
+        f_opt = float(inst.f_opt)
+        for r in range(runs):
+            res = run_ipop(fit, dim, jax.random.PRNGKey(100 + r),
+                           max_evals=max_evals)
+            h, b = seq_hit_times(res, f_opt, cm)
+            hits["seq"].extend(h)
+            ends["seq"] = max(ends["seq"], b)
+
+            kd = KDistributed(n=dim, n_devices=devices)
+            _, tr = kd.run_sim(jax.random.PRNGKey(200 + r), fit,
+                               total_gens=gens)
+            h, b = kd_hit_times(kd, tr, f_opt, cm, devices)
+            hits["kdist"].extend(h)
+            ends["kdist"] = max(ends["kdist"], b)
+
+            kr = KReplicated(n=dim, n_devices=devices)
+            out = kr.run_sim(jax.random.PRNGKey(300 + r), fit,
+                             phase_gens=gens, max_evals=max_evals)
+            h, b = kr_hit_times(out, f_opt, cm, devices, 12, dim)
+            hits["krep"].extend(h)
+            ends["krep"] = max(ends["krep"], b)
+    return {k: np.asarray(v) for k, v in hits.items()}, ends
+
+
+def ecdf_at(hits: np.ndarray, t: float) -> float:
+    return float(np.mean(hits <= t)) if hits.size else 0.0
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fids", default="1,8")
+    ap.add_argument("--dim", type=int, default=10)
+    ap.add_argument("--devices", type=int, default=8)
+    ap.add_argument("--cost-ms", type=float, default=1.0)
+    ap.add_argument("--runs", type=int, default=2)
+    ap.add_argument("--gens", type=int, default=120)
+    ap.add_argument("--max-evals", type=int, default=40_000)
+    args = ap.parse_args(argv)
+    fids = [int(f) for f in args.fids.split(",")]
+    hits, ends = collect_hits(fids, args.dim, args.devices, args.cost_ms,
+                              args.runs, args.gens, args.max_evals)
+
+    # ECDF curves over a log time grid
+    tmax = max(ends.values())
+    grid = np.logspace(np.log10(max(1e-3, args.cost_ms * 1e-3)),
+                       np.log10(max(tmax, 1e-2)), 12)
+    print("t_s," + ",".join(hits.keys()))
+    for t in grid:
+        print(f"{t:.3g}," + ",".join(f"{ecdf_at(hits[k], t):.3f}"
+                                     for k in hits))
+    # Table 4 analogue: ECD value at K-Distributed's final timestamp
+    t_ref = ends["kdist"]
+    print(f"# ECD at K-Distributed final t={t_ref:.3g}s: "
+          + ", ".join(f"{k}={ecdf_at(hits[k], t_ref):.3f}" for k in hits))
+    return hits, ends
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,120 @@
+"""Paper Fig. 5 / Table 1 analogue: the linear-algebra rewrites.
+
+Compares, per dimension n ∈ {10, 40, 200, 1000} and population λ = K·12:
+  * loop-form covariance adaptation (λ rank-1 updates — the reference C
+    code's original eq. 2) vs the GEMM-form rewrite (paper eq. 3);
+  * loop-form sampling (λ matvecs, eq. 1) vs the batched GEMM rewrite;
+  * the share of linear algebra in a full CMA-ES generation before/after
+    (Table 1 analogue).
+
+On TPU the GEMM forms additionally route to the fused Pallas kernels
+(kernels/cma_update.py — one HBM pass); on this CPU container both forms run
+through XLA, which is exactly the paper's BLAS-vs-loops comparison.
+
+  PYTHONPATH=src python -m benchmarks.bench_linalg [--dims 10,40,200] [--ks 1,16]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+
+
+def _time(fn, reps=5):
+    jax.block_until_ready(fn())                # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+@jax.jit
+def _loop_cov_update(C, Y, w, p_c, decay, c_mu, c_1):
+    """Paper eq. 2 as written: λ sequential rank-1 updates."""
+    def body(i, acc):
+        return acc + w[i] * jnp.outer(Y[i], Y[i])
+    gram = jax.lax.fori_loop(0, Y.shape[0], body, jnp.zeros_like(C))
+    return decay * C + c_mu * gram + c_1 * jnp.outer(p_c, p_c)
+
+
+@jax.jit
+def _gemm_cov_update(C, Y, w, p_c, decay, c_mu, c_1):
+    return ref.rank_mu_update(C, Y, w, p_c, decay, c_mu, c_1)
+
+
+@jax.jit
+def _loop_sample(m, sigma, B, D, Z):
+    def body(i, X):
+        return X.at[i].set(m + sigma * (B @ (D * Z[i])))
+    return jax.lax.fori_loop(0, Z.shape[0], body, jnp.zeros_like(Z))
+
+
+@jax.jit
+def _gemm_sample(m, sigma, B, D, Z):
+    return ref.sample_points(m, sigma, B, D, Z)
+
+
+def run(dims, ks, reps=5):
+    rows = []
+    for n in dims:
+        key = jax.random.PRNGKey(n)
+        kC, kY, kp, kz = jax.random.split(key, 4)
+        A = jax.random.normal(kC, (n, n))
+        C = A @ A.T / n + jnp.eye(n)
+        Bmat, _ = jnp.linalg.qr(A)
+        D = jnp.abs(jax.random.normal(kp, (n,))) + 0.5
+        p_c = jax.random.normal(kp, (n,))
+        for K in ks:
+            lam = K * 12
+            Y = jax.random.normal(kY, (lam, n))
+            w = jnp.abs(jax.random.normal(kz, (lam,)))
+            w = w / w.sum()
+            Z = jax.random.normal(kz, (lam, n))
+            m = jnp.zeros((n,))
+
+            t_loop_c = _time(lambda: _loop_cov_update(
+                C, Y, w, p_c, 0.9, 0.05, 0.05), reps=reps)
+            t_gemm_c = _time(lambda: _gemm_cov_update(
+                C, Y, w, p_c, 0.9, 0.05, 0.05), reps=reps)
+            t_loop_s = _time(lambda: _loop_sample(m, 0.3, Bmat, D, Z),
+                             reps=reps)
+            t_gemm_s = _time(lambda: _gemm_sample(m, 0.3, Bmat, D, Z),
+                             reps=reps)
+            t_eig = _time(lambda: jnp.linalg.eigh(C), reps=max(1, reps // 2))
+            rows.append(dict(
+                n=n, K=K, lam=lam,
+                cov_loop_us=t_loop_c * 1e6, cov_gemm_us=t_gemm_c * 1e6,
+                cov_speedup=t_loop_c / t_gemm_c,
+                samp_loop_us=t_loop_s * 1e6, samp_gemm_us=t_gemm_s * 1e6,
+                samp_speedup=t_loop_s / t_gemm_s,
+                eigh_us=t_eig * 1e6))
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dims", default="10,40,200")
+    ap.add_argument("--ks", default="1,16")
+    ap.add_argument("--reps", type=int, default=5)
+    args = ap.parse_args(argv)
+    dims = [int(d) for d in args.dims.split(",")]
+    ks = [int(k) for k in args.ks.split(",")]
+    rows = run(dims, ks, args.reps)
+    print("n,K,lam,cov_loop_us,cov_gemm_us,cov_speedup,"
+          "samp_loop_us,samp_gemm_us,samp_speedup,eigh_us")
+    for r in rows:
+        print(f"{r['n']},{r['K']},{r['lam']},{r['cov_loop_us']:.1f},"
+              f"{r['cov_gemm_us']:.1f},{r['cov_speedup']:.2f},"
+              f"{r['samp_loop_us']:.1f},{r['samp_gemm_us']:.1f},"
+              f"{r['samp_speedup']:.2f},{r['eigh_us']:.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

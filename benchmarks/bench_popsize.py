@@ -1,0 +1,65 @@
+"""Paper Fig. 9 / Table 5 analogue: which population size (K) first reaches
+each target under K-Distributed — the evidence for running all K at once.
+
+  PYTHONPATH=src python -m benchmarks.bench_popsize [--fids 1,8,15] [--dim 10]
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.core.strategies import KDistributed
+from repro.fitness import bbob
+
+TARGETS = np.array([1e2, 1e1, 1e0, 1e-1, 1e-2])
+
+
+def first_descent_to_target(trace, f_opt):
+    """For each target: log2 K of the first descent whose per-generation
+    best crosses it (NaN if never)."""
+    gen_best = trace["gen_best"]                  # (T, D)
+    T, D = gen_best.shape
+    best_per_descent = np.minimum.accumulate(gen_best, axis=0)
+    out = np.full(len(TARGETS), np.nan)
+    for i, tgt in enumerate(TARGETS):
+        hit_gen = np.full(D, np.inf)
+        for d in range(D):
+            idx = np.nonzero(best_per_descent[:, d] - f_opt <= tgt)[0]
+            if idx.size:
+                hit_gen[d] = idx[0]
+        if np.isfinite(hit_gen).any():
+            out[i] = int(np.argmin(hit_gen))      # descent index == log2 K
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fids", default="1,8,15")
+    ap.add_argument("--dim", type=int, default=10)
+    ap.add_argument("--devices", type=int, default=8)
+    ap.add_argument("--runs", type=int, default=3)
+    ap.add_argument("--gens", type=int, default=150)
+    args = ap.parse_args(argv)
+    fids = [int(f) for f in args.fids.split(",")]
+
+    print("fid," + ",".join(f"log2K@{t:.0e}" for t in TARGETS))
+    for fid in fids:
+        inst = bbob.make_instance(fid, args.dim, 1)
+        fit = lambda X: bbob.evaluate(fid, inst, X)
+        f_opt = float(inst.f_opt)
+        acc = []
+        for r in range(args.runs):
+            kd = KDistributed(n=args.dim, n_devices=args.devices)
+            _, tr = kd.run_sim(jax.random.PRNGKey(400 + r), fit,
+                               total_gens=args.gens)
+            acc.append(first_descent_to_target(tr, f_opt))
+        avg = np.nanmean(np.stack(acc), axis=0)
+        cells = [f"{v:.1f}" if np.isfinite(v) else "—" for v in avg]
+        print(f"{fid}," + ",".join(cells))
+    return 0
+
+
+if __name__ == "__main__":
+    main()

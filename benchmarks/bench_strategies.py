@@ -1,0 +1,127 @@
+"""Paper Table 2 / Table 3 analogue: parallel-strategy speedups over the
+sequential IPOP-CMA-ES, per (function, target), with the parallel-time model
+(benchmarks/parallel_time.py) at configurable evaluation granularity.
+
+  PYTHONPATH=src python -m benchmarks.bench_strategies \
+      [--fids 1,8,10,15] [--dim 10] [--devices 8] [--cost-ms 1] [--runs 3]
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from benchmarks.parallel_time import CostModel, ert
+from repro.core.ipop import run_ipop
+from repro.core.strategies import KDistributed, KReplicated
+from repro.fitness import bbob
+
+TARGETS = np.array([1e2, 1e1, 1e0, 1e-1, 1e-2])
+
+
+def kd_hit_times(kd, trace, f_opt, cm: CostModel, devices: int):
+    """Per-target wall-time (model) at which K-Distributed first hits.
+
+    Every K-Distributed generation is one lockstep round: all descents run
+    concurrently on their device groups, so t_gen = eval rounds (=1, one
+    eval per core) + linalg + comm.
+    """
+    t_gen = cm.gen_time_parallel(kd.lam_start, 1, kd.n)   # 1 round
+    best = np.minimum.accumulate(trace["best_f"])
+    hits = np.full(len(TARGETS), np.inf)
+    for g, bf in enumerate(best):
+        for i, t in enumerate(TARGETS):
+            if np.isinf(hits[i]) and bf - f_opt <= t:
+                hits[i] = (g + 1) * t_gen
+    return hits, len(best) * t_gen
+
+
+def seq_hit_times(res, f_opt, cm: CostModel):
+    hits_ev = res.hit_evals(TARGETS, f_opt)
+    return hits_ev * cm.eval_cost_s, res.total_fevals * cm.eval_cost_s
+
+
+def kr_hit_times(out, f_opt, cm: CostModel, devices: int, lam_start: int,
+                 n: int):
+    hits = np.full(len(TARGETS), np.inf)
+    t = 0.0
+    best = np.inf
+    for ph in out["phases"]:
+        lam = ph["lam"]
+        d_per = max(1, devices // max(1, ph["n_groups"]))
+        t_gen = cm.gen_time_parallel(lam, d_per, n)
+        for bf in ph["best_f"]:
+            t += t_gen
+            best = min(best, bf)
+            for i, tgt in enumerate(TARGETS):
+                if np.isinf(hits[i]) and best - f_opt <= tgt:
+                    hits[i] = t
+    return hits, t
+
+
+def run(fids, dim, devices, cost_ms, runs, gens, max_evals):
+    cm = CostModel(eval_cost_s=cost_ms * 1e-3)
+    rows = []
+    for fid in fids:
+        inst = bbob.make_instance(fid, dim, 1)
+        fit = lambda X: bbob.evaluate(fid, inst, X)
+        f_opt = float(inst.f_opt)
+        seq_h, kd_h, kr_h = [], [], []
+        seq_b, kd_b, kr_b = [], [], []
+        for r in range(runs):
+            res = run_ipop(fit, dim, jax.random.PRNGKey(100 + r),
+                           max_evals=max_evals)
+            h, b = seq_hit_times(res, f_opt, cm)
+            seq_h.append(h); seq_b.append(b)
+
+            kd = KDistributed(n=dim, n_devices=devices)
+            _, tr = kd.run_sim(jax.random.PRNGKey(200 + r), fit,
+                               total_gens=gens)
+            h, b = kd_hit_times(kd, tr, f_opt, cm, devices)
+            kd_h.append(h); kd_b.append(b)
+
+            kr = KReplicated(n=dim, n_devices=devices)
+            out = kr.run_sim(jax.random.PRNGKey(300 + r), fit,
+                             phase_gens=gens, max_evals=max_evals)
+            h, b = kr_hit_times(out, f_opt, cm, devices, 12, dim)
+            kr_h.append(h); kr_b.append(b)
+
+        for i, tgt in enumerate(TARGETS):
+            e_seq = ert(np.array([h[i] for h in seq_h]), np.array(seq_b))
+            e_kd = ert(np.array([h[i] for h in kd_h]), np.array(kd_b))
+            e_kr = ert(np.array([h[i] for h in kr_h]), np.array(kr_b))
+            rows.append(dict(
+                fid=fid, target=tgt, ert_seq=e_seq, ert_kdist=e_kd,
+                ert_krep=e_kr,
+                speedup_kdist=e_seq / e_kd if np.isfinite(e_kd) else np.nan,
+                speedup_krep=e_seq / e_kr if np.isfinite(e_kr) else np.nan))
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fids", default="1,8")
+    ap.add_argument("--dim", type=int, default=10)
+    ap.add_argument("--devices", type=int, default=8)
+    ap.add_argument("--cost-ms", type=float, default=1.0)
+    ap.add_argument("--runs", type=int, default=3)
+    ap.add_argument("--gens", type=int, default=120)
+    ap.add_argument("--max-evals", type=int, default=40_000)
+    args = ap.parse_args(argv)
+    fids = [int(f) for f in args.fids.split(",")]
+    rows = run(fids, args.dim, args.devices, args.cost_ms, args.runs,
+               args.gens, args.max_evals)
+    print("fid,target,ert_seq_s,ert_kdist_s,ert_krep_s,"
+          "speedup_kdist,speedup_krep")
+    for r in rows:
+        def f(v):
+            return f"{v:.3g}" if np.isfinite(v) else "inf"
+        print(f"{r['fid']},{r['target']:.0e},{f(r['ert_seq'])},"
+              f"{f(r['ert_kdist'])},{f(r['ert_krep'])},"
+              f"{f(r['speedup_kdist'])},{f(r['speedup_krep'])}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

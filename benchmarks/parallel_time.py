@@ -1,0 +1,53 @@
+"""Parallel-time model (DESIGN.md §2, last row).
+
+This CPU-only container cannot measure Fugaku/TPU wall-clock, so speedup
+tables use an explicit, reported model — the deployment the paper describes
+(§3.2.1): each evaluation runs on a dedicated core/slot, so
+
+  t_gen(λ, d) = eval_cost · ⌈λ / (λ_slots · d)⌉ + t_linalg(n) + t_comm(d)
+
+with d the devices owned by the descent.  The sequential baseline evaluates
+one point at a time: t_gen = λ·eval_cost + t_linalg.  Reported ERT tables
+also list raw evaluation counts so the model's contribution is transparent.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class CostModel:
+    eval_cost_s: float = 1e-3          # per-evaluation blackbox cost
+    lam_slots: int = 12                # evaluations per device (paper: T=12)
+    linalg_ref_s: float = 3e-5         # t_linalg at n=10 (measured, 1 core)
+    comm_per_round_s: float = 2e-5     # scatter+gather / psum latency
+
+    def t_linalg(self, n: int) -> float:
+        # eigh amortized O(n³)/interval + O(n²) updates ≈ quadratic-ish here
+        return self.linalg_ref_s * (n / 10.0) ** 2
+
+    def gen_time_parallel(self, lam: int, devices: int, n: int) -> float:
+        rounds = int(np.ceil(lam / (self.lam_slots * max(devices, 1))))
+        return (rounds * self.eval_cost_s + self.t_linalg(n)
+                + self.comm_per_round_s)
+
+    def gen_time_sequential(self, lam: int, n: int) -> float:
+        return lam * self.eval_cost_s + self.t_linalg(n)
+
+
+def seq_times_from_evals(evals: np.ndarray, n: int,
+                         cm: CostModel) -> np.ndarray:
+    """Cumulative evaluations → modeled wall time (sequential execution)."""
+    return evals * cm.eval_cost_s            # linalg amortized: eval-dominated
+
+
+def ert(hit_times: np.ndarray, budget_times: np.ndarray) -> float:
+    """Expected RunTime (paper §4.3.1): Σ time spent across runs (hit time
+    for successful runs, full budget for unsuccessful) / #successes."""
+    ok = np.isfinite(hit_times)
+    if not ok.any():
+        return np.inf
+    total = hit_times[ok].sum() + budget_times[~ok].sum()
+    return float(total / ok.sum())

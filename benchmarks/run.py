@@ -1,0 +1,86 @@
+"""Benchmark aggregator — one section per paper table/figure + the roofline.
+
+  PYTHONPATH=src python -m benchmarks.run [--full]
+
+Default sizes are CI-scale (single CPU core); --full widens dims/functions
+to the paper's ranges (hours on this container, intended for real hardware).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+
+def section(title):
+    print(f"\n=== {title} " + "=" * max(1, 60 - len(title)), flush=True)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args(argv)
+    t0 = time.time()
+
+    from benchmarks import (bench_comm_share, bench_ecdf, bench_linalg,
+                            bench_popsize, bench_strategies, roofline)
+
+    section("Fig.5/Table 1 — BLAS/GEMM linear-algebra rewrites")
+    if args.full:
+        bench_linalg.main(["--dims", "10,40,200,1000", "--ks", "1,256"])
+    else:
+        bench_linalg.main(["--dims", "10,40,200", "--ks", "1,16",
+                           "--reps", "3"])
+
+    section("Table 2 — strategy speedups over sequential IPOP (ERT model)")
+    if args.full:
+        bench_strategies.main(["--fids", "1,2,8,10,15,20", "--dim", "40",
+                               "--devices", "512", "--cost-ms", "10",
+                               "--runs", "5", "--gens", "400"])
+    else:
+        bench_strategies.main(["--fids", "1,8", "--dim", "10",
+                               "--devices", "8", "--cost-ms", "1",
+                               "--runs", "2", "--gens", "100",
+                               "--max-evals", "25000"])
+
+    section("Fig.8/Table 4 — ECDF over (function,target,run)")
+    if args.full:
+        bench_ecdf.main(["--fids", "1,2,8,10,15,20", "--dim", "40",
+                         "--devices", "512", "--runs", "5"])
+    else:
+        bench_ecdf.main(["--fids", "1,8", "--dim", "10", "--devices", "8",
+                         "--runs", "2", "--gens", "100",
+                         "--max-evals", "25000"])
+
+    section("Fig.9/Table 5 — best population size per (function,target)")
+    if args.full:
+        bench_popsize.main(["--fids", "1,7,8,15,17", "--dim", "40",
+                            "--devices", "512", "--runs", "5",
+                            "--gens", "400"])
+    else:
+        bench_popsize.main(["--fids", "1,8", "--dim", "10",
+                            "--devices", "8", "--runs", "2",
+                            "--gens", "100"])
+
+    section("Fig.6 — comm/linalg share vs evaluation cost (CMA gen step)")
+    bench_comm_share.main([])
+
+    section("Roofline — single-pod baselines (from dry-run artifacts)")
+    roofline.main(["--mesh", "pod"])
+
+    section("Roofline — single-pod OPTIMIZED (flash + rowwise, §Perf)")
+    roofline.main(["--mesh", "pod_opt"])
+
+    section("Roofline — multi-pod (if artifacts present)")
+    roofline.main(["--mesh", "multipod"])
+
+    print(f"\n[benchmarks.run] total {time.time() - t0:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,152 @@
+"""Sharded checkpointing: async writer, atomic commit, elastic re-shard.
+
+Layout (one directory per step):
+    ckpt_dir/step_000123.tmp/     — being written (never restored from)
+    ckpt_dir/step_000123/         — atomically renamed once complete
+        manifest.json             — tree structure, shapes, dtypes, step
+        <leaf-path>.npy           — one file per pytree leaf
+
+Restore is *elastic*: leaves are loaded as host arrays and re-placed with
+``jax.device_put`` under the restoring mesh's shardings — the mesh shape may
+differ from the writing run's (scale up/down between runs).  On a multi-host
+deployment each host would write only its owned shards (jax
+``process_index`` slicing); this container is single-process, so the
+writer path is exercised end-to-end with local shards.
+
+Fault-tolerance contract (used by train/trainer.py):
+  * writes happen on a background thread — training never blocks on I/O;
+  * a crash mid-write leaves only a ``.tmp`` dir, which restore ignores;
+  * ``latest_step`` finds the newest committed checkpoint for restart.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree.keys()):
+            out.update(_flatten(tree[k], f"{prefix}/{k}" if prefix else str(k)))
+    elif hasattr(tree, "_fields"):                       # NamedTuple
+        for k in tree._fields:
+            out.update(_flatten(getattr(tree, k),
+                                f"{prefix}/{k}" if prefix else str(k)))
+    elif isinstance(tree, (tuple, list)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}/{i}" if prefix else str(i)))
+    else:
+        out[prefix] = tree
+    return out
+
+
+def _unflatten_into(template, flat, prefix=""):
+    if isinstance(template, dict):
+        return {k: _unflatten_into(v, flat, f"{prefix}/{k}" if prefix else str(k))
+                for k, v in template.items()}
+    if hasattr(template, "_fields"):
+        return type(template)(*[
+            _unflatten_into(getattr(template, k), flat,
+                            f"{prefix}/{k}" if prefix else str(k))
+            for k in template._fields])
+    if isinstance(template, (tuple, list)):
+        return type(template)(
+            _unflatten_into(v, flat, f"{prefix}/{i}" if prefix else str(i))
+            for i, v in enumerate(template))
+    return flat[prefix]
+
+
+def _leaf_file(path: str) -> str:
+    return path.replace("/", "__") + ".npy"
+
+
+def save(ckpt_dir: str, step: int, tree: Any, *, blocking: bool = True
+         ) -> Optional[threading.Thread]:
+    """Write a checkpoint; async (returns the writer thread) if not blocking."""
+    flat = _flatten(tree)
+    # snapshot to host memory synchronously (cheap; device→host copy),
+    # so the async writer never races live training buffers
+    host = {k: np.asarray(v) for k, v in flat.items()}
+
+    def write():
+        tmp = os.path.join(ckpt_dir, f"step_{step:08d}.tmp")
+        final = os.path.join(ckpt_dir, f"step_{step:08d}")
+        os.makedirs(tmp, exist_ok=True)
+        manifest = {"step": step, "leaves": {}}
+        for k, v in host.items():
+            np.save(os.path.join(tmp, _leaf_file(k)), v)
+            manifest["leaves"][k] = {"shape": list(v.shape),
+                                     "dtype": str(v.dtype)}
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)                            # atomic commit
+
+    if blocking:
+        write()
+        return None
+    th = threading.Thread(target=write, daemon=False)
+    th.start()
+    return th
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_") and not d.endswith(".tmp")
+             and os.path.exists(os.path.join(ckpt_dir, d, "manifest.json"))]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, template: Any,
+            shardings: Any = None) -> Any:
+    """Load a checkpoint into ``template``'s structure.
+
+    ``shardings`` (optional pytree of NamedShardings matching the template)
+    re-places every leaf for the restoring mesh — elastic re-shard.
+    """
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    flat_t = _flatten(template)
+    missing = set(flat_t) - set(manifest["leaves"])
+    if missing:
+        raise ValueError(f"checkpoint at step {step} missing leaves: "
+                         f"{sorted(missing)[:5]} ...")
+    flat = {}
+    flat_sh = _flatten(shardings) if shardings is not None else None
+    for k, t in flat_t.items():
+        arr = np.load(os.path.join(d, _leaf_file(k)))
+        want = tuple(getattr(t, "shape", arr.shape))
+        if tuple(arr.shape) != want:
+            raise ValueError(f"shape mismatch for {k}: {arr.shape} vs {want}")
+        if flat_sh is not None:
+            flat[k] = jax.device_put(arr, flat_sh[k])
+        else:
+            flat[k] = jax.device_put(arr.astype(
+                getattr(t, "dtype", arr.dtype)))
+    return _unflatten_into(template, flat)
+
+
+def prune(ckpt_dir: str, keep: int = 3):
+    """Delete all but the newest ``keep`` committed checkpoints."""
+    if not os.path.isdir(ckpt_dir):
+        return
+    steps = sorted(s for s in (latest_candidates(ckpt_dir)))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"),
+                      ignore_errors=True)
+
+
+def latest_candidates(ckpt_dir: str):
+    return [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+            if d.startswith("step_") and not d.endswith(".tmp")]

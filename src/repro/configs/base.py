@@ -1,0 +1,164 @@
+"""Architecture + shape configuration system.
+
+Every assigned architecture is a ``ModelConfig`` (exact published dims) plus a
+``smoke()`` reduction of the same family for CPU tests.  ``input_specs``
+builds ShapeDtypeStruct stand-ins for every model input of a (arch × shape)
+cell — the multi-pod dry-run lowers against these, never allocating.
+
+Shapes (assignment):
+    train_4k     seq 4096,    global_batch 256   → train_step
+    prefill_32k  seq 32768,   global_batch 32    → prefill (serve)
+    decode_32k   seq 32768,   global_batch 128   → serve_step (1 new token,
+                                                   KV cache holding seq_len)
+    long_500k    seq 524288,  global_batch 1     → serve_step, sub-quadratic
+                                                   archs only (DESIGN.md §5)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                     # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    d_ff: int
+    vocab: int
+    n_heads: int = 0                # 0 for attention-free archs
+    n_kv_heads: int = 0
+    head_dim: int = 0
+    qkv_bias: bool = False
+    tied_embeddings: bool = False
+    norm: str = "rmsnorm"           # rmsnorm | layernorm
+    act: str = "silu"
+    glu: bool = True                # gated FFN (SwiGLU/GeGLU)
+    pos: str = "rope"               # rope | sinusoidal | none
+    rope_theta: float = 1e4
+    rope_theta_global: float = 0.0  # gemma3 dual-theta (0 → same as local)
+    # --- sliding/global interleave (gemma3) ----------------------------------
+    sliding_window: int = 0         # 0 → all layers full attention
+    local_per_global: int = 0       # e.g. 5 → pattern [5×local, 1×global]
+    # --- MoE ------------------------------------------------------------------
+    n_experts: int = 0
+    experts_per_tok: int = 0
+    capacity_factor: float = 1.25
+    moe_dispatch: str = "global"    # global | rowwise (§Perf iteration 2)
+    # --- SSM / RWKV -------------------------------------------------------------
+    ssm_state: int = 0              # mamba2 d_state
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    rwkv_head_dim: int = 64
+    # --- hybrid (zamba2) ---------------------------------------------------------
+    shared_attn_every: int = 0      # mamba layers per shared-attn invocation
+    # --- VLM / audio frontends (stubs) --------------------------------------------
+    cross_every: int = 0            # 1 cross-attn layer per this many layers
+    n_img_tokens: int = 0
+    embed_inputs: bool = True       # False → inputs are precomputed embeddings
+    # --- numerics / training ---------------------------------------------------
+    dtype: str = "bfloat16"         # activation/compute dtype
+    param_dtype: str = "float32"
+    logits_chunk: int = 2048        # CE loss sequence-chunk (never full logits)
+    q_chunk: int = 1024             # attention query chunk
+    remat: bool = True
+    # attention implementation on the XLA path:
+    #   "naive" — paper-faithful-substrate baseline (materialized probs)
+    #   "flash" — memory-linear custom-VJP flash (models/flash_xla.py);
+    #             on TPU, kernels/flash_attention.py (Pallas) — §Perf iter 1
+    attn_impl: str = "naive"
+    # re-shard the attention batch over ("data","model") at layer boundaries
+    # so archs whose head count does not divide the model axis (qwen2: 14
+    # heads on 16-way TP) still shard attention compute — §Perf iter 1.4
+    attn_batch_tp: bool = False
+    # -------------------------------------------------------------------------
+
+    def __post_init__(self):
+        if self.n_heads and not self.head_dim:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+
+    @property
+    def layer_pattern(self) -> Tuple[int, int]:
+        """(unit_len, n_units[, tail]) decomposition used by the scanned stack."""
+        if self.family == "vlm" and self.cross_every:
+            unit = self.cross_every
+            assert self.n_layers % unit == 0
+            return unit, self.n_layers // unit
+        if self.local_per_global:
+            unit = self.local_per_global + 1
+            assert self.n_layers % unit == 0 or self.n_layers % unit != 0
+            return unit, self.n_layers // unit
+        if self.family == "hybrid" and self.shared_attn_every:
+            unit = self.shared_attn_every
+            return unit, self.n_layers // unit
+        return 1, self.n_layers
+
+    def n_params(self) -> int:
+        """Analytic parameter count (embedding + layers + head)."""
+        d, ff, V = self.d_model, self.d_ff, self.vocab
+        n = 0
+        if self.embed_inputs:
+            n += V * d
+        if not self.tied_embeddings:
+            n += V * d
+        per_layer = 0
+        if self.family in ("dense", "moe", "vlm", "audio", "hybrid"):
+            H, Hk, Dh = self.n_heads, self.n_kv_heads, self.head_dim
+            attn = d * H * Dh + 2 * d * Hk * Dh + H * Dh * d
+            if self.family == "moe":
+                ffp = self.n_experts * (d * ff * (3 if self.glu else 2)) + d * self.n_experts
+            else:
+                ffp = d * ff * (3 if self.glu else 2)
+            per_layer = attn + ffp + 2 * d
+        if self.family == "ssm":                      # rwkv6
+            per_layer = 6 * d * d + d * ff * 2 + d * d  # tmix + cmix approx
+        if self.family == "hybrid":                   # zamba2: mamba layers
+            d_in = self.ssm_expand * d
+            per_layer = d * (2 * d_in + 2 * self.ssm_state +
+                             d_in // self.ssm_head_dim) + d_in * d
+            # one shared attention+mlp block
+            H, Dh = self.n_heads, self.head_dim
+            n += 2 * d * H * Dh + 2 * d * H * Dh + d * ff * (3 if self.glu else 2)
+        n += per_layer * self.n_layers
+        return n
+
+    def n_active_params(self) -> int:
+        """MoE: params touched per token (MODEL_FLOPS uses this)."""
+        if self.family != "moe":
+            return self.n_params()
+        d, ff = self.d_model, self.d_ff
+        dense = self.n_params() - self.n_layers * self.n_experts * (
+            d * ff * (3 if self.glu else 2))
+        active_ff = self.n_layers * self.experts_per_tok * (
+            d * ff * (3 if self.glu else 2))
+        return dense + active_ff
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                        # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+# Archs whose attention is sub-quadratic at decode (long_500k applicability —
+# DESIGN.md §5): attention-free, hybrid-with-O(1)-state, or sliding-window
+# dominated.  Pure full-attention archs skip the cell.
+LONG_CONTEXT_ARCHS = ("rwkv6-3b", "zamba2-7b", "gemma3-27b", "gemma3-4b")
+
+
+def cells_for(arch_name: str):
+    """The (shape) list assigned to an architecture."""
+    shapes = ["train_4k", "prefill_32k", "decode_32k"]
+    if arch_name in LONG_CONTEXT_ARCHS:
+        shapes.append("long_500k")
+    return shapes

@@ -1,0 +1,256 @@
+"""Core CMA-ES in JAX — GEMM-form linear algebra per the paper (§3.1).
+
+Design notes
+------------
+* The update is split into ``compute_moments`` (needs the sampled points) and
+  ``update_from_moments`` (needs only O(n²) reductions).  This is what lets the
+  distributed strategies (core/strategies.py) shard the λ evaluations *and* the
+  rank-μ GEMM across a descent's device group: each device reduces its local
+  partial Gram matrix ``Σ_local w_i yᵢyᵢᵀ`` and partial ``y_w``, a psum merges
+  them, and every device replays the cheap state update identically (SPMD).
+* The covariance adaptation uses the paper's eq. (3) rewrite:
+      C ← (1 − c₁ − c_μ)·C + c_μ·(Yᵀ·diag(w)·Y) + c₁·p_c p_cᵀ
+  i.e. one rank-μ GEMM instead of λ rank-one updates (Level-3 BLAS → MXU).
+* The sampling step uses the paper's batched eq. (1):  X = M + σ·(B·diag(D))·Z,
+  one (n×n)·(n×λ) GEMM for the whole population.
+* All shapes are static; a descent of population λ inside a padded buffer of
+  width λ_max carries zero weights / +inf fitnesses for the padding slots, so a
+  stack of descents with different population sizes vmaps into one program.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.params import CMAConfig, CMAParams
+from repro.core import stopping
+from repro.kernels import ops as kops
+
+
+class CMAState(NamedTuple):
+    m: jnp.ndarray          # (n,) distribution mean
+    sigma: jnp.ndarray      # () step size
+    C: jnp.ndarray          # (n, n) covariance
+    B: jnp.ndarray          # (n, n) eigenvectors of C (lazy)
+    D: jnp.ndarray          # (n,) sqrt of eigenvalues of C (lazy)
+    p_sigma: jnp.ndarray    # (n,) evolution path of sigma
+    p_c: jnp.ndarray        # (n,) evolution path of C
+    gen: jnp.ndarray        # () int32 generation counter
+    last_eigen_gen: jnp.ndarray  # () int32
+    best_f: jnp.ndarray     # () best fitness seen in this descent
+    best_x: jnp.ndarray     # (n,)
+    fevals: jnp.ndarray     # () int64-ish counter (int32 is enough here)
+    f_hist: jnp.ndarray     # (hist_len,) per-generation best f ring buffer
+    hist_count: jnp.ndarray  # () int32 number of valid history entries
+    stop: jnp.ndarray       # () bool
+    stop_reason: jnp.ndarray  # () int32 bitmask (see core/stopping.py)
+    restarts: jnp.ndarray   # () int32 — how many times this slot restarted (IPOP / in-place)
+
+
+def init_state(cfg: CMAConfig, key: jax.Array, x0: jnp.ndarray,
+               sigma0: float | jnp.ndarray | None = None) -> CMAState:
+    n, dt = cfg.n, cfg.jdtype
+    sigma0 = jnp.asarray(cfg.sigma0 if sigma0 is None else sigma0, dt)
+    return CMAState(
+        m=jnp.asarray(x0, dt),
+        sigma=sigma0,
+        C=jnp.eye(n, dtype=dt),
+        B=jnp.eye(n, dtype=dt),
+        D=jnp.ones((n,), dt),
+        p_sigma=jnp.zeros((n,), dt),
+        p_c=jnp.zeros((n,), dt),
+        gen=jnp.asarray(0, jnp.int32),
+        last_eigen_gen=jnp.asarray(0, jnp.int32),
+        best_f=jnp.asarray(jnp.inf, dt),
+        best_x=jnp.asarray(x0, dt),
+        fevals=jnp.asarray(0, jnp.int32),
+        f_hist=jnp.full((cfg.hist_len,), jnp.inf, dt),
+        hist_count=jnp.asarray(0, jnp.int32),
+        stop=jnp.asarray(False),
+        stop_reason=jnp.asarray(0, jnp.int32),
+        restarts=jnp.asarray(0, jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Sampling (paper eq. 1, batched GEMM form)
+# ---------------------------------------------------------------------------
+
+def sample_population(state: CMAState, key: jax.Array, lam_slots: int,
+                      impl: str = "xla") -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sample ``lam_slots`` points.  Returns (Y, X): x_k = m + σ·y_k, y = B·(D∘z).
+
+    ``lam_slots`` is static — strategies call this with the per-device slot count.
+    """
+    z = jax.random.normal(key, (lam_slots, state.m.shape[0]), dtype=state.m.dtype)
+    y = kops.sample_transform(state.B, state.D, z, impl=impl)   # (lam, n)
+    x = state.m[None, :] + state.sigma * y
+    return y, x
+
+
+# ---------------------------------------------------------------------------
+# Moments (what the update actually needs from the population)
+# ---------------------------------------------------------------------------
+
+class Moments(NamedTuple):
+    y_w: jnp.ndarray        # (n,)  Σ w_rk(i) · yᵢ
+    gram: jnp.ndarray       # (n, n)  Σ w_rk(i) · yᵢ yᵢᵀ   (rank-μ GEMM)
+    f_sorted: jnp.ndarray   # (lam_max,) ascending, +inf padded
+    x_best: jnp.ndarray     # (n,) best point of this generation
+    n_evals: jnp.ndarray    # () int32 — valid (non-masked) evaluations
+
+
+def rank_weights(fitness: jnp.ndarray, params: CMAParams) -> jnp.ndarray:
+    """Per-point weights by fitness rank (ascending).  Masked points (+inf) get 0.
+
+    Works for any subset of a descent's population: ``fitness`` may be the full
+    λ vector (dense path) or a gathered one (distributed path).
+    """
+    order = jnp.argsort(fitness)                      # indices of sorted points
+    ranks = jnp.argsort(order)                        # rank of each point
+    w = params.weights[jnp.clip(ranks, 0, params.weights.shape[0] - 1)]
+    return jnp.where(jnp.isfinite(fitness), w, 0.0)
+
+
+def compute_moments(y: jnp.ndarray, fitness: jnp.ndarray, x: jnp.ndarray,
+                    params: CMAParams, lam_max: int,
+                    impl: str = "xla") -> Moments:
+    """Dense (single-group) path: full population on one device."""
+    w = rank_weights(fitness, params)                 # (lam,)
+    y_w = w @ y                                       # (n,)
+    gram = kops.rank_mu_gram(y, w, impl=impl)         # (n, n) == yᵀ diag(w) y
+    f_sorted_full = jnp.sort(fitness)
+    lam = fitness.shape[0]
+    if lam >= lam_max:
+        f_sorted = f_sorted_full[:lam_max]
+    else:
+        f_sorted = jnp.concatenate(
+            [f_sorted_full, jnp.full((lam_max - lam,), jnp.inf, fitness.dtype)])
+    x_best = x[jnp.argmin(fitness)]
+    n_evals = jnp.sum(jnp.isfinite(fitness)).astype(jnp.int32)
+    return Moments(y_w=y_w, gram=gram, f_sorted=f_sorted, x_best=x_best,
+                   n_evals=n_evals)
+
+
+# ---------------------------------------------------------------------------
+# State update (replicated O(n²) part)
+# ---------------------------------------------------------------------------
+
+def update_from_moments(cfg: CMAConfig, params: CMAParams, state: CMAState,
+                        mom: Moments, impl: str = "xla") -> CMAState:
+    """One CMA-ES generation given population moments.  Pure; no masking here."""
+    n = cfg.n
+    dt = state.m.dtype
+    lam_f = params.lam.astype(dt)
+
+    y_w, gram = mom.y_w, mom.gram
+    f_best_gen = mom.f_sorted[0]
+
+    # -- mean ---------------------------------------------------------------
+    m_new = state.m + state.sigma * y_w
+
+    # -- step-size path:  p_σ ← (1−c_σ)p_σ + sqrt(c_σ(2−c_σ)μ_eff)·C^{-1/2}·y_w
+    c_sig, d_sig = params.c_sigma, params.d_sigma
+    inv_sqrt_C_yw = state.B @ ((state.B.T @ y_w) / jnp.maximum(state.D, 1e-300))
+    p_sigma = (1.0 - c_sig) * state.p_sigma + jnp.sqrt(
+        c_sig * (2.0 - c_sig) * params.mu_eff) * inv_sqrt_C_yw
+    ps_norm = jnp.linalg.norm(p_sigma)
+
+    gen1 = (state.gen + 1).astype(dt)
+    h_sig_denom = jnp.sqrt(1.0 - (1.0 - c_sig) ** (2.0 * gen1))
+    h_sigma = (ps_norm / h_sig_denom / params.chi_n
+               < 1.4 + 2.0 / (n + 1.0)).astype(dt)
+
+    # -- covariance path ------------------------------------------------------
+    c_c = params.c_c
+    p_c = (1.0 - c_c) * state.p_c + h_sigma * jnp.sqrt(
+        c_c * (2.0 - c_c) * params.mu_eff) * y_w
+
+    # -- covariance adaptation (paper eq. 3 + h_σ correction) -----------------
+    c_1, c_mu = params.c_1, params.c_mu
+    decay = 1.0 - c_1 - c_mu + (1.0 - h_sigma) * c_1 * c_c * (2.0 - c_c)
+    C_new = kops.covariance_combine(state.C, gram, p_c, decay, c_mu, c_1, impl=impl)
+    C_new = 0.5 * (C_new + C_new.T)
+
+    # -- step size -------------------------------------------------------------
+    sigma_new = state.sigma * jnp.exp((c_sig / d_sig) * (ps_norm / params.chi_n - 1.0))
+    # flat-fitness guard (c-cmaes): bump sigma if best equals the ~λ/4-th value
+    kth = jnp.clip((params.lam // 4 + 1).astype(jnp.int32), 0,
+                   mom.f_sorted.shape[0] - 1)
+    flat = mom.f_sorted[0] == mom.f_sorted[kth]
+    sigma_new = jnp.where(flat, sigma_new * jnp.exp(0.2 + c_sig / d_sig), sigma_new)
+
+    # -- lazy eigendecomposition ------------------------------------------------
+    do_eigen = (state.gen + 1 - state.last_eigen_gen) >= cfg.eigen_interval
+
+    def _eig(C):
+        evals, evecs = jnp.linalg.eigh(C)
+        d = jnp.sqrt(jnp.maximum(evals, 1e-300))
+        return evecs, d
+
+    B_new, D_new = jax.lax.cond(
+        do_eigen, lambda C: _eig(C), lambda _: (state.B, state.D), C_new)
+    last_eigen = jnp.where(do_eigen, state.gen + 1, state.last_eigen_gen)
+
+    # -- bookkeeping -------------------------------------------------------------
+    better = f_best_gen < state.best_f
+    best_f = jnp.where(better, f_best_gen, state.best_f)
+    best_x = jnp.where(better, mom.x_best, state.best_x)
+    hist_idx = jnp.mod(state.hist_count, cfg.hist_len)
+    f_hist = state.f_hist.at[hist_idx].set(f_best_gen)
+
+    new = CMAState(
+        m=m_new, sigma=sigma_new, C=C_new, B=B_new, D=D_new,
+        p_sigma=p_sigma, p_c=p_c,
+        gen=state.gen + 1, last_eigen_gen=last_eigen,
+        best_f=best_f, best_x=best_x,
+        fevals=state.fevals + mom.n_evals,
+        f_hist=f_hist, hist_count=state.hist_count + 1,
+        stop=state.stop, stop_reason=state.stop_reason,
+        restarts=state.restarts,
+    )
+    reason = stopping.check_stop(cfg, params, new, mom.f_sorted)
+    return new._replace(stop=reason > 0, stop_reason=reason)
+
+
+def masked_update(cfg: CMAConfig, params: CMAParams, state: CMAState,
+                  mom: Moments, impl: str = "xla") -> CMAState:
+    """Apply the generation update unless the descent already stopped."""
+    new = update_from_moments(cfg, params, state, mom, impl=impl)
+    return jax.tree_util.tree_map(
+        lambda old, nw: jnp.where(state.stop, old, nw), state, new)
+
+
+# ---------------------------------------------------------------------------
+# Dense single-descent step + run loop (paper Alg. 1)
+# ---------------------------------------------------------------------------
+
+def step(cfg: CMAConfig, params: CMAParams, state: CMAState,
+         fitness_fn: Callable[[jnp.ndarray], jnp.ndarray], key: jax.Array,
+         impl: str = "xla") -> CMAState:
+    """One full CMA-ES generation on a single device (Alg. 1 lines 4–8)."""
+    lam = int(params.lam)  # static in the dense path
+    y, x = sample_population(state, key, lam, impl=impl)
+    f = fitness_fn(x)
+    mom = compute_moments(y, f, x, params, cfg.lam_max, impl=impl)
+    return masked_update(cfg, params, state, mom, impl=impl)
+
+
+def run(cfg: CMAConfig, params: CMAParams, fitness_fn, key: jax.Array,
+        x0: jnp.ndarray, sigma0=None, max_gens: int | None = None,
+        impl: str = "xla") -> CMAState:
+    """Run a descent until a stopping criterion fires (jitted scan)."""
+    max_gens = int(max_gens if max_gens is not None else cfg.max_iter)
+    key, init_key = jax.random.split(key)
+    state = init_state(cfg, init_key, x0, sigma0)
+
+    def body(carry, k):
+        st = carry
+        st = step(cfg, params, st, fitness_fn, k, impl=impl)
+        return st, st.best_f
+
+    keys = jax.random.split(key, max_gens)
+    final, _ = jax.lax.scan(body, state, keys)
+    return final

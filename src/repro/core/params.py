@@ -1,0 +1,124 @@
+"""CMA-ES strategy parameters (Hansen's defaults, as in the c-cmaes reference code).
+
+All per-descent fields are arrays so a batch of descents with *different* population
+sizes can be stacked and vmapped: a descent with population ``lam`` inside a padded
+buffer of width ``lam_max`` simply carries zero weights for the padding slots.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def _raw_weights(lam: int) -> np.ndarray:
+    """Positive recombination weights w_i ∝ ln((λ+1)/2) − ln(i), i = 1..μ, Σw = 1."""
+    mu = lam // 2
+    w = np.log((lam + 1.0) / 2.0) - np.log(np.arange(1, mu + 1))
+    return w / np.sum(w)
+
+
+@dataclasses.dataclass(frozen=True)
+class CMAConfig:
+    """Static (Python-level) configuration of a CMA-ES run."""
+
+    n: int                      # problem dimension
+    lam: int                    # population size (lambda)
+    sigma0: float = 0.25        # initial step size (caller scales by search width)
+    lam_max: Optional[int] = None   # padded population width for stacked descents
+    hist_len: int = 64          # ring-buffer length for TolFun / stagnation
+    eigen_interval: Optional[int] = None  # generations between eigendecompositions
+    tolfun: float = 1e-12
+    tolfunhist: float = 1e-13
+    tolx_factor: float = 1e-11  # TolX = tolx_factor * sigma0
+    tol_condition: float = 1e14
+    tolupsigma: float = 1e20
+    max_iter: Optional[int] = None
+    dtype: str = "float64"
+
+    def __post_init__(self):
+        if self.lam_max is None:
+            object.__setattr__(self, "lam_max", self.lam)
+        if self.eigen_interval is None:
+            # c-cmaes: update the eigensystem when gen - last > 1/(c1+cmu)/n/10.
+            w = _raw_weights(self.lam)
+            mu_eff = float(1.0 / np.sum(w ** 2))
+            c_1 = 2.0 / ((self.n + 1.3) ** 2 + mu_eff)
+            c_mu = min(
+                1.0 - c_1,
+                2.0 * (mu_eff - 2.0 + 1.0 / mu_eff) / ((self.n + 2.0) ** 2 + mu_eff),
+            )
+            interval = max(1, int(1.0 / ((c_1 + c_mu) * self.n * 10.0)))
+            object.__setattr__(self, "eigen_interval", interval)
+        if self.max_iter is None:
+            # generous default; the evaluation budget usually stops us first
+            object.__setattr__(self, "max_iter", 100 + int(3000 * self.n / self.lam))
+
+    @property
+    def jdtype(self) -> jnp.dtype:
+        return jnp.dtype(self.dtype)
+
+
+class CMAParams(NamedTuple):
+    """Per-descent strategy parameters (a pytree of arrays — stackable / vmappable).
+
+    ``weights`` has width ``lam_max``; entries beyond μ (and beyond ``lam``) are zero,
+    so the same update code handles heterogeneous population sizes.
+    """
+
+    lam: jnp.ndarray        # () int32 — actual population size of this descent
+    weights: jnp.ndarray    # (lam_max,) — rank-indexed recombination weights, Σ = 1
+    mu: jnp.ndarray         # () int32
+    mu_eff: jnp.ndarray     # ()
+    c_sigma: jnp.ndarray    # ()
+    d_sigma: jnp.ndarray    # ()
+    c_c: jnp.ndarray        # ()
+    c_1: jnp.ndarray        # ()
+    c_mu: jnp.ndarray       # ()
+    chi_n: jnp.ndarray      # () E||N(0,I)||
+    sigma0: jnp.ndarray     # ()
+    hist_window: jnp.ndarray  # () int32 — effective TolFun window = min(hist_len, 10+30n/λ)
+    max_iter: jnp.ndarray   # () int32
+
+
+def make_params(cfg: CMAConfig, lam: Optional[int] = None) -> CMAParams:
+    """Build CMAParams for a descent of population ``lam`` padded to ``cfg.lam_max``."""
+    lam = int(lam if lam is not None else cfg.lam)
+    if lam > cfg.lam_max:
+        raise ValueError(f"lam={lam} exceeds lam_max={cfg.lam_max}")
+    n = cfg.n
+    dt = cfg.jdtype
+    mu = lam // 2
+    w = np.zeros(cfg.lam_max, dtype=np.float64)
+    w[:mu] = _raw_weights(lam)
+    mu_eff = 1.0 / np.sum(w ** 2)
+    c_sigma = (mu_eff + 2.0) / (n + mu_eff + 5.0)
+    d_sigma = 1.0 + 2.0 * max(0.0, np.sqrt((mu_eff - 1.0) / (n + 1.0)) - 1.0) + c_sigma
+    c_c = (4.0 + mu_eff / n) / (n + 4.0 + 2.0 * mu_eff / n)
+    c_1 = 2.0 / ((n + 1.3) ** 2 + mu_eff)
+    c_mu = min(1.0 - c_1, 2.0 * (mu_eff - 2.0 + 1.0 / mu_eff) / ((n + 2.0) ** 2 + mu_eff))
+    chi_n = np.sqrt(n) * (1.0 - 1.0 / (4.0 * n) + 1.0 / (21.0 * n ** 2))
+    hist_window = min(cfg.hist_len, 10 + int(np.ceil(30.0 * n / lam)))
+    return CMAParams(
+        lam=jnp.asarray(lam, jnp.int32),
+        weights=jnp.asarray(w, dt),
+        mu=jnp.asarray(mu, jnp.int32),
+        mu_eff=jnp.asarray(mu_eff, dt),
+        c_sigma=jnp.asarray(c_sigma, dt),
+        d_sigma=jnp.asarray(d_sigma, dt),
+        c_c=jnp.asarray(c_c, dt),
+        c_1=jnp.asarray(c_1, dt),
+        c_mu=jnp.asarray(c_mu, dt),
+        chi_n=jnp.asarray(chi_n, dt),
+        sigma0=jnp.asarray(cfg.sigma0, dt),
+        hist_window=jnp.asarray(hist_window, jnp.int32),
+        max_iter=jnp.asarray(cfg.max_iter, jnp.int32),
+    )
+
+
+def stack_params(params: list[CMAParams]) -> CMAParams:
+    """Stack per-descent params along a leading descent axis (for vmap)."""
+    import jax
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *params)

@@ -1,0 +1,91 @@
+"""CMA-ES stopping criteria (Auger & Hansen 2005; c-cmaes reference defaults).
+
+Each criterion sets one bit in the returned int32 reason mask so logs can
+distinguish *why* a descent stopped (the IPOP ladder restarts on any reason
+except budget exhaustion, which the strategy level handles).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+TOLFUN = 1
+TOLFUNHIST = 2
+TOLX = 4
+CONDITIONCOV = 8
+NOEFFECTAXIS = 16
+NOEFFECTCOORD = 32
+TOLUPSIGMA = 64
+MAXITER = 128
+
+REASON_NAMES = {
+    TOLFUN: "TolFun", TOLFUNHIST: "TolFunHist", TOLX: "TolX",
+    CONDITIONCOV: "ConditionCov", NOEFFECTAXIS: "NoEffectAxis",
+    NOEFFECTCOORD: "NoEffectCoord", TOLUPSIGMA: "TolUpSigma",
+    MAXITER: "MaxIter",
+}
+
+
+def reason_to_str(mask: int) -> str:
+    names = [name for bit, name in REASON_NAMES.items() if mask & bit]
+    return "|".join(names) if names else "none"
+
+
+def check_stop(cfg, params, state, f_sorted: jnp.ndarray) -> jnp.ndarray:
+    """Evaluate all criteria on a *post-update* state; returns int32 bitmask."""
+    n = cfg.n
+    dt = state.m.dtype
+    reason = jnp.asarray(0, jnp.int32)
+
+    # -- TolFun: best-f range over the history window AND this generation's
+    #    fitness spread both below tolfun (c-cmaes combines them).
+    hist_len = cfg.hist_len
+    idx = jnp.arange(hist_len)
+    window = jnp.minimum(params.hist_window, jnp.minimum(state.hist_count, hist_len))
+    # positions of the last `window` entries in the ring buffer
+    newest = jnp.mod(state.hist_count - 1, hist_len)
+    age = jnp.mod(newest - idx, hist_len)          # 0 = newest
+    in_window = age < window
+    h = jnp.where(in_window, state.f_hist, jnp.nan)
+    hist_range = jnp.nanmax(h) - jnp.nanmin(h)
+    lam_idx = jnp.clip(params.lam - 1, 0, f_sorted.shape[0] - 1)
+    gen_range = f_sorted[lam_idx] - f_sorted[0]
+    enough_hist = state.hist_count >= jnp.minimum(params.hist_window, hist_len)
+    tolfun_hit = enough_hist & (jnp.maximum(hist_range, gen_range) < cfg.tolfun)
+    reason = reason | jnp.where(tolfun_hit, TOLFUN, 0)
+
+    # -- TolFunHist: history range alone below a tighter threshold.
+    tolfunhist_hit = enough_hist & (hist_range < cfg.tolfunhist)
+    reason = reason | jnp.where(tolfunhist_hit, TOLFUNHIST, 0)
+
+    # -- TolX: search has shrunk — σ·√C_ii and σ·p_c all tiny vs initial σ.
+    tolx = cfg.tolx_factor * params.sigma0
+    diagC = jnp.diagonal(state.C)
+    tolx_hit = (jnp.all(state.sigma * jnp.sqrt(jnp.maximum(diagC, 0.0)) < tolx)
+                & jnp.all(state.sigma * jnp.abs(state.p_c) < tolx))
+    reason = reason | jnp.where(tolx_hit, TOLX, 0)
+
+    # -- ConditionCov: covariance ill-conditioned.
+    dmax, dmin = jnp.max(state.D), jnp.maximum(jnp.min(state.D), 1e-300)
+    cond_hit = (dmax / dmin) ** 2 > cfg.tol_condition
+    reason = reason | jnp.where(cond_hit, CONDITIONCOV, 0)
+
+    # -- NoEffectAxis: 0.1σ along principal axis (gen % n) does not move m.
+    ax = jnp.mod(state.gen, n)
+    axis_step = 0.1 * state.sigma * state.D[ax] * state.B[:, ax]
+    noaxis_hit = jnp.all(state.m == state.m + axis_step)
+    reason = reason | jnp.where(noaxis_hit, NOEFFECTAXIS, 0)
+
+    # -- NoEffectCoord: 0.2σ√C_ii does not move any single coordinate.
+    coord_step = 0.2 * state.sigma * jnp.sqrt(jnp.maximum(diagC, 0.0))
+    nocoord_hit = jnp.any(state.m == state.m + coord_step)
+    reason = reason | jnp.where(nocoord_hit, NOEFFECTCOORD, 0)
+
+    # -- TolUpSigma: divergence — σ exploded relative to covariance scale.
+    upsig_hit = state.sigma / params.sigma0 > cfg.tolupsigma * dmax
+    reason = reason | jnp.where(upsig_hit, TOLUPSIGMA, 0)
+
+    # -- MaxIter.
+    maxiter_hit = state.gen >= params.max_iter
+    reason = reason | jnp.where(maxiter_hit, MAXITER, 0)
+
+    return reason.astype(jnp.int32)

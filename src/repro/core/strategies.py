@@ -1,0 +1,581 @@
+"""K-Replicated and K-Distributed (paper §3.2) as SPMD mesh schedules.
+
+Both strategies are written from the *per-device view* with named-axis
+collectives, so one implementation runs under
+
+  * ``shard_map`` on a real device mesh (production path; the multi-pod
+    dry-run lowers exactly this program), or
+  * nested ``vmap`` with the same axis names (simulation path — bit-identical
+    math on a single CPU device; unit tests assert cross-device consistency).
+
+Layouts (DESIGN.md §4)
+----------------------
+K-Distributed: one flat axis of P devices.  Descent k ∈ {0..K_max} owns the
+contiguous "heap" range [2ᵏ−1, 2ᵏ⁺¹−1) — Σ2ᵏ = 2^{K_max+1}−1 devices, matching
+the paper's 511-of-512-CMG layout.  Per-descent states are replicated; the
+per-descent rank-μ Gram partials are merged with ONE stacked psum (a single
+fused all-reduce instead of log₂K_max ragged group reductions — beyond-paper
+collective optimization, see EXPERIMENTS §Perf).
+
+K-Replicated: per phase, the device axis is re-viewed as (grp=G, mem=g) with
+g = 2ᵏ devices per descent; group reductions are psums over 'mem' only.
+Descent states are *sharded* over 'grp' (each group holds only its own state,
+as on Fugaku), so phase K=1 with P descents never replicates P covariance
+matrices.  Phases advance when every group's descent stopped (the paper's
+sibling-pair merge becomes a phase barrier — DESIGN.md §8.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Callable, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import cmaes, eval_dispatch
+from repro.core.params import CMAConfig, CMAParams, make_params, stack_params
+
+
+# ---------------------------------------------------------------------------
+# shared helpers
+# ---------------------------------------------------------------------------
+
+def heap_descent_of(idx: jnp.ndarray, n_active: int) -> jnp.ndarray:
+    """Descent index for device ``idx`` in the heap layout (K-Dist)."""
+    i = jnp.clip(idx, 0, n_active - 1)
+    return jnp.floor(jnp.log2(i.astype(jnp.float64) + 1.5)).astype(jnp.int32)
+
+
+def _select_state(stacked, idx):
+    return jax.tree_util.tree_map(lambda a: a[idx], stacked)
+
+
+def _where_state(mask_d, a, b):
+    """Per-descent select over stacked states: mask (D,), leaves (D, ...)."""
+    def sel(x, y):
+        m = mask_d.reshape((mask_d.shape[0],) + (1,) * (x.ndim - 1))
+        return jnp.where(m, x, y)
+    return jax.tree_util.tree_map(sel, a, b)
+
+
+def _apply_drop(key, f, drop_prob):
+    """Straggler/failure simulation: masked evaluations become +inf."""
+    if drop_prob <= 0.0:
+        return f
+    drop = jax.random.uniform(key, f.shape) < drop_prob
+    return jnp.where(drop, jnp.inf, f)
+
+
+# ---------------------------------------------------------------------------
+# K-Distributed
+# ---------------------------------------------------------------------------
+
+class KDistCarry(NamedTuple):
+    states: cmaes.CMAState     # stacked (D, ...), replicated on all devices
+    restarts: jnp.ndarray      # (D,)
+    fevals: jnp.ndarray        # (D,) cumulative across restarts
+    best_f: jnp.ndarray        # () global best across descents & restarts
+    best_x: jnp.ndarray        # (n,)
+
+
+class KDistTrace(NamedTuple):
+    best_f: jnp.ndarray        # () global best-so-far
+    gen_best: jnp.ndarray      # (D,) this generation's best per descent
+    descent_best: jnp.ndarray  # (D,) best within current descent incarnation
+    fevals: jnp.ndarray        # () total evaluations so far
+    stopped: jnp.ndarray       # (D,) which descents restarted this gen
+    restarts: jnp.ndarray      # (D,)
+
+
+@dataclasses.dataclass
+class KDistributed:
+    """All population sizes K = 2⁰..2^kmax_exp run concurrently (paper §3.2.3)."""
+
+    n: int
+    n_devices: int
+    lam_start: int = 12
+    lam_slots: int = 12           # evaluations per device per generation ("threads")
+    kmax_exp: Optional[int] = None
+    domain: Tuple[float, float] = (-5.0, 5.0)
+    sigma0_frac: float = 0.25
+    impl: str = "xla"
+    drop_prob: float = 0.0
+    restart_on_stop: bool = True  # paper §5 recommendation
+    dtype: str = "float64"
+    # communication schedule (§Perf hillclimb 3):
+    #  "central" — paper-faithful: gather all sampled points to every
+    #              device (emulating each descent's main process) and
+    #              compute moments from the gathered population;
+    #  "stacked" — local partial Grams + ONE fused stacked psum (default);
+    comm: str = "stacked"
+    gram_dtype: str = ""          # e.g. "float32": psum the Gram at reduced
+                                  # precision (halves collective bytes)
+
+    def __post_init__(self):
+        if self.kmax_exp is None:
+            # largest ladder fitting the machine: Σ_{k≤K}2ᵏ ≤ P
+            self.kmax_exp = max(0, int(math.floor(math.log2(self.n_devices + 1))) - 1)
+        self.n_descents = self.kmax_exp + 1
+        self.n_active = 2 ** (self.kmax_exp + 1) - 1
+        if self.n_active > self.n_devices:
+            raise ValueError(
+                f"kmax_exp={self.kmax_exp} needs {self.n_active} devices, "
+                f"have {self.n_devices}")
+        # NOTE: the descent with exponent k has population 2ᵏ·λ_start evaluated
+        # by 2ᵏ devices × lam_slots evals each ⇒ lam_slots must equal lam_start.
+        if self.lam_slots != self.lam_start:
+            raise ValueError("lam_slots must equal lam_start (one device per "
+                             "2ᵏ slice of the population, paper §4.1)")
+        width = self.domain[1] - self.domain[0]
+        self.lam_max = (2 ** self.kmax_exp) * self.lam_start
+        self.cfg = CMAConfig(n=self.n, lam=self.lam_max, lam_max=self.lam_max,
+                             sigma0=self.sigma0_frac * width, dtype=self.dtype)
+        self.sparams = stack_params([
+            make_params(self.cfg, lam=(2 ** k) * self.lam_start)
+            for k in range(self.n_descents)])
+
+    # -- carry ----------------------------------------------------------------
+    def init_carry(self, key: jax.Array) -> KDistCarry:
+        D, n, dt = self.n_descents, self.n, self.cfg.jdtype
+        lo, hi = self.domain
+        keys = jax.random.split(key, D)
+        x0 = jax.vmap(lambda k: jax.random.uniform(k, (n,), dt, lo, hi))(keys)
+        states = jax.vmap(lambda k, x: cmaes.init_state(self.cfg, k, x))(keys, x0)
+        return KDistCarry(
+            states=states,
+            restarts=jnp.zeros((D,), jnp.int32),
+            fevals=jnp.zeros((D,), jnp.int64),
+            best_f=jnp.asarray(jnp.inf, dt),
+            best_x=jnp.zeros((n,), dt),
+        )
+
+    # -- one generation, per-device view ---------------------------------------
+    def device_step(self, carry: KDistCarry, gen_key: jax.Array,
+                    fitness_fn: Callable, axes: Tuple[str, ...]) -> Tuple[KDistCarry, KDistTrace]:
+        D, n, dt = self.n_descents, self.n, self.cfg.jdtype
+        lam_slots, n_active = self.lam_slots, self.n_active
+        P_sz = eval_dispatch.axis_size(axes)
+
+        d = eval_dispatch.flat_index(axes)
+        active = d < n_active
+        kd = heap_descent_of(d, n_active)
+        my_state = _select_state(carry.states, kd)
+
+        key = jax.random.fold_in(gen_key, d)
+        key = jax.random.fold_in(key, carry.restarts[kd])
+        k_sample, k_drop = jax.random.split(key)
+
+        y, x = cmaes.sample_population(my_state, k_sample, lam_slots, impl=self.impl)
+        f = fitness_fn(x)
+        f = _apply_drop(k_drop, f, self.drop_prob)
+        f = jnp.where(active, f, jnp.inf)
+
+        # ---- exchange fitnesses (the paper's gather, §3.2.1) ------------------
+        f_all = eval_dispatch.all_gather_flat(f, axes)    # (P, lam_slots)
+        f_flat = f_all.reshape(P_sz * lam_slots)
+        rows = jnp.arange(P_sz)
+        kd_rows = jnp.where(rows < n_active, heap_descent_of(rows, n_active), D)
+        kd_flat = jnp.repeat(kd_rows, lam_slots)
+
+        f_mine = jnp.where(kd_flat == kd, f_flat, jnp.inf)
+        ranks = eval_dispatch.local_ranks(f, f_mine, d * lam_slots)
+        w = self.sparams.weights[kd][jnp.clip(ranks, 0, self.lam_max - 1)]
+        w = jnp.where(jnp.isfinite(f), w, 0.0)
+
+        # ---- population moments ------------------------------------------------
+        if self.comm == "central":
+            # paper-faithful (§3.2.1): the λ points travel to the descent's
+            # main process (here: gathered everywhere, SPMD-replicated main).
+            y_all = eval_dispatch.all_gather_flat(y, axes)   # (P, lam, n)
+            y_flat = y_all.reshape(P_sz * lam_slots, n)
+            w_flat_all = jnp.zeros((P_sz * lam_slots,), dt)
+            # per-descent weights from global ranks (same math as local path)
+            for_desc = kd_flat[:, None] == jnp.arange(D)[None, :]
+            ranks_flat = jnp.argsort(jnp.argsort(
+                jnp.where(for_desc.T, f_flat[None, :], jnp.inf), axis=1),
+                axis=1)                                       # (D, P·lam)
+            w_rows = jnp.take_along_axis(
+                self.sparams.weights,
+                jnp.clip(ranks_flat, 0, self.lam_max - 1), axis=1)
+            w_rows = jnp.where(for_desc.T & jnp.isfinite(f_flat)[None, :],
+                               w_rows, 0.0)                   # (D, P·lam)
+            gram_st = jnp.einsum("dp,pn,pm->dnm", w_rows, y_flat, y_flat)
+            yw_st = jnp.einsum("dp,pn->dn", w_rows, y_flat)
+            wsum_st = jnp.sum(w_rows, axis=1)
+            nval_st = jnp.sum(for_desc.T & jnp.isfinite(f_flat)[None, :],
+                              axis=1).astype(jnp.int64)
+        else:
+            # beyond-paper: local partial moments + ONE fused stacked psum
+            yw_part = w @ y
+            gram_part = cmaes.kops.rank_mu_gram(y, w, impl=self.impl)
+            gdt = jnp.dtype(self.gram_dtype) if self.gram_dtype else dt
+            gram_st = jnp.zeros((D, n, n), gdt).at[kd].add(
+                gram_part.astype(gdt))
+            yw_st = jnp.zeros((D, n), dt).at[kd].add(yw_part)
+            wsum_st = jnp.zeros((D,), dt).at[kd].add(jnp.sum(w))
+            nval_st = jnp.zeros((D,), jnp.int64).at[kd].add(
+                jnp.sum(jnp.isfinite(f)).astype(jnp.int64))
+            gram_st, yw_st, wsum_st, nval_st = jax.lax.psum(
+                (gram_st, yw_st, wsum_st, nval_st), axes)
+            gram_st = gram_st.astype(dt)
+
+        # straggler mitigation: renormalize surviving weights
+        scale = jnp.where(wsum_st > 1e-12, 1.0 / jnp.maximum(wsum_st, 1e-12), 0.0)
+        yw_st = yw_st * scale[:, None]
+        gram_st = gram_st * scale[:, None, None]
+
+        # ---- per-descent order statistics (replicated compute) ----------------
+        desc_ids = jnp.arange(D)
+        masked = jnp.where(kd_flat[None, :] == desc_ids[:, None],
+                           f_flat[None, :], jnp.inf)
+        f_sorted = jnp.sort(masked, axis=1)[:, :self.lam_max]     # (D, lam_max)
+
+        i_loc = jnp.argmin(f)
+        xb_loc = x[i_loc]
+        xb_all = eval_dispatch.all_gather_flat(xb_loc, axes)     # (P, n)
+        fb_rows = jnp.min(f_all, axis=1)                          # (P,)
+        row_masked = jnp.where(kd_rows[None, :] == desc_ids[:, None],
+                               fb_rows[None, :], jnp.inf)
+        r_star = jnp.argmin(row_masked, axis=1)
+        x_best = xb_all[r_star]                                   # (D, n)
+
+        mom = cmaes.Moments(y_w=yw_st, gram=gram_st, f_sorted=f_sorted,
+                            x_best=x_best, n_evals=nval_st.astype(jnp.int32))
+
+        upd = jax.vmap(lambda p, s, m: cmaes.masked_update(
+            self.cfg, p, s, m, impl=self.impl))(self.sparams, carry.states, mom)
+
+        # ---- global best (before any restart wipes descent state) -------------
+        gen_best = f_sorted[:, 0]
+        gb = jnp.argmin(gen_best)
+        better = gen_best[gb] < carry.best_f
+        best_f = jnp.where(better, gen_best[gb], carry.best_f)
+        best_x = jnp.where(better, x_best[gb], carry.best_x)
+
+        # ---- in-place restart of stopped descents (same K, fresh mean/σ) ------
+        stopped = upd.stop
+        if self.restart_on_stop:
+            lo, hi = self.domain
+            rkeys = jax.vmap(
+                lambda i: jax.random.fold_in(
+                    jax.random.fold_in(gen_key, 1_000_003 + i), carry.restarts[i])
+            )(desc_ids)
+            x0s = jax.vmap(lambda k: jax.random.uniform(k, (n,), dt, lo, hi))(rkeys)
+            fresh = jax.vmap(lambda k, x0: cmaes.init_state(self.cfg, k, x0))(rkeys, x0s)
+            new_states = _where_state(stopped, fresh, upd)
+            restarts = carry.restarts + stopped.astype(jnp.int32)
+        else:
+            new_states = upd
+            restarts = carry.restarts
+
+        fevals = carry.fevals + nval_st
+        new_carry = KDistCarry(states=new_states, restarts=restarts,
+                               fevals=fevals, best_f=best_f, best_x=best_x)
+        trace = KDistTrace(best_f=best_f, gen_best=gen_best,
+                           descent_best=upd.best_f, fevals=jnp.sum(fevals),
+                           stopped=stopped, restarts=restarts)
+        return new_carry, trace
+
+    # -- chunked scan over generations ------------------------------------------
+    def chunk_fn(self, fitness_fn, axes, chunk: int):
+        def run_chunk(carry, keys):
+            return jax.lax.scan(
+                lambda c, k: self.device_step(c, k, fitness_fn, axes), carry, keys)
+        return run_chunk
+
+    # -- drivers -------------------------------------------------------------
+    def run_sim(self, key: jax.Array, fitness_fn, total_gens: int,
+                chunk: int = 16):
+        """Single-device simulation via vmap with the same axis names."""
+        axes = ("ev",)
+        carry = self.init_carry(jax.random.fold_in(key, 0))
+        fn = jax.jit(jax.vmap(self.chunk_fn(fitness_fn, axes, chunk),
+                              in_axes=(None, None), out_axes=0,
+                              axis_name="ev", axis_size=self.n_devices))
+        traces = []
+        for c0 in range(0, total_gens, chunk):
+            key, kc = jax.random.split(key)
+            keys = jax.random.split(kc, min(chunk, total_gens - c0))
+            carry_b, tr = fn(carry, keys)
+            # replicated outputs: take device 0 (consistency asserted in tests)
+            carry = jax.tree_util.tree_map(lambda a: a[0], carry_b)
+            traces.append(jax.tree_util.tree_map(lambda a: np.asarray(a[0]), tr))
+        return carry, _concat_traces(traces)
+
+    def run_on_mesh(self, mesh, key: jax.Array, fitness_fn, total_gens: int,
+                    chunk: int = 16, axes: Optional[Tuple[str, ...]] = None):
+        """shard_map on a real mesh (all axes collapsed into the eval axis)."""
+        axes = tuple(axes if axes is not None else mesh.axis_names)
+        fn = jax.shard_map(self.chunk_fn(fitness_fn, axes, chunk), mesh=mesh,
+                           in_specs=(P(), P()), out_specs=(P(), P()),
+                           check_vma=False)
+        fn = jax.jit(fn)
+        carry = self.init_carry(jax.random.fold_in(key, 0))
+        traces = []
+        for c0 in range(0, total_gens, chunk):
+            key, kc = jax.random.split(key)
+            keys = jax.random.split(kc, min(chunk, total_gens - c0))
+            carry, tr = fn(carry, keys)
+            traces.append(jax.tree_util.tree_map(np.asarray, tr))
+        return carry, _concat_traces(traces)
+
+    def lower_step(self, mesh, fitness_fn, chunk: int = 1,
+                   axes: Optional[Tuple[str, ...]] = None):
+        """Lower (no execute) one chunk for the dry-run / roofline harness."""
+        axes = tuple(axes if axes is not None else mesh.axis_names)
+        fn = jax.shard_map(self.chunk_fn(fitness_fn, axes, chunk), mesh=mesh,
+                           in_specs=(P(), P()), out_specs=(P(), P()),
+                           check_vma=False)
+        carry = jax.eval_shape(lambda k: self.init_carry(k),
+                               jax.ShapeDtypeStruct((2,), jnp.uint32))
+        keys = jax.ShapeDtypeStruct((chunk, 2), jnp.uint32)
+        return jax.jit(fn).lower(carry, keys)
+
+
+# ---------------------------------------------------------------------------
+# K-Replicated
+# ---------------------------------------------------------------------------
+
+class KRepCarry(NamedTuple):
+    state: cmaes.CMAState      # this group's descent (sharded over 'grp')
+    best_f: jnp.ndarray        # () global best (replicated)
+    best_x: jnp.ndarray        # (n,)
+    fevals: jnp.ndarray        # () total evaluations (replicated)
+
+
+class KRepTrace(NamedTuple):
+    best_f: jnp.ndarray        # ()
+    group_best: jnp.ndarray    # (G,) per-group best-so-far
+    n_stopped: jnp.ndarray     # ()
+    fevals: jnp.ndarray        # ()
+
+
+@dataclasses.dataclass
+class KReplicated:
+    """Successive phases of replicated same-K descents (paper §3.2.2)."""
+
+    n: int
+    n_devices: int
+    lam_start: int = 12
+    lam_slots: int = 12
+    domain: Tuple[float, float] = (-5.0, 5.0)
+    sigma0_frac: float = 0.25
+    impl: str = "xla"
+    drop_prob: float = 0.0
+    dtype: str = "float64"
+
+    def __post_init__(self):
+        if self.lam_slots != self.lam_start:
+            raise ValueError("lam_slots must equal lam_start")
+        if self.n_devices & (self.n_devices - 1):
+            raise ValueError("K-Replicated needs a power-of-two device count")
+        self.kmax_exp = int(math.log2(self.n_devices))
+        width = self.domain[1] - self.domain[0]
+        self.sigma0 = self.sigma0_frac * width
+
+    def phase_cfg(self, k_exp: int) -> tuple[CMAConfig, CMAParams, int, int]:
+        g = 2 ** k_exp                       # devices per descent
+        G = self.n_devices // g              # concurrent descents
+        lam = g * self.lam_start
+        cfg = CMAConfig(n=self.n, lam=lam, lam_max=lam, sigma0=self.sigma0,
+                        dtype=self.dtype)
+        return cfg, make_params(cfg), G, g
+
+    def init_phase_states(self, cfg: CMAConfig, G: int, key: jax.Array):
+        lo, hi = self.domain
+        keys = jax.random.split(key, G)
+        x0 = jax.vmap(lambda k: jax.random.uniform(
+            k, (self.n,), cfg.jdtype, lo, hi))(keys)
+        return jax.vmap(lambda k, x: cmaes.init_state(cfg, k, x))(keys, x0)
+
+    def device_step(self, cfg: CMAConfig, params: CMAParams, carry: KRepCarry,
+                    gen_key: jax.Array, fitness_fn: Callable
+                    ) -> Tuple[KRepCarry, KRepTrace]:
+        n, dt, lam_slots = self.n, cfg.jdtype, self.lam_slots
+        g = jax.lax.axis_size("mem")
+        mem = jax.lax.axis_index("mem")
+        dev = eval_dispatch.flat_index(("grp", "mem"))
+
+        key = jax.random.fold_in(gen_key, dev)
+        k_sample, k_drop = jax.random.split(key)
+        state = carry.state
+
+        y, x = cmaes.sample_population(state, k_sample, lam_slots, impl=self.impl)
+        f = fitness_fn(x)
+        f = _apply_drop(k_drop, f, self.drop_prob)
+
+        f_all = jax.lax.all_gather(f, "mem").reshape(g, lam_slots)
+        f_flat = f_all.reshape(g * lam_slots)
+        ranks = eval_dispatch.local_ranks(f, f_flat, mem * lam_slots)
+        w = params.weights[jnp.clip(ranks, 0, params.weights.shape[0] - 1)]
+        w = jnp.where(jnp.isfinite(f), w, 0.0)
+
+        yw_part = w @ y
+        gram_part = cmaes.kops.rank_mu_gram(y, w, impl=self.impl)
+        gram, yw, wsum, nval = jax.lax.psum(
+            (gram_part, yw_part, jnp.sum(w),
+             jnp.sum(jnp.isfinite(f)).astype(jnp.int64)), "mem")
+        scale = jnp.where(wsum > 1e-12, 1.0 / jnp.maximum(wsum, 1e-12), 0.0)
+        yw, gram = yw * scale, gram * scale
+
+        f_sorted = jnp.sort(f_flat)                           # lam == lam_max
+        i_loc = jnp.argmin(f)
+        xb_all = jax.lax.all_gather(x[i_loc], "mem").reshape(g, n)
+        x_best = xb_all[jnp.argmin(jnp.min(f_all, axis=1))]
+
+        mom = cmaes.Moments(y_w=yw, gram=gram, f_sorted=f_sorted,
+                            x_best=x_best, n_evals=nval.astype(jnp.int32))
+        new_state = cmaes.masked_update(cfg, params, state, mom, impl=self.impl)
+
+        # global best across groups (gather per-group candidates)
+        gen_best = f_sorted[0]
+        fb_grp = jax.lax.all_gather(gen_best, "grp")
+        xb_grp = jax.lax.all_gather(x_best, "grp")
+        G = fb_grp.shape[0]
+        fb_grp = fb_grp.reshape(G)
+        xb_grp = xb_grp.reshape(G, n)
+        i_star = jnp.argmin(fb_grp)
+        better = fb_grp[i_star] < carry.best_f
+        best_f = jnp.where(better, fb_grp[i_star], carry.best_f)
+        best_x = jnp.where(better, xb_grp[i_star], carry.best_x)
+
+        # stopped descents idle (masked) until the phase barrier — paper Fig. 3
+        n_stopped = jax.lax.psum(new_state.stop.astype(jnp.int32), "grp")
+        # evals: stopped descents idle, so they stop consuming budget
+        evals_gen = jax.lax.psum(jnp.where(state.stop, 0, nval), "grp")
+        fevals = carry.fevals + evals_gen
+
+        group_best = jax.lax.all_gather(new_state.best_f, "grp").reshape(G)
+        new_carry = KRepCarry(state=new_state, best_f=best_f, best_x=best_x,
+                              fevals=fevals)
+        trace = KRepTrace(best_f=best_f, group_best=group_best,
+                          n_stopped=n_stopped, fevals=fevals)
+        return new_carry, trace
+
+    def phase_chunk_fn(self, cfg, params, fitness_fn, chunk: int):
+        def run_chunk(carry, keys):
+            return jax.lax.scan(
+                lambda c, k: self.device_step(cfg, params, c, k, fitness_fn),
+                carry, keys)
+        return run_chunk
+
+    def run_sim(self, key: jax.Array, fitness_fn, phase_gens: int,
+                chunk: int = 16, max_evals: Optional[int] = None,
+                phases: Optional[List[int]] = None):
+        """All phases on one device via nested vmap('mem' ⊗ 'grp').
+
+        Every carry leaf is pre-broadcast to a full per-device copy
+        ((g, G, ...)), so both vmap levels use plain in/out_axes=0 and the
+        extraction after each chunk is uniform (device [0, 0]; group states
+        are taken from member 0 of each group).
+        """
+        best_f, best_x = np.inf, np.zeros(self.n)
+        fevals = 0
+        all_traces: List[dict] = []
+        phase_list = phases if phases is not None else list(range(self.kmax_exp + 1))
+        for k_exp in phase_list:
+            cfg, params, G, g = self.phase_cfg(k_exp)
+            key, k_init = jax.random.split(key)
+            states = self.init_phase_states(cfg, G, k_init)    # (G, ...)
+            carry = KRepCarry(
+                state=states,
+                best_f=jnp.asarray(best_f, cfg.jdtype),
+                best_x=jnp.asarray(best_x, cfg.jdtype),
+                fevals=jnp.asarray(fevals, jnp.int64))
+
+            def to_dev(c: KRepCarry) -> KRepCarry:
+                st = jax.tree_util.tree_map(
+                    lambda a: jnp.broadcast_to(a[None], (g,) + a.shape), c.state)
+                rep = lambda a: jnp.broadcast_to(a[None, None], (g, G) + a.shape)
+                return KRepCarry(state=st, best_f=rep(c.best_f),
+                                 best_x=rep(c.best_x), fevals=rep(c.fevals))
+
+            def from_dev(cb: KRepCarry) -> KRepCarry:
+                st = jax.tree_util.tree_map(lambda a: a[0], cb.state)
+                return KRepCarry(state=st, best_f=cb.best_f[0, 0],
+                                 best_x=cb.best_x[0, 0], fevals=cb.fevals[0, 0])
+
+            inner = jax.vmap(self.phase_chunk_fn(cfg, params, fitness_fn, chunk),
+                             in_axes=0, out_axes=0, axis_name="grp")
+            outer = jax.jit(jax.vmap(inner, in_axes=0, out_axes=0,
+                                     axis_name="mem"))
+
+            traces = []
+            gens_done = 0
+            while gens_done < phase_gens:
+                key, kc = jax.random.split(key)
+                n_keys = min(chunk, phase_gens - gens_done)
+                keys = jax.random.split(kc, n_keys)
+                keys_b = jnp.broadcast_to(keys[None, None], (g, G) + keys.shape)
+                carry_b, tr = outer(to_dev(carry), keys_b)
+                carry = from_dev(carry_b)
+                tr0 = jax.tree_util.tree_map(lambda a: np.asarray(a[0, 0]), tr)
+                traces.append(tr0)
+                gens_done += n_keys
+                if int(np.asarray(tr0.n_stopped)[-1]) >= G:
+                    break
+                if max_evals is not None and int(tr0.fevals[-1]) >= max_evals:
+                    break
+            trace = _concat_traces(traces)
+            trace["k_exp"] = k_exp
+            trace["lam"] = cfg.lam
+            trace["n_groups"] = G
+            all_traces.append(trace)
+            best_f = float(carry.best_f)
+            best_x = np.asarray(carry.best_x)
+            fevals = int(carry.fevals)
+            if max_evals is not None and fevals >= max_evals:
+                break
+        return dict(best_f=best_f, best_x=best_x, fevals=fevals,
+                    phases=all_traces)
+
+    def lower_phase(self, mesh, fitness_fn, k_exp: int, chunk: int = 1):
+        """Lower one phase chunk under shard_map for the dry-run harness.
+
+        The mesh must have axes ('grp', 'mem') with sizes (G, g) for this
+        phase.  States are sharded over 'grp' (one descent per group), the
+        global-best scalars replicated.
+        """
+        cfg, params, G, g = self.phase_cfg(k_exp)
+        run_chunk = self.phase_chunk_fn(cfg, params, fitness_fn, chunk)
+
+        def wrapped(carry, keys):
+            # shard_map hands each device a (1, ...) slice of the 'grp'-sharded
+            # state; squeeze to the per-device view and re-expand on the way out.
+            c = carry._replace(state=jax.tree_util.tree_map(
+                lambda a: a[0], carry.state))
+            c, tr = run_chunk(c, keys)
+            return c._replace(state=jax.tree_util.tree_map(
+                lambda a: a[None], c.state)), tr
+
+        in_specs = (KRepCarry(state=P("grp"), best_f=P(), best_x=P(),
+                              fevals=P()), P())
+        out_specs = (KRepCarry(state=P("grp"), best_f=P(), best_x=P(),
+                               fevals=P()), P())
+        fn = jax.shard_map(wrapped, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, check_vma=False)
+        carry = jax.eval_shape(
+            lambda k: KRepCarry(
+                state=self.init_phase_states(cfg, G, k),
+                best_f=jnp.asarray(jnp.inf, cfg.jdtype),
+                best_x=jnp.zeros((self.n,), cfg.jdtype),
+                fevals=jnp.asarray(0, jnp.int64)),
+            jax.ShapeDtypeStruct((2,), jnp.uint32))
+        keys = jax.ShapeDtypeStruct((chunk, 2), jnp.uint32)
+        return jax.jit(fn).lower(carry, keys)
+
+
+def _concat_traces(traces: List) -> dict:
+    if not traces:
+        return {}
+    first = traces[0]
+    if isinstance(first, dict):
+        keys = first.keys()
+        return {k: np.concatenate([t[k] for t in traces]) for k in keys}
+    fields = first._fields
+    return {k: np.concatenate([np.asarray(getattr(t, k)) for t in traces])
+            for k in fields}

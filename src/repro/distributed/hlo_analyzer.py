@@ -1,0 +1,308 @@
+"""Loop-aware roofline accounting from optimized HLO text.
+
+``compiled.cost_analysis()`` counts every while-loop body ONCE — for
+scan-over-layers programs (every cell here) that undercounts FLOPs, bytes
+and collective traffic by the trip count (validated in
+tests/test_hlo_analyzer.py).  This module re-derives the three roofline
+inputs from ``compiled.as_text()`` with trip-count multipliers:
+
+  * flops       — dot ops (2·|out|·|contract|) wherever they appear
+                  (top-level or inside fused computations) + elementwise;
+  * bytes       — per-kernel HBM traffic proxy: Σ over top-level
+                  instructions of (output + operand bytes); fusions count as
+                  one kernel (inner ops touch no HBM);
+  * collectives — per-kind byte totals (all-gather / all-reduce /
+                  reduce-scatter / all-to-all / collective-permute).
+
+Totals are computed per computation and folded through the call graph:
+``while`` bodies/conds × known_trip_count (XLA annotates scan loops with
+``backend_config={"known_trip_count":{"n":...}}``); fusion/call/cond called
+computations contribute flops (bytes only at the call site).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1, "u1": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "log", "tanh", "rsqrt", "sqrt", "negate", "abs", "sine",
+    "cosine", "logistic", "select", "compare", "and", "or", "xor", "floor",
+    "ceil", "round-nearest-even", "remainder", "atan2", "expm1", "log1p",
+}
+
+_SKIP_BYTES = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast", "iota",
+    "after-all", "opt-barrier", "partition-id", "replica-id",
+}
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?.*?\)??)\s+"
+    r"([a-z][\w\-]*)\((.*)$")
+_COMP_HEAD_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLED_RE = re.compile(r"(?:calls|to_apply|body|condition)=%?([\w.\-]+)")
+_COND_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(shape_str: str) -> int:
+    n_total = 0
+    for _, dims in _SHAPE_RE.findall(shape_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        n_total += n
+    return n_total
+
+
+# named-scope tags attributed per instruction via op_name metadata
+TAGS = ("flash_tile", "wkv_tile", "ssd_tile")
+
+_OPNAME_RE = re.compile(r'op_name="([^"]*)"')
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape: str
+    opcode: str
+    rest: str          # operand list + attributes (raw tail of the line)
+
+    def tag(self):
+        m = _OPNAME_RE.search(self.rest)
+        if not m:
+            return None
+        for t in TAGS:
+            if t in m.group(1):
+                return t
+        return None
+
+
+@dataclasses.dataclass
+class Comp:
+    name: str
+    instrs: List[Instr]
+    shapes: Dict[str, str]
+
+
+def parse_module(txt: str) -> Dict[str, Comp]:
+    comps: Dict[str, Comp] = {}
+    cur: Optional[Comp] = None
+    for line in txt.splitlines():
+        if cur is None:
+            m = _COMP_HEAD_RE.match(line.strip())
+            if m:
+                cur = Comp(name=m.group(1), instrs=[], shapes={})
+            continue
+        s = line.strip()
+        if s == "}" or s.startswith("} "):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            name, shape, opcode, rest = m.groups()
+            cur.instrs.append(Instr(name, shape, opcode, rest))
+            cur.shapes[name] = shape
+    if cur is not None:
+        comps[cur.name] = cur
+    return comps
+
+
+def _dot_flops(instr: Instr, comp: Comp) -> float:
+    out_elems = _shape_elems(instr.shape)
+    ops = _OPERAND_RE.findall(instr.rest.split(", lhs_")[0])
+    lhs_shape = comp.shapes.get(ops[0], "") if ops else ""
+    mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.rest)
+    if not mc or not lhs_shape:
+        return 2.0 * out_elems                       # degenerate fallback
+    dims_m = _SHAPE_RE.search(lhs_shape)
+    if not dims_m:
+        return 2.0 * out_elems
+    lhs_dims = [int(d) for d in dims_m.group(2).split(",") if d]
+    contract = 1
+    for i in mc.group(1).split(","):
+        if i:
+            contract *= lhs_dims[int(i)]
+    return 2.0 * out_elems * contract
+
+
+@dataclasses.dataclass
+class Totals:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
+    coll_counts: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
+    tagged: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {t: 0.0 for t in TAGS})
+    unknown_trip: int = 0
+
+    def add(self, other: "Totals", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k in _COLLECTIVES:
+            self.coll[k] += other.coll[k] * mult
+            self.coll_counts[k] += other.coll_counts[k] * mult
+        for t in TAGS:
+            self.tagged[t] += other.tagged[t] * mult
+        self.unknown_trip += other.unknown_trip
+
+
+class Analyzer:
+    def __init__(self, txt: str):
+        self.comps = parse_module(txt)
+        self._memo: Dict[str, Totals] = {}
+        self._flops_memo: Dict[str, float] = {}
+        entry = None
+        for line in txt.splitlines():
+            if line.startswith("ENTRY"):
+                m = _COMP_HEAD_RE.match(line.strip()[len("ENTRY"):].strip()
+                                        if False else line.strip())
+                # header regex already strips ENTRY
+                m2 = re.match(r"^ENTRY\s+%?([\w.\-]+)", line.strip())
+                if m2:
+                    entry = m2.group(1)
+                break
+        if entry is None:                      # fall back: last computation
+            entry = list(self.comps)[-1] if self.comps else ""
+        self.entry = entry
+
+    # flops of a computation including everything called from it, NO bytes
+    # (used for fused computations, whose inner ops touch no HBM)
+    def _flops_only(self, name: str) -> float:
+        if name in self._flops_memo:
+            return self._flops_memo[name]
+        comp = self.comps.get(name)
+        if comp is None:
+            return 0.0
+        self._flops_memo[name] = 0.0          # cycle guard
+        total = 0.0
+        for ins in comp.instrs:
+            total += self._instr_flops(ins, comp)
+        self._flops_memo[name] = total
+        return total
+
+    def _instr_flops(self, ins: Instr, comp: Comp) -> float:
+        if ins.opcode == "dot":
+            return _dot_flops(ins, comp)
+        if ins.opcode in _ELEMENTWISE:
+            return float(_shape_elems(ins.shape))
+        if ins.opcode in ("reduce", "reduce-window"):
+            return float(_shape_elems(ins.shape)) * 2.0
+        if ins.opcode == "fusion":
+            m = _CALLED_RE.search(ins.rest)
+            return self._flops_only(m.group(1)) if m else 0.0
+        if ins.opcode in ("call", "custom-call"):
+            m = _CALLED_RE.search(ins.rest)
+            return self._flops_only(m.group(1)) if m else 0.0
+        if ins.opcode == "while":
+            trip, body, cond = self._while_parts(ins)
+            return trip * (self._flops_only(body) + self._flops_only(cond))
+        if ins.opcode == "conditional":
+            m = _COND_BRANCH_RE.search(ins.rest)
+            if m:
+                branches = _OPERAND_RE.findall(m.group(1))
+                return max((self._flops_only(b) for b in branches),
+                           default=0.0)
+        return 0.0
+
+    def _while_parts(self, ins: Instr):
+        mt = _TRIP_RE.search(ins.rest)
+        trip = int(mt.group(1)) if mt else 1
+        mb = re.search(r"body=%?([\w.\-]+)", ins.rest)
+        mc = re.search(r"condition=%?([\w.\-]+)", ins.rest)
+        return trip, (mb.group(1) if mb else ""), (mc.group(1) if mc else "")
+
+    def totals(self, name: Optional[str] = None) -> Totals:
+        name = name or self.entry
+        if name in self._memo:
+            return self._memo[name]
+        comp = self.comps.get(name)
+        t = Totals()
+        if comp is None:
+            return t
+        self._memo[name] = t                  # cycle guard
+        for ins in comp.instrs:
+            base = ins.opcode.replace("-start", "")
+            if base in _COLLECTIVES and not ins.opcode.endswith("-done"):
+                b = shape_bytes(ins.shape)
+                t.coll[base] += b
+                t.coll_counts[base] += 1
+                t.bytes += b * 2              # read + write at the NIC/HBM
+                continue
+            if ins.opcode == "while":
+                trip, body, cond = self._while_parts(ins)
+                mt = _TRIP_RE.search(ins.rest)
+                if not mt:
+                    t.unknown_trip += 1
+                t.add(self.totals(body), trip)
+                t.add(self.totals(cond), trip)
+                continue
+            if ins.opcode == "conditional":
+                m = _COND_BRANCH_RE.search(ins.rest)
+                if m:
+                    branches = _OPERAND_RE.findall(m.group(1))
+                    subs = [self.totals(b) for b in branches]
+                    if subs:
+                        best = max(subs, key=lambda s: s.flops)
+                        t.add(best)
+                continue
+            if ins.opcode == "call":
+                m = _CALLED_RE.search(ins.rest)
+                if m:
+                    t.add(self.totals(m.group(1)))
+                continue
+            # ordinary / fusion instruction
+            t.flops += self._instr_flops(ins, comp)
+            if ins.opcode not in _SKIP_BYTES:
+                out_b = shape_bytes(ins.shape)
+                opnds = _OPERAND_RE.findall(ins.rest.split("), ")[0])
+                in_b = sum(shape_bytes(comp.shapes.get(o, "")) for o in opnds)
+                t.bytes += out_b + in_b
+                tag = ins.tag()
+                if tag:
+                    t.tagged[tag] += out_b + in_b
+        return t
+
+
+def analyze(hlo_text: str) -> dict:
+    """One-call summary used by the dry-run artifacts."""
+    a = Analyzer(hlo_text)
+    t = a.totals()
+    coll_total = sum(t.coll.values())
+    return {
+        "flops": t.flops,
+        "bytes": t.bytes,
+        "collective_bytes": dict(t.coll, total=coll_total,
+                                 counts=t.coll_counts),
+        "tagged_bytes": dict(t.tagged),
+        "unknown_trip_whiles": t.unknown_trip,
+    }

@@ -1,0 +1,81 @@
+"""GPipe-style pipeline parallelism over a mesh axis (DESIGN.md §7).
+
+At 1000+ nodes the ``pod`` axis can run as pipeline stages instead of pure
+DP: each pod holds a contiguous block of layers, microbatches stream
+through with ``ppermute`` handoffs.  This module implements the schedule as
+a shard_map program:
+
+  * ``params_stages`` — every leaf has a leading stage dim sharded over the
+    pipeline axis (each device group holds only its block's weights);
+  * classic GPipe timing: with M microbatches and S stages the loop runs
+    M + S − 1 ticks; at tick t, stage s processes microbatch t − s
+    (bubble fraction = (S−1)/(M+S−1));
+  * the handoff is one ``ppermute`` of the (mb, ...) activation per tick —
+    point-to-point, matching the 1-hop pod-to-pod ICI links.
+
+``pipeline_apply`` is deliberately schedule-only: the stage function is any
+jax-traceable layer block (the scanned LM units slot in directly).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def pipeline_apply(stage_fn: Callable, params_stages, x_microbatches,
+                   mesh, axis: str = "pod"):
+    """Run ``stage_fn(stage_params, x) -> y`` through S pipeline stages.
+
+    params_stages: pytree, leaves (S, ...) — stage dim sharded over ``axis``.
+    x_microbatches: (M, mb, ...) — replicated input microbatches.
+    Returns (M, mb, ...) outputs having traversed all S stages in order.
+    """
+    S = mesh.shape[axis]
+    M = x_microbatches.shape[0]
+    T = M + S - 1
+
+    def per_device(pstack, xs):
+        # pstack leaves arrive as (1, ...) local slices — this device's stage
+        p_local = jax.tree_util.tree_map(lambda a: a[0], pstack)
+        s = jax.lax.axis_index(axis)
+        mb_shape = xs.shape[1:]
+        perm = [(i, i + 1) for i in range(S - 1)]
+
+        def tick(carry, t):
+            cur, outs = carry                       # cur: this stage's input
+            # stage s works on microbatch (t - s); valid while 0 ≤ t−s < M
+            active = (t - s >= 0) & (t - s < M)
+            inj = jnp.where(t < M, t, M - 1)
+            cur = jnp.where(s == 0, xs[inj], cur)   # stage 0 injects
+            y = stage_fn(p_local, cur)
+            y = jnp.where(active, y, cur)
+            # last stage emits microbatch t−(S−1)
+            emit_idx = jnp.clip(t - (S - 1), 0, M - 1)
+            do_emit = (s == S - 1) & (t - (S - 1) >= 0)
+            outs = jax.lax.cond(
+                do_emit, lambda o: o.at[emit_idx].set(y), lambda o: o, outs)
+            nxt = jax.lax.ppermute(y, axis, perm)   # hand to stage s+1
+            return (nxt, outs), None
+
+        outs0 = jnp.zeros((M,) + mb_shape, xs.dtype)
+        cur0 = jnp.zeros(mb_shape, xs.dtype)
+        (_, outs), _ = jax.lax.scan(tick, (cur0, outs0), jnp.arange(T))
+        # outputs live on the last stage; broadcast so out_specs can be
+        # replicated (a real serving loop would keep them stage-local)
+        outs = jax.lax.psum(jnp.where(s == S - 1, outs, 0.0), axis)
+        return outs
+
+    in_specs = (jax.tree_util.tree_map(lambda _: P(axis), params_stages),
+                P())
+    fn = jax.shard_map(per_device, mesh=mesh, in_specs=in_specs,
+                       out_specs=P(), check_vma=False)
+    return fn(params_stages, x_microbatches)
+
+
+def bubble_fraction(n_microbatches: int, n_stages: int) -> float:
+    """GPipe idle fraction — the (S−1)/(M+S−1) law used in DESIGN §7."""
+    return (n_stages - 1) / (n_microbatches + n_stages - 1)

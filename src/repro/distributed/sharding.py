@@ -1,0 +1,211 @@
+"""Logical→physical sharding rules (MaxText-style) + activation constraints.
+
+Parallelism mapping (DESIGN.md §7):
+  * TP  — attention heads / FFN hidden / vocab / experts over ``model``
+  * FSDP — the complementary weight dim over ``data`` (and ``pod`` when present)
+  * DP  — batch over ``(pod, data)``
+  * EP  — MoE expert dim over ``model``
+  * SP  — long-context KV cache sequence dim over ``data`` (split-K decode)
+
+Rules are a (path-regex, rank, builder) table matched by *leaf path suffix*
+over the param tree.  ``rank`` is the rank of the un-stacked leaf: any extra
+leading dims (layer stacking — one level for uniform scans, two for
+pattern-unit scans like the VLM's (n_units, 4, ...) self-attn stack) are
+replicated with leading ``None``s automatically.
+
+A dim that does not divide its mesh axis falls back to replication (e.g.
+qwen2's 2 KV heads on a 16-way model axis), so every architecture lowers on
+every mesh without per-arch tuning.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_CURRENT_MESH: Optional[jax.sharding.Mesh] = None
+
+
+def set_mesh(mesh):
+    global _CURRENT_MESH
+    _CURRENT_MESH = mesh
+
+
+def get_mesh():
+    return _CURRENT_MESH
+
+
+def dp_axes(mesh) -> tuple:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def constrain(x, spec: P):
+    """with_sharding_constraint against the current mesh (no-op without one)."""
+    mesh = _CURRENT_MESH
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def batch_spec(mesh, extra_dims: int = 2) -> P:
+    """(B, S, ...) activations: batch over DP axes, rest replicated."""
+    return P(dp_axes(mesh), *([None] * extra_dims))
+
+
+# ---------------------------------------------------------------------------
+# rule table
+# ---------------------------------------------------------------------------
+# Builders receive (r, shape_tail) where ``r`` exposes .t(i)/.f(i) — tp/fsdp
+# axis for dim i of the *tail* shape, with divisibility fallback.
+
+_RULES = [
+    # --- embeddings / heads ---------------------------------------------------
+    (r"tok_embed$", 2, lambda r, s: P(r.t(0), r.f(1))),          # (V, d)
+    (r"lm_head$", 2, lambda r, s: P(r.f(0), r.t(1))),            # (d, V)
+    # --- attention --------------------------------------------------------------
+    (r"attn/wq$", 3, lambda r, s: P(r.f(0), r.t(1), None)),      # (d, H, Dh)
+    (r"attn/w[kv]$", 3, lambda r, s: P(r.f(0), r.t(1), None)),   # (d_kv, Hk, Dh)
+    (r"attn/wo$", 3, lambda r, s: P(r.t(0), None, r.f(2))),      # (H, Dh, d)
+    (r"attn/b[qkv]$", 2, lambda r, s: P(r.t(0), None)),          # (H, Dh)
+    # --- MoE (EP over model) -----------------------------------------------------
+    (r"moe/router$", 2, lambda r, s: P(r.f(0), None)),
+    (r"moe/w[ig]$", 3, lambda r, s: P(r.t(0), r.f(1), None)),    # (E, d, ff)
+    (r"moe/wo$", 3, lambda r, s: P(r.t(0), None, r.f(2))),       # (E, ff, d)
+    # --- dense MLP ----------------------------------------------------------------
+    (r"mlp/w[ig]$", 2, lambda r, s: P(r.f(0), r.t(1))),          # (d, ff)
+    (r"mlp/wo$", 2, lambda r, s: P(r.t(0), r.f(1))),             # (ff, d)
+    # --- RWKV -----------------------------------------------------------------------
+    (r"tmix/w[rkvg]$", 2, lambda r, s: P(r.f(0), r.t(1))),
+    (r"tmix/wo$", 2, lambda r, s: P(r.t(0), r.f(1))),
+    (r"tmix/maa_w1$", 2, lambda r, s: P(r.f(0), None)),
+    (r"tmix/dec_w1$", 2, lambda r, s: P(r.f(0), None)),
+    (r"cmix/wk$", 2, lambda r, s: P(r.f(0), r.t(1))),
+    (r"cmix/wv$", 2, lambda r, s: P(r.t(0), r.f(1))),
+    (r"cmix/wr$", 2, lambda r, s: P(r.f(0), r.t(1))),
+    # --- Mamba ------------------------------------------------------------------------
+    (r"mamba/in_proj$", 2, lambda r, s: P(r.f(0), r.t(1))),
+    (r"mamba/out_proj$", 2, lambda r, s: P(r.t(0), r.f(1))),
+    # --- zamba2 shared-block glue -------------------------------------------------------
+    (r"shared_proj$", 2, lambda r, s: P(r.f(0), r.t(1))),
+]
+
+
+class Rules:
+    def __init__(self, mesh):
+        self.mesh = mesh
+        self.tp_name = "model"
+        fs = dp_axes(mesh)
+        self.fsdp_name = fs if len(fs) > 1 else fs[0]
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        self.tp_size = sizes.get("model", 1)
+        self.fsdp_size = int(np.prod([sizes[a] for a in fs]))
+        self._tail: tuple = ()
+
+    # dim helpers for builders (against the current tail shape)
+    def t(self, i):
+        return self.tp_name if self._tail[i] % self.tp_size == 0 else None
+
+    def f(self, i):
+        return self.fsdp_name if self._tail[i] % self.fsdp_size == 0 else None
+
+    def spec_for(self, path: str, shape: tuple) -> P:
+        for pat, rank, builder in _RULES:
+            if re.search(pat, path):
+                if len(shape) < rank:
+                    return P()                      # scalarized (e.g. smoke)
+                self._tail = shape[len(shape) - rank:]
+                inner = builder(self, self._tail)
+                lead = len(shape) - rank
+                return P(*([None] * lead), *tuple(inner))
+        # default: replicate (norms, scalars, LoRAs, convs, gates)
+        return P(*([None] * len(shape))) if shape else P()
+
+
+def tree_paths(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(tree_paths(v, f"{prefix}/{k}" if prefix else k))
+    else:
+        out[prefix] = tree
+    return out
+
+
+def param_specs(params, mesh):
+    """PartitionSpec tree matching ``params`` structure."""
+    rules = Rules(mesh)
+
+    def walk(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: walk(v, f"{prefix}/{k}" if prefix else k)
+                    for k, v in tree.items()}
+        shape = tree.shape if hasattr(tree, "shape") else ()
+        return rules.spec_for(prefix, tuple(shape))
+
+    return walk(params)
+
+
+def param_shardings(params, mesh):
+    specs = param_specs(params, mesh)
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda s: isinstance(s, P))
+
+
+# ---------------------------------------------------------------------------
+# cache sharding (serving)
+# ---------------------------------------------------------------------------
+
+def cache_specs(cache, mesh, batch: int):
+    """KV/state cache PartitionSpecs — matched by *leaf name* (the cache is a
+    flat dict built by models/lm.py:init_cache).
+
+    KV leaves (``*k``/``*v``): (..., B, S, Hk, Dh).  Batch shards over DP axes
+    when divisible; otherwise (long-context B=1 decode) the *sequence* dim
+    shards over 'data' — split-K/flash-decoding style (SP), with XLA inserting
+    the psum-merged softmax.  Heads shard over 'model' (TP).
+    State leaves (``ssm``/``wkv``): (..., B, H, ...) — batch over DP, heads
+    over model.  Shift/conv leaves: batch over DP only.
+    """
+    dp = dp_axes(mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp_size = int(np.prod([sizes[a] for a in dp]))
+    tp_size = sizes.get("model", 1)
+    data_size = sizes.get("data", 1)
+
+    def find_b(shape) -> int:
+        # batch dim = first dim equal to ``batch`` (leading dims are layer
+        # stack counts, which never equal the batch in the assigned cells)
+        return shape.index(batch)
+
+    def leaf_spec(name: str, x) -> P:
+        shape = tuple(x.shape)
+        if not shape:
+            return P()
+        spec = [None] * len(shape)
+        base = name.rsplit("_", 1)[-1]
+        try:
+            b = find_b(shape)
+        except ValueError:
+            return P(*spec)
+        if batch % dp_size == 0:
+            spec[b] = dp
+        if base in ("k", "v") and len(shape) >= b + 4:    # (B, S, Hk, Dh)
+            if shape[b + 2] % tp_size == 0:
+                spec[b + 2] = "model"
+            if batch % dp_size != 0 and shape[b + 1] % data_size == 0:
+                spec[b + 1] = "data"                      # SP / split-K
+        elif base in ("ssm", "wkv") and len(shape) >= b + 2:  # (B, H, ...)
+            if shape[b + 1] % tp_size == 0:
+                spec[b + 1] = "model"
+        return P(*spec)
+
+    return {name: leaf_spec(name, leaf) for name, leaf in cache.items()}
+
+
+def count_params(params) -> int:
+    return int(sum(np.prod(l.shape) for l in jax.tree_util.tree_leaves(params)))

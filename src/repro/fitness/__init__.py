@@ -1,0 +1,1 @@
+from repro.fitness import bbob, surrogates  # noqa: F401

@@ -1,0 +1,95 @@
+"""Jitted wrappers that route each hot-spot op to its Pallas kernel or jnp ref.
+
+``impl`` semantics (used across core/ and models/):
+  * ``"xla"``     — pure-jnp reference path (ref.py).  Default on CPU: XLA
+                    already lowers these GEMMs well, and Mosaic kernels cannot
+                    compile for the CPU backend.
+  * ``"pallas"``  — the Pallas kernel, compiled by Mosaic (TPU) or executed in
+                    interpret mode elsewhere (correctness-equivalent, slow).
+  * ``"auto"``    — "pallas" on TPU backends, "xla" otherwise.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.cma_sample import cma_sample
+from repro.kernels.cma_update import cma_rank_mu_update
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def resolve_impl(impl: str) -> str:
+    if impl == "auto":
+        return "pallas" if _on_tpu() else "xla"
+    return impl
+
+
+def sample_transform(B, D, Z, impl: str = "auto"):
+    """Y = Z·diag(D)·Bᵀ (lam, n)."""
+    impl = resolve_impl(impl)
+    if impl == "xla":
+        return ref.sample_transform(B, D, Z)
+    zero = jnp.zeros((B.shape[0],), Z.dtype)
+    one = jnp.ones((), Z.dtype)
+    return cma_sample(zero, one, B, D, Z, interpret=not _on_tpu())
+
+
+def sample_points(m, sigma, B, D, Z, impl: str = "auto"):
+    """X = M + σ·B·diag(D)·Z (lam, n) — fused kernel when impl=pallas."""
+    impl = resolve_impl(impl)
+    if impl == "xla":
+        return ref.sample_points(m, sigma, B, D, Z)
+    return cma_sample(m, sigma, B, D, Z, interpret=not _on_tpu())
+
+
+def rank_mu_gram(Y, w, impl: str = "auto"):
+    """Σ wᵢ yᵢyᵢᵀ — the paper's rank-λ GEMM (eq. 3)."""
+    impl = resolve_impl(impl)
+    if impl == "xla":
+        return ref.rank_mu_gram(Y, w)
+    n = Y.shape[1]
+    zeros = jnp.zeros((n, n), Y.dtype)
+    zvec = jnp.zeros((n,), Y.dtype)
+    return cma_rank_mu_update(zeros, Y, w, zvec, 0.0, 1.0, 0.0,
+                              interpret=not _on_tpu())
+
+
+def covariance_combine(C, gram, p_c, decay, c_mu, c_1, impl: str = "auto"):
+    """decay·C + c_μ·gram + c₁·p_c p_cᵀ (cheap epilogue; always jnp).
+
+    The fused path (kernel computing gram+epilogue in one pass) is
+    ``rank_mu_update`` below — used when the caller still has Y at hand.
+    """
+    return ref.covariance_combine(C, gram, p_c, decay, c_mu, c_1)
+
+
+def rank_mu_update(C, Y, w, p_c, decay, c_mu, c_1, impl: str = "auto"):
+    """Fully fused covariance adaptation: one HBM read+write of C."""
+    impl = resolve_impl(impl)
+    if impl == "xla":
+        return ref.rank_mu_update(C, Y, w, p_c, decay, c_mu, c_1)
+    return cma_rank_mu_update(C, Y, w, p_c, decay, c_mu, c_1,
+                              interpret=not _on_tpu())
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    impl: str = "auto"):
+    """GQA flash attention (see kernels/flash_attention.py)."""
+    impl = resolve_impl(impl)
+    if impl == "xla":
+        return ref.flash_attention(q, k, v, causal=causal, window=window)
+    from repro.kernels.flash_attention import flash_attention as fa
+    return fa(q, k, v, causal=causal, window=window, interpret=not _on_tpu())
+
+
+def wkv6(r, k, v, logw, u, impl: str = "auto"):
+    """Chunked RWKV-6 WKV (see kernels/rwkv6_wkv.py)."""
+    impl = resolve_impl(impl)
+    if impl == "xla":
+        return ref.wkv6(r, k, v, logw, u)
+    from repro.kernels.rwkv6_wkv import wkv6_forward
+    return wkv6_forward(r, k, v, logw, u, interpret=not _on_tpu())

@@ -1,0 +1,80 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the *reference implementations*: numerically straightforward XLA
+programs.  They are also the default execution path on non-TPU backends (the
+paper's "Level-3 BLAS" insight maps to plain einsum/matmul here, which XLA
+lowers to MXU ops on TPU anyway — the Pallas kernels additionally fuse the
+epilogues; see kernels/cma_update.py and kernels/cma_sample.py).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sample_transform(B: jnp.ndarray, D: jnp.ndarray, Z: jnp.ndarray) -> jnp.ndarray:
+    """Y = Z · diag(D) · Bᵀ, i.e. y_k = B·(D ∘ z_k).   (paper eq. 1, batched)
+
+    B: (n, n) eigenvectors; D: (n,) sqrt-eigenvalues; Z: (lam, n) ~ N(0, I).
+    Returns Y: (lam, n).
+    """
+    return (Z * D[None, :]) @ B.T
+
+
+def sample_points(m: jnp.ndarray, sigma: jnp.ndarray, B: jnp.ndarray,
+                  D: jnp.ndarray, Z: jnp.ndarray) -> jnp.ndarray:
+    """X = M + σ·(B·diag(D))·Z in row convention: (lam, n)."""
+    return m[None, :] + sigma * sample_transform(B, D, Z)
+
+
+def rank_mu_gram(Y: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Σᵢ wᵢ yᵢyᵢᵀ as one GEMM:  Aᵀ·B with A = Y, B = diag(w)·Y (paper eq. 3)."""
+    return Y.T @ (w[:, None] * Y)
+
+
+def covariance_combine(C: jnp.ndarray, gram: jnp.ndarray, p_c: jnp.ndarray,
+                       decay: jnp.ndarray, c_mu: jnp.ndarray,
+                       c_1: jnp.ndarray) -> jnp.ndarray:
+    """C ← decay·C + c_μ·gram + c₁·p_c p_cᵀ   (paper eq. 3 epilogue)."""
+    return decay * C + c_mu * gram + c_1 * jnp.outer(p_c, p_c)
+
+
+def rank_mu_update(C: jnp.ndarray, Y: jnp.ndarray, w: jnp.ndarray,
+                   p_c: jnp.ndarray, decay: jnp.ndarray, c_mu: jnp.ndarray,
+                   c_1: jnp.ndarray) -> jnp.ndarray:
+    """Fully fused covariance adaptation (what the Pallas kernel computes)."""
+    return covariance_combine(C, rank_mu_gram(Y, w), p_c, decay, c_mu, c_1)
+
+
+# ---------------------------------------------------------------------------
+# LM kernels
+# ---------------------------------------------------------------------------
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: int = 0) -> jnp.ndarray:
+    """Materialized-softmax GQA attention oracle.  q (B,S,H,D); k/v (B,Skv,Hk,D)."""
+    import jax
+    B, S, H, D = q.shape
+    Skv, Hk = k.shape[1], k.shape[2]
+    rep = H // Hk
+    qg = q.reshape(B, S, Hk, rep, D).astype(jnp.float32) * (D ** -0.5)
+    logits = jnp.einsum("bshrd,bthd->bhrst", qg, k.astype(jnp.float32))
+    q_ids = jnp.arange(S)[:, None]
+    k_ids = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((S, Skv), bool)
+    if causal:
+        mask &= k_ids <= q_ids
+    if window > 0:
+        mask &= k_ids > q_ids - window
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bhrst,bthd->bshrd", p, v.astype(jnp.float32))
+    return o.reshape(B, S, H, D).astype(q.dtype)
+
+
+def wkv6(r, k, v, logw, u):
+    """RWKV-6 WKV oracle — the chunked-parallel jnp form (models/rwkv6.py)."""
+    from repro.models import rwkv6 as _rwkv6
+    B, S, H, D = r.shape
+    state0 = jnp.zeros((B, H, D, D), jnp.float32)
+    o, _ = _rwkv6.wkv_chunked(r, k, v, logw, u, state0)
+    return o

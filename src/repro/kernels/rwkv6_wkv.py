@@ -1,0 +1,105 @@
+"""Pallas TPU kernel: chunked-parallel RWKV-6 WKV recurrence.
+
+    S_t = diag(w_t)·S_{t−1} + k_t ⊗ v_t
+    o_t = r_t·(S_{t−1} + diag(u)·k_t ⊗ v_t)
+
+TPU adaptation of the FLA chunked form (models/rwkv6.py is the oracle):
+  * grid = (B·H, S/CHUNK) with the chunk axis innermost; the (D × D) f32
+    recurrent state lives in VMEM scratch and persists across chunk steps —
+    HBM sees one pass over r/k/v/w and one write of o, state never leaves
+    VMEM;
+  * the intra-chunk pairwise term is one (c × c) MXU contraction of
+    decay-weighted q/k tiles; cumulative log-decays are a VPU cumsum;
+  * exponent safety: per-token log-decay is clamped in the surrounding
+    layer to [−LOG_CLAMP, −1e-6] and CHUNK = 16 keeps every exponential
+    ≤ e^{16·5} < f32 max (same bound as the reference — a larger MXU-
+    friendlier chunk needs sub-block renormalization; see EXPERIMENTS
+    §Perf for the measured trade-off).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+CHUNK = 16
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, state_ref, *,
+            chunk: int, d: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    rr = r_ref[0].astype(jnp.float32)            # (c, D)
+    kk = k_ref[0].astype(jnp.float32)
+    vv = v_ref[0].astype(jnp.float32)
+    ww = w_ref[0].astype(jnp.float32)            # log-decays ≤ −1e−6
+    u = u_ref[0].astype(jnp.float32)             # (1, D) bonus
+
+    Lc = jnp.cumsum(ww, axis=0)                  # Σ_{s≤t}
+    Lc_prev = Lc - ww                            # Σ_{s<t}
+    Lc_last = Lc[-1:]
+
+    q_t = rr * jnp.exp(Lc_prev)
+    k_in = kk * jnp.exp(-Lc)
+    A = jax.lax.dot_general(q_t, k_in, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (c, c)
+    t_ids = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    j_ids = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    A = jnp.where(j_ids < t_ids, A, 0.0)         # strict lower triangle
+    o = jax.lax.dot_general(A, vv, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    # diagonal bonus r_t·(u ⊙ k_t)·v_t
+    diag = jnp.sum(rr * u * kk, axis=1, keepdims=True)
+    o = o + diag * vv
+    # cross-chunk: r_t e^{Lc_prev_t} · S_prev
+    o = o + jax.lax.dot_general(q_t, state_ref[...],
+                                (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    o_ref[0] = o.astype(o_ref.dtype)
+    # state: S ← e^{Lc_last} ⊙ S + Σ_j (k_j e^{Lc_last − Lc_j}) ⊗ v_j
+    k_out = kk * jnp.exp(Lc_last - Lc)
+    state_ref[...] = (jnp.exp(Lc_last).T * state_ref[...]
+                      + jax.lax.dot_general(k_out, vv,
+                                            (((0,), (0,)), ((), ())),
+                                            preferred_element_type=jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def wkv6_forward(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                 logw: jnp.ndarray, u: jnp.ndarray, *,
+                 interpret: bool = False) -> jnp.ndarray:
+    """r/k/v (B, S, H, D); logw (B, S, H, D) f32 (clamped ≤ −1e−6); u (H, D).
+    Returns o (B, S, H, D).  S must be a multiple of CHUNK (caller pads)."""
+    B, S, H, D = r.shape
+    assert S % CHUNK == 0
+    nc = S // CHUNK
+
+    def fold(x):
+        return x.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+
+    rf, kf, vf, wf = map(fold, (r, k, v, logw))
+    uf = jnp.broadcast_to(u[None], (B, H, D)).reshape(B * H, 1, D)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, chunk=CHUNK, d=D),
+        grid=(B * H, nc),
+        in_specs=[
+            pl.BlockSpec((1, CHUNK, D), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((1, CHUNK, D), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((1, CHUNK, D), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((1, CHUNK, D), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((1, 1, D), lambda h, c: (h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, CHUNK, D), lambda h, c: (h, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, D), r.dtype),
+        scratch_shapes=[pltpu.VMEM((D, D), jnp.float32)],
+        interpret=interpret,
+    )(rf, kf, vf, wf, uf)
+    return out.reshape(B, H, S, D).transpose(0, 2, 1, 3)

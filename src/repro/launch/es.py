@@ -1,0 +1,73 @@
+"""CMA-ES campaign launcher — the paper's experiment driver.
+
+  PYTHONPATH=src python -m repro.launch.es --strategy kdist --fid 8 \
+      --dim 10 --devices 8 --gens 200 [--cost-ms 1]
+
+Strategies: seq (paper Alg. 2 baseline) | kdist | krep.  On this container
+the strategies run via the vmap simulation path (bit-identical program to
+the shard_map deployment — see core/strategies.py).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)   # CMA-ES follows the f64 C code
+
+import numpy as np
+
+from repro.core.ipop import run_ipop
+from repro.core.strategies import KDistributed, KReplicated
+from repro.fitness import bbob
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--strategy", choices=("seq", "kdist", "krep"),
+                    default="kdist")
+    ap.add_argument("--fid", type=int, default=8)
+    ap.add_argument("--dim", type=int, default=10)
+    ap.add_argument("--instance", type=int, default=1)
+    ap.add_argument("--devices", type=int, default=8,
+                    help="simulated device count (vmap width)")
+    ap.add_argument("--gens", type=int, default=200)
+    ap.add_argument("--max-evals", type=int, default=100_000)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args(argv)
+
+    inst = bbob.make_instance(args.fid, args.dim, args.instance)
+    fit = lambda X: bbob.evaluate(args.fid, inst, X)
+    key = jax.random.PRNGKey(args.seed)
+    t0 = time.time()
+
+    if args.strategy == "seq":
+        res = run_ipop(fit, args.dim, key, max_evals=args.max_evals)
+        best, fevals = res.best_f, res.total_fevals
+    elif args.strategy == "kdist":
+        kd = KDistributed(n=args.dim, n_devices=args.devices)
+        carry, trace = kd.run_sim(key, fit, total_gens=args.gens)
+        best, fevals = float(carry.best_f), int(np.sum(carry.fevals))
+    else:
+        kr = KReplicated(n=args.dim, n_devices=args.devices)
+        out = kr.run_sim(key, fit, phase_gens=args.gens,
+                         max_evals=args.max_evals)
+        best, fevals = out["best_f"], out["fevals"]
+
+    err = best - float(inst.f_opt)
+    summary = dict(strategy=args.strategy, fid=args.fid, dim=args.dim,
+                   best_error=err, fevals=fevals,
+                   wall_s=round(time.time() - t0, 2))
+    if args.json:
+        print(json.dumps(summary))
+    else:
+        print(f"[es] {args.strategy} f{args.fid} d{args.dim}: "
+              f"error={err:.3e} after {fevals} evals "
+              f"({summary['wall_s']}s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""ShapeDtypeStruct stand-ins for every (arch × shape) dry-run cell.
+
+``input_specs(cfg, shape)`` returns the abstract inputs of the step function
+that cell lowers — weak-type-correct, shardable, zero allocation:
+
+  train_4k     → {"tokens"/"frames", "labels"[, "img_embeds"]}
+  prefill_32k  → {"tokens"/"frames"[, "img_embeds"]}
+  decode_32k / long_500k → ({"tokens"/"frames"}, cache-abstract)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import lm
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def batch_specs(cfg: ModelConfig, B: int, S: int, *, labels: bool) -> dict:
+    out = {}
+    if cfg.embed_inputs:
+        out["tokens"] = _sds((B, S), jnp.int32)
+    else:                                        # audio stub frontend
+        out["frames"] = _sds((B, S, cfg.d_model), cfg.dtype)
+    if cfg.family == "vlm":
+        out["img_embeds"] = _sds((B, cfg.n_img_tokens, cfg.d_model), cfg.dtype)
+    if labels:
+        out["labels"] = _sds((B, S), jnp.int32)
+    return out
+
+
+def cache_abstract(cfg: ModelConfig, B: int, max_len: int):
+    return jax.eval_shape(lambda: lm.init_cache(cfg, B, max_len))
+
+
+def params_abstract(cfg: ModelConfig, dtype=None):
+    abstract = jax.eval_shape(lambda k: lm.init_params(cfg, k),
+                              jax.ShapeDtypeStruct((2,), jnp.uint32))
+    if dtype is not None:
+        abstract = jax.tree_util.tree_map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, jnp.dtype(dtype)), abstract)
+    return abstract
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """Abstract *data* inputs of the cell's step function."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return batch_specs(cfg, B, S, labels=True)
+    if shape.kind == "prefill":
+        return batch_specs(cfg, B, S, labels=False)
+    if shape.kind == "decode":
+        step_in = batch_specs(cfg, B, 1, labels=False)
+        # decode over a VLM: cross-KV lives in the cache; img_embeds not fed
+        step_in.pop("img_embeds", None)
+        return step_in
+    raise ValueError(shape.kind)

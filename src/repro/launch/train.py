@@ -1,0 +1,63 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b \
+      --steps 200 --seq-len 128 --global-batch 8 [--smoke] \
+      [--ckpt-dir /tmp/ckpt] [--microbatches 2] [--grad-compress int8]
+
+On this CPU container use ``--smoke`` (reduced config of the same family).
+On a real pod the same entrypoint runs the full config across the production
+mesh (mesh axes picked from the device count).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import ARCHS, get_config, smoke_config
+from repro.launch import mesh as mesh_mod
+from repro.train import optimizer as opt_mod
+from repro.train import train_step as ts_mod
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS, required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--grad-compress", choices=("none", "int8"),
+                    default="none")
+    ap.add_argument("--no-resume", action="store_true")
+    ap.add_argument("--model-parallel", type=int, default=1)
+    args = ap.parse_args(argv)
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    mesh = None
+    if len(jax.devices()) > 1:
+        mesh = mesh_mod.make_mesh_for(model_parallel=args.model_parallel)
+
+    tc = TrainerConfig(
+        total_steps=args.steps, ckpt_every=args.ckpt_every,
+        ckpt_dir=args.ckpt_dir,
+        train=ts_mod.TrainConfig(
+            microbatches=args.microbatches,
+            grad_compress=args.grad_compress,
+            adamw=opt_mod.AdamWConfig(lr=args.lr, warmup_steps=args.warmup,
+                                      total_steps=args.steps)))
+    trainer = Trainer(cfg, tc, seq_len=args.seq_len,
+                      global_batch=args.global_batch, mesh=mesh)
+    trainer.run(resume=not args.no_resume)
+    final = trainer.history[-1]["loss"] if trainer.history else float("nan")
+    print(f"[train] done: {args.steps} steps, final loss {final:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,241 @@
+"""GQA attention: causal / sliding-window / cross, training and cached decode.
+
+Training/prefill attention is *query-chunked*: scores are materialized only
+for (q_chunk × kv) tiles, so a 32k-token prefill never allocates an
+S×S score tensor (the memory-roofline term that would otherwise dominate —
+see EXPERIMENTS §Roofline).  Sliding-window layers additionally slice the KV
+range per chunk, making compute O(S·W) instead of O(S²).
+
+Decode reads a pre-allocated KV cache ring.  For long-context decode the
+cache may be sequence-sharded across the 'data' axis (split-K attention) —
+the einsums below are written so XLA SPMD partitions them with a psum merge.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+class AttnConfig(NamedTuple):
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    rope_theta: float = 1e4
+    pos: str = "rope"            # rope | none (positions baked into embeds)
+    sliding_window: int = 0      # 0 → full causal
+    causal: bool = True
+    q_chunk: int = 1024
+    impl: str = "naive"          # naive | flash (see configs/base.py)
+    batch_tp: bool = False       # shard attention batch over (dp, model)
+
+
+def init_attn_params(key, cfg: AttnConfig, param_dtype,
+                     kv_input_dim: Optional[int] = None) -> dict:
+    d, H, Hk, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    d_kv_in = kv_input_dim if kv_input_dim is not None else d
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": layers.dense_init(ks[0], (d, H, Dh), param_dtype),
+        "wk": layers.dense_init(ks[1], (d_kv_in, Hk, Dh), param_dtype),
+        "wv": layers.dense_init(ks[2], (d_kv_in, Hk, Dh), param_dtype),
+        "wo": layers.dense_init(ks[3], (H, Dh, d), param_dtype, in_axis=(0, 1)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H, Dh), param_dtype)
+        p["bk"] = jnp.zeros((Hk, Dh), param_dtype)
+        p["bv"] = jnp.zeros((Hk, Dh), param_dtype)
+    return p
+
+
+def _project_qkv(p, cfg: AttnConfig, x, kv_x, q_pos, kv_pos):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", kv_x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", kv_x, p["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    if cfg.pos == "rope":
+        q = layers.apply_rope(q, q_pos, cfg.rope_theta)
+        k = layers.apply_rope(k, kv_pos, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa_chunk(q, k, v, mask, scale):
+    """q (B,C,H,Dh), k/v (B,Skv,Hk,Dh) with GQA broadcast; mask (B,C,Skv) or None."""
+    B, C, H, Dh = q.shape
+    Hk = k.shape[2]
+    rep = H // Hk
+    qg = q.reshape(B, C, Hk, rep, Dh)
+    logits = jnp.einsum("bchrk,bshk->bhrcs", qg.astype(jnp.float32) * scale,
+                        k.astype(jnp.float32))
+    if mask is not None:
+        logits = jnp.where(mask[:, None, None, :, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhrcs,bshk->bchrk", probs, v.astype(jnp.float32))
+    return out.reshape(B, C, H, Dh).astype(q.dtype)
+
+
+def attend_full(p: dict, cfg: AttnConfig, x: jnp.ndarray,
+                positions: jnp.ndarray,
+                kv_x: Optional[jnp.ndarray] = None,
+                kv_positions: Optional[jnp.ndarray] = None,
+                return_kv: bool = False):
+    """Training / prefill attention over a full sequence (query-chunked).
+
+    x (B, S, d); kv_x given ⇒ cross-attention (no causal mask, no window).
+    ``return_kv`` ⇒ returns (out, (k, v)) for prefill cache construction.
+    """
+    B, S, d = x.shape
+    cross = kv_x is not None
+    kv_x = x if kv_x is None else kv_x
+    kv_positions = positions if kv_positions is None else kv_positions
+    Skv = kv_x.shape[1]
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+
+    q, k, v = _project_qkv(p, cfg, x, kv_x, positions, kv_positions)
+
+    # flash path: memory-linear custom-VJP attention (index-order masks —
+    # every self-attn call site uses arange positions).  §Perf iteration 1.
+    if cfg.impl == "flash" and not cross and cfg.causal:
+        from repro.models.flash_xla import flash_mha
+        resharded = False
+        if cfg.batch_tp:
+            from jax.sharding import PartitionSpec as Pspec
+            from repro.distributed import sharding as shd
+            mesh = shd.get_mesh()
+            if mesh is not None:
+                all_ax = tuple(mesh.axis_names)
+                n_all = int(mesh.devices.size)
+                if n_all and B % n_all == 0:
+                    spec = Pspec(all_ax, None, None, None)
+                    q = shd.constrain(q, spec)
+                    k = shd.constrain(k, spec)
+                    v = shd.constrain(v, spec)
+                    resharded = True
+        out = flash_mha(q, k, v, cfg.causal, cfg.sliding_window)
+        if resharded:
+            out = shd.constrain(
+                out, Pspec(shd.dp_axes(mesh), None, None, None))
+        y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+        if return_kv:
+            return y, (k, v)
+        return y
+
+    cq = min(cfg.q_chunk, S)
+    n_chunks = -(-S // cq)
+    pad = n_chunks * cq - S
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qs = q.reshape(B, n_chunks, cq, cfg.n_heads, cfg.head_dim)
+    q_pos_pad = jnp.pad(positions, ((0, 0), (0, pad))) if pad else positions
+    qpos = q_pos_pad.reshape(B, n_chunks, cq)
+
+    kv_idx = kv_positions  # (B, Skv)
+
+    # sliding-window layers only read a (W + cq)-sized KV slice per q chunk:
+    # compute O(S·W) instead of O(S²) (DESIGN.md; assumes token order).
+    windowed = (cfg.sliding_window > 0 and cfg.causal and not cross
+                and Skv > cfg.sliding_window + cq)
+    if windowed:
+        kv_len = -(-(cfg.sliding_window + cq) // cq) * cq
+
+    def one_chunk(c):
+        if windowed:
+            start = jnp.clip(c * cq + cq - kv_len, 0, Skv - kv_len)
+            kc = jax.lax.dynamic_slice_in_dim(k, start, kv_len, axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(v, start, kv_len, axis=1)
+            kidx = jax.lax.dynamic_slice_in_dim(kv_idx, start, kv_len, axis=1)
+        else:
+            kc, vc, kidx = k, v, kv_idx
+        qc = qs[:, c]
+        pc = qpos[:, c]                                   # (B, cq)
+        if cross or not cfg.causal:
+            mask = None
+        else:
+            mask = kidx[:, None, :] <= pc[:, :, None]     # causal
+            if cfg.sliding_window > 0:
+                mask &= kidx[:, None, :] > pc[:, :, None] - cfg.sliding_window
+        return _sdpa_chunk(qc, kc, vc, mask, scale)
+
+    out = jax.lax.map(one_chunk, jnp.arange(n_chunks))    # (n_chunks, B, cq, H, Dh)
+    out = jnp.moveaxis(out, 0, 1).reshape(B, n_chunks * cq, cfg.n_heads,
+                                          cfg.head_dim)[:, :S]
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# cached decode
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray        # (B, S_max, Hk, Dh)
+    v: jnp.ndarray        # (B, S_max, Hk, Dh)
+    length: jnp.ndarray   # () int32 — tokens currently in cache
+
+
+def init_kv_cache(cfg: AttnConfig, batch: int, max_len: int, dtype) -> KVCache:
+    eff = min(max_len, cfg.sliding_window) if cfg.sliding_window > 0 else max_len
+    shape = (batch, eff, cfg.n_kv_heads, cfg.head_dim)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+                   length=jnp.asarray(0, jnp.int32))
+
+
+def decode_step(p: dict, cfg: AttnConfig, x: jnp.ndarray, pos: jnp.ndarray,
+                cache: KVCache) -> tuple[jnp.ndarray, KVCache]:
+    """One-token decode.  x (B, 1, d), pos (B, 1) absolute positions."""
+    B = x.shape[0]
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    q, k_new, v_new = _project_qkv(p, cfg, x, x, pos, pos)
+
+    S_max = cache.k.shape[1]
+    slot = jnp.mod(cache.length, S_max)    # ring for sliding-window caches
+    k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new, slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new, slot, axis=1)
+    new_len = cache.length + 1
+
+    # ring-aware slot→token map: slot i holds the latest token t ≡ i (mod S_max)
+    # with t < new_len; negative values mark not-yet-written slots.
+    idx = jnp.arange(S_max)
+    tok_pos = idx + ((new_len - 1 - idx) // S_max) * S_max
+    valid = (tok_pos >= 0) & (tok_pos < new_len)
+    if cfg.sliding_window > 0:
+        valid &= tok_pos > (pos[:, 0].max() - cfg.sliding_window)
+
+    mask = jnp.broadcast_to(valid[None, None, :], (B, 1, S_max))
+    out = _sdpa_chunk(q, k, v, mask, scale)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return y, KVCache(k=k, v=v, length=new_len)
+
+
+def cross_decode(p: dict, cfg: AttnConfig, x: jnp.ndarray,
+                 kv_k: jnp.ndarray, kv_v: jnp.ndarray) -> jnp.ndarray:
+    """Decode against a fixed (precomputed) cross-attention KV set."""
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+    out = _sdpa_chunk(q, kv_k, kv_v, None, scale)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+
+
+def precompute_cross_kv(p: dict, cfg: AttnConfig, kv_x: jnp.ndarray):
+    dt = kv_x.dtype
+    k = jnp.einsum("bsd,dhk->bshk", kv_x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", kv_x, p["wv"].astype(dt))
+    if cfg.qkv_bias:
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    return k, v

@@ -1,0 +1,269 @@
+"""Memory-linear (flash) attention for the XLA path — custom-VJP, pure JAX.
+
+The baseline attention materializes per-q-chunk probability tensors and the
+backward pass of the chunk loop SAVES them (15 GB/device on the qwen2
+train_4k cell — EXPERIMENTS §Roofline).  This implementation never stores
+probabilities:
+
+  forward : online-softmax over KV blocks (running m/l/acc in the scan
+            carry), returns O and the per-row stats (m, l);
+  backward: two blockwise passes that RECOMPUTE p from (m, l) —
+            pass 1: dQ over q-blocks × kv-blocks,
+            pass 2: dK/dV over kv-blocks × q-blocks —
+            so the transient working set is one (bq × bkv) tile.
+
+This is the same algorithm as kernels/flash_attention.py (the Pallas TPU
+kernel); XLA fuses each tile body into a handful of kernels.  Masking is
+index-based (causal / sliding window over token order), which matches every
+training/prefill call site (positions are arange).  GQA folds the group
+dim into q rows.
+
+§Perf iteration 1 measured on qwen2-0.5b train_4k (single-pod):
+memory 38.6 s → see EXPERIMENTS §Perf; probs no longer saved.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def _blk(x, i, size, axis):
+    return jax.lax.dynamic_slice_in_dim(x, i * size, size, axis=axis)
+
+
+def _mask(qi, ki, bq, bkv, causal, window, skv_valid):
+    q_ids = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+    k_ids = ki * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+    m = k_ids < skv_valid                       # KV padding
+    if causal:
+        m &= k_ids <= q_ids
+    if window > 0:
+        m &= k_ids > q_ids - window
+    return m
+
+
+def _kv_block_ids(qi, bq, bkv, nkv, window):
+    """KV block indices a q block must visit.  window > 0 ⇒ a STATIC-length
+    range ending at the q block's diagonal (O(S·W) total tiles instead of
+    O(S²) — the gemma sliding-window win, §Perf iteration 1.3).  Returns
+    (ids, valid) — invalid slots are gated off (never double-counted)."""
+    if window <= 0:
+        return jnp.arange(nkv), jnp.ones((nkv,), jnp.bool_)
+    n_need = min(nkv, -(-(window + bq) // bkv) + 1)
+    last = (qi * bq + bq - 1) // bkv                    # diagonal block
+    ids = last - (n_need - 1) + jnp.arange(n_need)
+    valid = (ids >= 0) & (ids < nkv)
+    return jnp.clip(ids, 0, nkv - 1), valid
+
+
+def _fwd_qblock(q_b, k, v, qi, *, bq, bkv, causal, window, skv_valid, scale):
+    """Online softmax of one q block against its kv-block range.
+    q_b (B,bq,G,D) f32 where G folds (Hk, rep);  k/v (B,nkv*bkv,Hk,D)."""
+    B, _, G, D = q_b.shape
+    Hk = k.shape[2]
+    rep = G // Hk
+    nkv = k.shape[1] // bkv
+
+    def body(carry, kiv):
+        ki, ok = kiv
+        m_r, l_r, acc = carry
+        k_b = _blk(k, ki, bkv, 1).astype(jnp.float32)     # (B,bkv,Hk,D)
+        v_b = _blk(v, ki, bkv, 1).astype(jnp.float32)
+        s = jnp.einsum("bqhrd,bkhd->bqhrk",
+                       q_b.reshape(B, bq, Hk, rep, D) * scale, k_b)
+        msk = _mask(qi, ki, bq, bkv, causal, window, skv_valid) & ok
+        s = jnp.where(msk[None, :, None, None, :], s, NEG)
+        s = s.reshape(B, bq, G, bkv)
+        m_new = jnp.maximum(m_r, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_r - m_new)
+        l_new = l_r * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bqhrk,bkhd->bqhrd",
+                        p.reshape(B, bq, Hk, rep, bkv), v_b)
+        acc = acc * corr[..., None] + pv.reshape(B, bq, G, D)
+        return (m_new, l_new, acc), None
+
+    ids, valid = _kv_block_ids(qi, bq, bkv, nkv, window)
+    init = (jnp.full((B, bq, G), NEG, jnp.float32),
+            jnp.zeros((B, bq, G), jnp.float32),
+            jnp.zeros((B, bq, G, D), jnp.float32))
+    (m_r, l_r, acc), _ = jax.lax.scan(body, init, (ids, valid))
+    l_safe = jnp.maximum(l_r, 1e-30)
+    return acc / l_safe[..., None], m_r, l_safe
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_mha(q, k, v, causal: bool = True, window: int = 0,
+              bq: int = 512, bkv: int = 512):
+    """q (B,S,H,D); k/v (B,Skv,Hk,D) → (B,S,H,D).  Index-order masking."""
+    with jax.named_scope("flash_tile"):
+        o, _, _ = _flash_fwd_impl(q, k, v, causal, window, bq, bkv)
+    return o
+
+
+def _flash_fwd_impl(q, k, v, causal, window, bq, bkv):
+    B, S, H, D = q.shape
+    Skv = k.shape[1]
+    scale = D ** -0.5
+    bq = min(bq, S)
+    bkv = min(bkv, Skv)
+    pq, pkv = (-S) % bq, (-Skv) % bkv
+    qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0))) if pq else q
+    kp = jnp.pad(k, ((0, 0), (0, pkv), (0, 0), (0, 0))) if pkv else k
+    vp = jnp.pad(v, ((0, 0), (0, pkv), (0, 0), (0, 0))) if pkv else v
+    nq = qp.shape[1] // bq
+
+    def per_qblock(qi):
+        q_b = _blk(qp, qi, bq, 1).astype(jnp.float32)
+        return _fwd_qblock(q_b, kp, vp, qi, bq=bq, bkv=bkv, causal=causal,
+                           window=window, skv_valid=Skv, scale=scale)
+
+    o, m_r, l_r = jax.lax.map(per_qblock, jnp.arange(nq))
+    o = jnp.moveaxis(o, 0, 1).reshape(B, nq * bq, H, D)[:, :S]
+    m_r = jnp.moveaxis(m_r, 0, 1).reshape(B, nq * bq, H)[:, :S]
+    l_r = jnp.moveaxis(l_r, 0, 1).reshape(B, nq * bq, H)[:, :S]
+    return o.astype(q.dtype), m_r, l_r
+
+
+def _flash_fwd(q, k, v, causal, window, bq, bkv):
+    with jax.named_scope("flash_tile"):
+        o, m_r, l_r = _flash_fwd_impl(q, k, v, causal, window, bq, bkv)
+    return o, (q, k, v, o, m_r, l_r)
+
+
+def _flash_bwd(causal, window, bq, bkv, res, do):
+    with jax.named_scope("flash_tile"):
+        return _flash_bwd_impl(causal, window, bq, bkv, res, do)
+
+
+def _flash_bwd_impl(causal, window, bq, bkv, res, do):
+    q, k, v, o, m_r, l_r = res
+    B, S, H, D = q.shape
+    Skv, Hk = k.shape[1], k.shape[2]
+    rep = H // Hk
+    scale = D ** -0.5
+    bq_ = min(bq, S)
+    bkv_ = min(bkv, Skv)
+    pq, pkv = (-S) % bq_, (-Skv) % bkv_
+
+    pad_q = lambda x: jnp.pad(x, ((0, 0), (0, pq)) + ((0, 0),) * (x.ndim - 2)) \
+        if pq else x
+    pad_k = lambda x: jnp.pad(x, ((0, 0), (0, pkv)) + ((0, 0),) * (x.ndim - 2)) \
+        if pkv else x
+    qp, op, dop = map(pad_q, (q, o, do))
+    mp, lp = map(pad_q, (m_r, l_r))
+    kp, vp = map(pad_k, (k, v))
+    nq = qp.shape[1] // bq_
+    nkv = kp.shape[1] // bkv_
+
+    # delta_i = Σ_d do_i · o_i   (B,S,H)
+    delta = jnp.sum(dop.astype(jnp.float32) * op.astype(jnp.float32), axis=-1)
+
+    def p_tile(q_b, k_b, m_b, l_b, qi, ki, ok=True):
+        """Recompute the (bq × bkv) probability tile from saved stats."""
+        s = jnp.einsum("bqhrd,bkhd->bqhrk",
+                       q_b.reshape(B, bq_, Hk, rep, D) * scale, k_b)
+        msk = _mask(qi, ki, bq_, bkv_, causal, window, Skv) & ok
+        s = jnp.where(msk[None, :, None, None, :], s, NEG)
+        s = s.reshape(B, bq_, H, bkv_)
+        return jnp.exp(s - m_b[..., None]) / l_b[..., None]
+
+    # ---- pass 1: dQ (loop q blocks; scan kv blocks) -------------------------
+    def dq_block(qi):
+        q_b = _blk(qp, qi, bq_, 1).astype(jnp.float32)
+        do_b = _blk(dop, qi, bq_, 1).astype(jnp.float32)
+        m_b = _blk(mp, qi, bq_, 1)
+        l_b = _blk(lp, qi, bq_, 1)
+        d_b = _blk(delta, qi, bq_, 1)
+
+        def body(dq_acc, kiv):
+            ki, ok = kiv
+            k_b = _blk(kp, ki, bkv_, 1).astype(jnp.float32)
+            v_b = _blk(vp, ki, bkv_, 1).astype(jnp.float32)
+            p = p_tile(q_b, k_b, m_b, l_b, qi, ki, ok)      # (B,bq,H,bkv)
+            dp = jnp.einsum("bqhrd,bkhd->bqhrk",
+                            do_b.reshape(B, bq_, Hk, rep, D),
+                            v_b).reshape(B, bq_, H, bkv_)
+            ds = p * (dp - d_b[..., None])                   # (B,bq,H,bkv)
+            dq_c = jnp.einsum("bqhrk,bkhd->bqhrd",
+                              ds.reshape(B, bq_, Hk, rep, bkv_), k_b)
+            return dq_acc + dq_c.reshape(B, bq_, H, D) * scale, None
+
+        ids, valid = _kv_block_ids(qi, bq_, bkv_, nkv, window)
+        dq0 = jnp.zeros((B, bq_, H, D), jnp.float32)
+        dq_b, _ = jax.lax.scan(body, dq0, (ids, valid))
+        return dq_b
+
+    dq = jax.lax.map(dq_block, jnp.arange(nq))
+    dq = jnp.moveaxis(dq, 0, 1).reshape(B, nq * bq_, H, D)[:, :S]
+
+    # ---- pass 2: dK, dV (loop kv blocks; scan q blocks) ----------------------
+    def _q_block_ids(ki):
+        """q blocks that can attend to kv block ki (window-restricted)."""
+        if window <= 0:
+            return jnp.arange(nq), jnp.ones((nq,), jnp.bool_)
+        n_need = min(nq, -(-(window + bkv_) // bq_) + 1)
+        first = (ki * bkv_) // bq_
+        ids = first + jnp.arange(n_need)
+        valid = (ids >= 0) & (ids < nq)
+        return jnp.clip(ids, 0, nq - 1), valid
+
+    def dkv_block(ki):
+        k_b = _blk(kp, ki, bkv_, 1).astype(jnp.float32)
+        v_b = _blk(vp, ki, bkv_, 1).astype(jnp.float32)
+
+        def body(carry, qiv):
+            qi, ok = qiv
+            dk_acc, dv_acc = carry
+            q_b = _blk(qp, qi, bq_, 1).astype(jnp.float32)
+            do_b = _blk(dop, qi, bq_, 1).astype(jnp.float32)
+            m_b = _blk(mp, qi, bq_, 1)
+            l_b = _blk(lp, qi, bq_, 1)
+            d_b = _blk(delta, qi, bq_, 1)
+            p = p_tile(q_b, k_b, m_b, l_b, qi, ki, ok)
+            # dV += Σ_q p · do   (sum over q rows and group reps)
+            dv_c = jnp.einsum("bqhrk,bqhrd->bkhd",
+                              p.reshape(B, bq_, Hk, rep, bkv_),
+                              do_b.reshape(B, bq_, Hk, rep, D))
+            dp = jnp.einsum("bqhrd,bkhd->bqhrk",
+                            do_b.reshape(B, bq_, Hk, rep, D),
+                            v_b).reshape(B, bq_, H, bkv_)
+            ds = p * (dp - d_b[..., None])
+            dk_c = jnp.einsum("bqhrk,bqhrd->bkhd",
+                              ds.reshape(B, bq_, Hk, rep, bkv_),
+                              q_b.reshape(B, bq_, Hk, rep, D))
+            return (dk_acc + dk_c * scale, dv_acc + dv_c), None
+
+        ids, valid = _q_block_ids(ki)
+        z = jnp.zeros((B, bkv_, Hk, D), jnp.float32)
+        (dk_b, dv_b), _ = jax.lax.scan(body, (z, z), (ids, valid))
+        return dk_b, dv_b
+
+    dk, dv = jax.lax.map(dkv_block, jnp.arange(nkv))
+    dk = jnp.moveaxis(dk, 0, 1).reshape(B, nkv * bkv_, Hk, D)[:, :Skv]
+    dv = jnp.moveaxis(dv, 0, 1).reshape(B, nkv * bkv_, Hk, D)[:, :Skv]
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+flash_mha.defvjp(_flash_fwd, _flash_bwd)
+
+
+def kernel_hbm_bytes(B, S, Skv, H, Hk, D, bq, dtype_bytes=2):
+    """Analytic HBM traffic of the Pallas flash kernel for one layer's
+    fwd+bwd (kernels/flash_attention.py design: Q/O streamed once, K/V
+    re-streamed per q block, tiles live in VMEM scratch):
+      fwd : read Q + n_q·(K+V) + write O
+      bwd : 2 passes, each re-reads the same (dq pass re-streams K/V per
+            q block; dkv pass re-streams Q/dO per kv block) + dQ/dK/dV."""
+    nq = -(-S // bq)
+    q_b = B * S * H * D * dtype_bytes
+    kv_b = B * Skv * Hk * D * dtype_bytes
+    fwd = q_b + nq * 2 * kv_b + q_b
+    dq_pass = q_b * 3 + nq * 2 * kv_b + q_b          # q,do,delta + kv + dq
+    dkv_pass = 2 * kv_b + nq * (q_b // max(nq, 1)) * 3 + 2 * kv_b
+    return fwd + dq_pass + dkv_pass

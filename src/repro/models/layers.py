@@ -1,0 +1,128 @@
+"""Shared model building blocks: norms, positions, parameter init helpers.
+
+Parameters are plain nested dicts of jnp arrays.  Sharding is attached by
+``repro/distributed/sharding.py`` which walks the same tree and assigns a
+PartitionSpec per leaf from its path (MaxText-style logical rules).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, param_dtype, in_axis: int = 0) -> jnp.ndarray:
+    """Truncated-normal fan-in init (LeCun-style)."""
+    fan_in = 1
+    if isinstance(in_axis, int):
+        fan_in = shape[in_axis]
+    else:
+        for a in in_axis:
+            fan_in *= shape[a]
+    std = 1.0 / jnp.sqrt(jnp.asarray(float(fan_in)))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(param_dtype)
+
+
+def embed_init(key, shape, param_dtype) -> jnp.ndarray:
+    """(V, d) embedding, std 1/√d — unit-scale activations after the
+    √d multiplier used by tied/gemma archs, and sane tied-head logits."""
+    std = shape[-1] ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_params(d, param_dtype):
+    return {"scale": jnp.zeros((d,), param_dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6, gemma_style: bool = True):
+    """RMSNorm with (1 + w) scale (zeros-init), computed in f32."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    w = params["scale"].astype(jnp.float32)
+    y = y * (1.0 + w) if gemma_style else y * w
+    return y.astype(dt)
+
+
+def layernorm_params(d, param_dtype):
+    return {"scale": jnp.ones((d,), param_dtype),
+            "bias": jnp.zeros((d,), param_dtype)}
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(dt)
+
+
+def make_norm(kind: str):
+    if kind == "rmsnorm":
+        return rmsnorm_params, lambda p, x, eps=1e-6: rmsnorm(p, x, eps)
+    if kind == "layernorm":
+        return layernorm_params, lambda p, x, eps=1e-5: layernorm(p, x, eps)
+    raise ValueError(kind)
+
+
+def groupnorm_heads(x, scale, bias, eps: float = 64e-5):
+    """Per-head GroupNorm over the channel dim (RWKV6 ln_x): x (..., H, D)."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# positions
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: (B, S, H, D); positions: (B, S) int32."""
+    dt = x.dtype
+    freqs = rope_freqs(x.shape[-1], theta)                       # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs       # (B, S, D/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(dt)
+
+
+def sinusoidal_positions(positions: jnp.ndarray, d_model: int) -> jnp.ndarray:
+    """positions (B, S) → (B, S, d) classic transformer sin/cos table."""
+    half = d_model // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# activation
+# ---------------------------------------------------------------------------
+
+def activation(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "relu": jax.nn.relu, "sqrelu": lambda x: jnp.square(jax.nn.relu(x)),
+            }[name]

@@ -1,0 +1,857 @@
+"""Unified LM assembly for the 10 assigned architectures.
+
+One functional module covers every family via a *pattern-unit* scanned layer
+stack (keeps HLO size O(1) in depth — essential for the 512-device dry-run):
+
+  dense / moe / audio : uniform units of 1 layer (scan over n_layers)
+  gemma3 (local:global): units of (5 sliding-local + 1 global) + local tail
+  vlm                 : units of (4 self-attn + 1 gated cross-attn)
+  ssm (rwkv6)         : uniform RWKV6 time-mix/channel-mix units
+  hybrid (zamba2)     : units of (6 mamba2 + shared transformer block) + tail
+
+Params are nested dicts; every stacked subtree lives under ``segments/`` and
+is sharded by suffix rules (distributed/sharding.py).  The public surface:
+
+  init_params(cfg, key)                  → params
+  forward(cfg, params, batch)            → (hidden, aux_loss)
+  loss(cfg, params, batch)               → (scalar, metrics)   # chunked CE
+  init_cache(cfg, batch, max_len, dtype) → cache pytree
+  prefill(cfg, params, batch, max_len)   → (last_logits, cache)
+  decode_step(cfg, params, cache, batch) → (logits, cache)     # 1 token
+
+``batch`` dict keys: tokens (B,S) int32 | frames (B,S,d) [audio stub] |
+img_embeds (B,N,d) [vlm stub] | labels (B,S) int32 (train only).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed import sharding
+from repro.models import attention, layers, mamba2, mlp as mlp_mod, moe as moe_mod, rwkv6
+
+MOE_AUX_COEF = 0.01
+
+
+# ---------------------------------------------------------------------------
+# config plumbing
+# ---------------------------------------------------------------------------
+
+def _attn_cfg(cfg: ModelConfig, *, window: int = 0, theta: float = 0.0,
+              d_model: int = 0, causal: bool = True) -> attention.AttnConfig:
+    return attention.AttnConfig(
+        d_model=d_model or cfg.d_model,
+        n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+        qkv_bias=cfg.qkv_bias,
+        rope_theta=theta or cfg.rope_theta,
+        pos="rope" if cfg.pos == "rope" else "none",
+        sliding_window=window, causal=causal, q_chunk=cfg.q_chunk,
+        impl=cfg.attn_impl, batch_tp=cfg.attn_batch_tp)
+
+
+def _norm_fns(cfg: ModelConfig):
+    return layers.make_norm(cfg.norm)
+
+
+def gemma_units(cfg: ModelConfig):
+    """(n_units, n_tail) for the (local×k + global) pattern."""
+    unit = cfg.local_per_global + 1
+    return cfg.n_layers // unit, cfg.n_layers % unit
+
+
+def zamba_units(cfg: ModelConfig):
+    unit = cfg.shared_attn_every
+    return cfg.n_layers // unit, cfg.n_layers % unit
+
+
+def vlm_units(cfg: ModelConfig):
+    unit = cfg.cross_every
+    assert cfg.n_layers % unit == 0
+    return cfg.n_layers // unit, unit - 1   # (n_units, self-layers per unit)
+
+
+# ---------------------------------------------------------------------------
+# parameter init
+# ---------------------------------------------------------------------------
+
+def _stack_init(fn, key, n: int):
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def _attn_layer_init(cfg: ModelConfig, pdt, *, d_model: int = 0):
+    norm_init, _ = _norm_fns(cfg)
+    d = d_model or cfg.d_model
+    acfg = _attn_cfg(cfg, d_model=d)
+
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        p = {"ln1": norm_init(d, pdt),
+             "attn": attention.init_attn_params(k1, acfg, pdt),
+             "ln2": norm_init(d, pdt)}
+        if cfg.family == "moe":
+            p["moe"] = moe_mod.init_moe_params(
+                k2, cfg.d_model, cfg.d_ff, cfg.n_experts, cfg.glu, pdt)
+        else:
+            p["mlp"] = mlp_mod.init_mlp_params(k2, d, cfg.d_ff, cfg.glu, pdt)
+        return p
+    return init
+
+
+def _cross_layer_init(cfg: ModelConfig, pdt):
+    norm_init, _ = _norm_fns(cfg)
+    acfg = _attn_cfg(cfg, causal=False)
+
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        return {"ln1": norm_init(cfg.d_model, pdt),
+                "attn": attention.init_attn_params(k1, acfg, pdt),
+                "ln2": norm_init(cfg.d_model, pdt),
+                "mlp": mlp_mod.init_mlp_params(k2, cfg.d_model, cfg.d_ff,
+                                               cfg.glu, pdt),
+                "gate_attn": jnp.zeros((), pdt),
+                "gate_ffn": jnp.zeros((), pdt)}
+    return init
+
+
+def _rwkv_layer_init(cfg: ModelConfig, pdt):
+    norm_init, _ = _norm_fns(cfg)
+
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        return {"ln1": norm_init(cfg.d_model, pdt),
+                "tmix": rwkv6.init_rwkv_params(k1, cfg.d_model,
+                                               cfg.rwkv_head_dim, pdt),
+                "ln2": norm_init(cfg.d_model, pdt),
+                "cmix": rwkv6.init_channel_mix_params(k2, cfg.d_model,
+                                                      cfg.d_ff, pdt)}
+    return init
+
+
+def _mamba_layer_init(cfg: ModelConfig, pdt):
+    norm_init, _ = _norm_fns(cfg)
+
+    def init(key):
+        return {"ln": norm_init(cfg.d_model, pdt),
+                "mamba": mamba2.init_mamba_params(
+                    key, cfg.d_model, cfg.ssm_state, cfg.ssm_head_dim,
+                    cfg.ssm_expand, pdt)}
+    return init
+
+
+def _shared_block_init(cfg: ModelConfig, key, pdt):
+    """Zamba2 shared transformer block over concat(x, x_embed) — width 2d."""
+    norm_init, _ = _norm_fns(cfg)
+    d2 = 2 * cfg.d_model
+    acfg = _attn_cfg(cfg, d_model=d2)
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"ln1": norm_init(d2, pdt),
+            "attn": attention.init_attn_params(k1, acfg, pdt),
+            "ln2": norm_init(d2, pdt),
+            "mlp": mlp_mod.init_mlp_params(k2, d2, cfg.d_ff, cfg.glu, pdt),
+            "shared_proj": layers.dense_init(k3, (d2, cfg.d_model), pdt)}
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    pdt = jnp.dtype(cfg.param_dtype)
+    norm_init, _ = _norm_fns(cfg)
+    keys = jax.random.split(key, 8)
+    p: dict = {}
+    if cfg.embed_inputs:
+        p["tok_embed"] = layers.embed_init(keys[0], (cfg.vocab, cfg.d_model), pdt)
+
+    seg: dict = {}
+    if cfg.family in ("dense", "moe", "audio") and not cfg.local_per_global:
+        seg["unit"] = _stack_init(_attn_layer_init(cfg, pdt), keys[1],
+                                  cfg.n_layers)
+    elif cfg.local_per_global:                               # gemma3
+        n_units, n_tail = gemma_units(cfg)
+        k = cfg.local_per_global
+        init_one = _attn_layer_init(cfg, pdt)
+        seg["unit"] = {
+            "local": _stack_init(lambda kk: _stack_init(init_one, kk, k),
+                                 keys[1], n_units),
+            "global": _stack_init(init_one, keys[2], n_units)}
+        if n_tail:
+            seg["tail"] = _stack_init(init_one, keys[3], n_tail)
+    elif cfg.family == "vlm":
+        n_units, n_self = vlm_units(cfg)
+        init_self = _attn_layer_init(cfg, pdt)
+        seg["unit"] = {
+            "self": _stack_init(lambda kk: _stack_init(init_self, kk, n_self),
+                                keys[1], n_units),
+            "cross": _stack_init(_cross_layer_init(cfg, pdt), keys[2], n_units)}
+    elif cfg.family == "ssm":
+        seg["unit"] = _stack_init(_rwkv_layer_init(cfg, pdt), keys[1],
+                                  cfg.n_layers)
+        p["ln0"] = norm_init(cfg.d_model, pdt)               # RWKV post-embed LN
+    elif cfg.family == "hybrid":
+        n_units, n_tail = zamba_units(cfg)
+        u = cfg.shared_attn_every
+        init_one = _mamba_layer_init(cfg, pdt)
+        seg["unit"] = {"mamba": _stack_init(
+            lambda kk: _stack_init(init_one, kk, u), keys[1], n_units)}
+        if n_tail:
+            seg["tail"] = _stack_init(init_one, keys[3], n_tail)
+        p["shared"] = _shared_block_init(cfg, keys[2], pdt)
+    else:
+        raise ValueError(cfg.family)
+
+    p["segments"] = seg
+    p["final_norm"] = norm_init(cfg.d_model, pdt)
+    if not cfg.tied_embeddings and cfg.vocab:
+        p["lm_head"] = layers.dense_init(keys[4], (cfg.d_model, cfg.vocab), pdt)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+# ---------------------------------------------------------------------------
+
+def embed(cfg: ModelConfig, params: dict, batch: dict) -> jnp.ndarray:
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.embed_inputs:
+        x = params["tok_embed"].astype(dt)[batch["tokens"]]
+        if cfg.tied_embeddings or cfg.name.startswith("gemma"):
+            x = x * jnp.asarray(cfg.d_model ** 0.5, dt)
+    else:
+        x = batch["frames"].astype(dt)
+    if cfg.pos == "sinusoidal":
+        B, S = x.shape[:2]
+        pos = batch.get("positions")
+        if pos is None:
+            pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        x = x + layers.sinusoidal_positions(pos, cfg.d_model).astype(dt)
+    return x
+
+
+def head_matrix(cfg: ModelConfig, params: dict) -> jnp.ndarray:
+    """(d, V) projection — tied archs reuse the embedding."""
+    if cfg.tied_embeddings:
+        return params["tok_embed"].T
+    return params["lm_head"]
+
+
+# ---------------------------------------------------------------------------
+# layer bodies (full sequence — train / prefill)
+# ---------------------------------------------------------------------------
+
+def _attn_block(cfg: ModelConfig, p: dict, x, positions, *, window=0,
+                theta=0.0, d_model=0, collect_kv=False):
+    _, norm = _norm_fns(cfg)
+    acfg = _attn_cfg(cfg, window=window, theta=theta, d_model=d_model)
+    a = attention.attend_full(p["attn"], acfg, norm(p["ln1"], x), positions,
+                              return_kv=collect_kv)
+    kv = None
+    if collect_kv:
+        a, kv = a
+    x = x + a
+    h = norm(p["ln2"], x)
+    if "moe" in p:
+        f, aux = moe_mod.moe(p["moe"], h, cfg.experts_per_tok,
+                             cfg.capacity_factor, cfg.act,
+                             dispatch=cfg.moe_dispatch)
+    else:
+        f, aux = mlp_mod.mlp(p["mlp"], h, cfg.act), jnp.zeros((), jnp.float32)
+    return x + f, aux, kv
+
+
+def _cross_attn_cfg(cfg: ModelConfig) -> attention.AttnConfig:
+    """Cross-attn: no causal mask, no RoPE (llama-3.2-vision style)."""
+    return attention.AttnConfig(
+        d_model=cfg.d_model, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.head_dim, qkv_bias=cfg.qkv_bias, pos="none",
+        causal=False, q_chunk=cfg.q_chunk)
+
+
+def _cross_block(cfg: ModelConfig, p: dict, x, img):
+    """Gated cross-attention layer (training path, query-chunked)."""
+    _, norm = _norm_fns(cfg)
+    dt = x.dtype
+    B, S = x.shape[:2]
+    zpos = jnp.zeros((B, img.shape[1]), jnp.int32)
+    a = attention.attend_full(p["attn"], _cross_attn_cfg(cfg),
+                              norm(p["ln1"], x),
+                              jnp.zeros((B, S), jnp.int32),
+                              kv_x=img, kv_positions=zpos)
+    x = x + jnp.tanh(p["gate_attn"].astype(dt)) * a
+    f = mlp_mod.mlp(p["mlp"], norm(p["ln2"], x), cfg.act)
+    return x + jnp.tanh(p["gate_ffn"].astype(dt)) * f
+
+
+def _cross_block_cached(cfg: ModelConfig, p: dict, x, img_kv):
+    """Decode path against the precomputed cross K/V."""
+    _, norm = _norm_fns(cfg)
+    dt = x.dtype
+    a = attention.cross_decode(p["attn"], _cross_attn_cfg(cfg),
+                               norm(p["ln1"], x), img_kv[0], img_kv[1])
+    x = x + jnp.tanh(p["gate_attn"].astype(dt)) * a
+    f = mlp_mod.mlp(p["mlp"], norm(p["ln2"], x), cfg.act)
+    return x + jnp.tanh(p["gate_ffn"].astype(dt)) * f
+
+
+def _img_kv(cfg: ModelConfig, p_cross: dict, img_embeds):
+    """Precompute cross-attn K/V from (stub) image patch embeddings."""
+    return attention.precompute_cross_kv(p_cross["attn"], _cross_attn_cfg(cfg),
+                                         img_embeds)
+
+
+def _rwkv_block(cfg: ModelConfig, p: dict, x, state: Optional[rwkv6.RWKVState]):
+    _, norm = _norm_fns(cfg)
+    B, _, d = x.shape
+    if state is None:
+        state = rwkv6.init_rwkv_state(B, d, cfg.rwkv_head_dim, x.dtype)
+    o, sh_tm, wkv = rwkv6.time_mix(p["tmix"], norm(p["ln1"], x),
+                                   state.shift_tm, state.wkv,
+                                   cfg.rwkv_head_dim)
+    x = x + o
+    o, sh_cm = rwkv6.channel_mix(p["cmix"], norm(p["ln2"], x), state.shift_cm)
+    x = x + o
+    return x, rwkv6.RWKVState(wkv=wkv, shift_tm=sh_tm, shift_cm=sh_cm)
+
+
+def _mamba_block(cfg: ModelConfig, p: dict, x,
+                 state: Optional[mamba2.MambaState]):
+    _, norm = _norm_fns(cfg)
+    o, new_state = mamba2.mamba_layer(
+        p["mamba"], norm(p["ln"], x), cfg.d_model, cfg.ssm_state,
+        cfg.ssm_head_dim, cfg.ssm_expand, state)
+    return x + o, new_state
+
+
+def _shared_block(cfg: ModelConfig, sp: dict, x, x0, positions,
+                  collect_kv=False):
+    """Zamba2 shared block: full transformer at width 2d, projected back."""
+    _, norm = _norm_fns(cfg)
+    d2 = 2 * cfg.d_model
+    acfg = _attn_cfg(cfg, d_model=d2)
+    h2 = jnp.concatenate([x, x0], axis=-1)
+    a = attention.attend_full(sp["attn"], acfg, norm(sp["ln1"], h2), positions,
+                              return_kv=collect_kv)
+    kv = None
+    if collect_kv:
+        a, kv = a
+    h2 = h2 + a
+    h2 = h2 + mlp_mod.mlp(sp["mlp"], norm(sp["ln2"], h2), cfg.act)
+    return x + jnp.einsum("bse,ed->bsd", h2, sp["shared_proj"].astype(x.dtype)), kv
+
+
+def _maybe_remat(cfg: ModelConfig, fn):
+    return jax.checkpoint(fn) if cfg.remat else fn
+
+
+def _constrain_act(x):
+    mesh = sharding.get_mesh()
+    if mesh is None:
+        return x
+    return sharding.constrain(x, sharding.batch_spec(mesh, x.ndim - 1))
+
+
+# ---------------------------------------------------------------------------
+# forward (full sequence)
+# ---------------------------------------------------------------------------
+
+def forward(cfg: ModelConfig, params: dict, batch: dict):
+    """Full-sequence forward.  Returns (hidden (B,S,d), moe_aux_loss)."""
+    x = embed(cfg, params, batch)
+    B, S = x.shape[:2]
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    seg = params["segments"]
+    aux = jnp.zeros((), jnp.float32)
+
+    if cfg.family in ("dense", "moe", "audio") and not cfg.local_per_global:
+        def body(x, lp):
+            x, a, _ = _attn_block(cfg, lp, x, positions)
+            return _constrain_act(x), a
+        body = _maybe_remat(cfg, body)
+        def scan_f(carry, lp):
+            x, acc = carry
+            x, a = body(x, lp)
+            return (x, acc + a), None
+        (x, aux), _ = jax.lax.scan(scan_f, (x, aux), seg["unit"])
+
+    elif cfg.local_per_global:                                # gemma3
+        thetas = (cfg.rope_theta, cfg.rope_theta_global or cfg.rope_theta)
+
+        def unit_body(x, up):
+            def loc(x, lp):
+                x, _, _ = _attn_block(cfg, lp, x, positions,
+                                      window=cfg.sliding_window,
+                                      theta=thetas[0])
+                return _constrain_act(x), None
+            x, _ = jax.lax.scan(loc, x, up["local"])
+            x, _, _ = _attn_block(cfg, up["global"], x, positions,
+                                  theta=thetas[1])
+            return _constrain_act(x), None
+        unit_body = _maybe_remat(cfg, unit_body)
+        x, _ = jax.lax.scan(lambda x, up: unit_body(x, up), x, seg["unit"])
+        if "tail" in seg:
+            def tail_body(x, lp):
+                x, _, _ = _attn_block(cfg, lp, x, positions,
+                                      window=cfg.sliding_window,
+                                      theta=thetas[0])
+                return _constrain_act(x), None
+            tail_body = _maybe_remat(cfg, tail_body)
+            x, _ = jax.lax.scan(tail_body, x, seg["tail"])
+
+    elif cfg.family == "vlm":
+        img = batch["img_embeds"].astype(x.dtype)
+
+        def unit_body(x, up):
+            def one_self(x, lp):
+                x, _, _ = _attn_block(cfg, lp, x, positions)
+                return _constrain_act(x), None
+            x, _ = jax.lax.scan(one_self, x, up["self"])
+            x = _cross_block(cfg, up["cross"], x, img)
+            return _constrain_act(x), None
+        unit_body = _maybe_remat(cfg, unit_body)
+        x, _ = jax.lax.scan(lambda x, up: unit_body(x, up), x, seg["unit"])
+
+    elif cfg.family == "ssm":
+        _, norm = _norm_fns(cfg)
+        x = norm(params["ln0"], x)
+
+        def body(x, lp):
+            x, _ = _rwkv_block(cfg, lp, x, None)
+            return _constrain_act(x), None
+        body = _maybe_remat(cfg, body)
+        x, _ = jax.lax.scan(body, x, seg["unit"])
+
+    elif cfg.family == "hybrid":
+        x0 = x
+
+        def unit_body(x, up):
+            def one_mamba(x, lp):
+                x, _ = _mamba_block(cfg, lp, x, None)
+                return _constrain_act(x), None
+            x, _ = jax.lax.scan(one_mamba, x, up["mamba"])
+            x, _ = _shared_block(cfg, params["shared"], x, x0, positions)
+            return _constrain_act(x), None
+        unit_body = _maybe_remat(cfg, unit_body)
+        x, _ = jax.lax.scan(lambda x, up: unit_body(x, up), x, seg["unit"])
+        if "tail" in seg:
+            def tail_body(x, lp):
+                x, _ = _mamba_block(cfg, lp, x, None)
+                return _constrain_act(x), None
+            tail_body = _maybe_remat(cfg, tail_body)
+            x, _ = jax.lax.scan(tail_body, x, seg["tail"])
+    else:
+        raise ValueError(cfg.family)
+
+    _, norm = _norm_fns(cfg)
+    return norm(params["final_norm"], x), aux
+
+
+# ---------------------------------------------------------------------------
+# chunked cross-entropy (never materializes (B, S, V))
+# ---------------------------------------------------------------------------
+
+def chunked_ce(cfg: ModelConfig, params: dict, hidden: jnp.ndarray,
+               labels: jnp.ndarray):
+    """Scan the sequence in ``logits_chunk`` slices; f32 log-sum-exp."""
+    head = head_matrix(cfg, params)                    # (d, V)
+    B, S, d = hidden.shape
+    C = min(cfg.logits_chunk, S)
+    pad = (-S) % C
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    nc = hidden.shape[1] // C
+    hs = jnp.moveaxis(hidden.reshape(B, nc, C, d), 1, 0)
+    ys = jnp.moveaxis(labels.reshape(B, nc, C), 1, 0)
+
+    def chunk_loss(h, y):
+        logits = jnp.einsum("bcd,dv->bcv", h, head.astype(h.dtype),
+                            preferred_element_type=jnp.float32)
+        valid = (y >= 0)
+        ysafe = jnp.clip(y, 0, None)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ysafe[..., None], axis=-1)[..., 0]
+        nll = jnp.where(valid, lse - gold, 0.0)
+        return jnp.sum(nll).astype(jnp.float32), \
+            jnp.sum(valid).astype(jnp.float32)
+
+    chunk_loss = jax.checkpoint(chunk_loss) if cfg.remat else chunk_loss
+
+    def scan_f(acc, inp):
+        h, y = inp
+        s, c = chunk_loss(h, y)
+        return (acc[0] + s, acc[1] + c), None
+
+    (total, count), _ = jax.lax.scan(
+        scan_f, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hs, ys))
+    return total / jnp.maximum(count, 1.0)
+
+
+def loss(cfg: ModelConfig, params: dict, batch: dict):
+    hidden, aux = forward(cfg, params, batch)
+    ce = chunked_ce(cfg, params, hidden, batch["labels"])
+    total = ce + MOE_AUX_COEF * aux
+    return total, {"ce": ce, "moe_aux": aux}
+
+
+def logits_last(cfg: ModelConfig, params: dict, hidden: jnp.ndarray):
+    """(B, V) logits of the final position (prefill output)."""
+    head = head_matrix(cfg, params)
+    h = hidden[:, -1, :]
+    return jnp.einsum("bd,dv->bv", h, head.astype(h.dtype),
+                      preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# KV / state caches
+# ---------------------------------------------------------------------------
+
+def _kv_shape(cfg: ModelConfig, B: int, L: int, *, d_model: int = 0):
+    return (B, L, cfg.n_kv_heads, cfg.head_dim)
+
+
+def _win(cfg: ModelConfig, max_len: int) -> int:
+    return min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+
+
+def init_cache(cfg: ModelConfig, B: int, max_len: int, dtype=None) -> dict:
+    dt = jnp.dtype(dtype or cfg.dtype)
+    z = lambda shape: jnp.zeros(shape, dt)
+    cache: dict = {"length": jnp.zeros((), jnp.int32)}
+
+    if cfg.family in ("dense", "moe", "audio") and not cfg.local_per_global:
+        kv = _kv_shape(cfg, B, max_len)
+        cache["k"] = z((cfg.n_layers,) + kv)
+        cache["v"] = z((cfg.n_layers,) + kv)
+    elif cfg.local_per_global:
+        n_units, n_tail = gemma_units(cfg)
+        k = cfg.local_per_global
+        w = _win(cfg, max_len)
+        cache["local_k"] = z((n_units, k) + _kv_shape(cfg, B, w))
+        cache["local_v"] = z((n_units, k) + _kv_shape(cfg, B, w))
+        cache["global_k"] = z((n_units,) + _kv_shape(cfg, B, max_len))
+        cache["global_v"] = z((n_units,) + _kv_shape(cfg, B, max_len))
+        if n_tail:
+            cache["tail_k"] = z((n_tail,) + _kv_shape(cfg, B, w))
+            cache["tail_v"] = z((n_tail,) + _kv_shape(cfg, B, w))
+    elif cfg.family == "vlm":
+        n_units, n_self = vlm_units(cfg)
+        kv = _kv_shape(cfg, B, max_len)
+        img_kv = (B, cfg.n_img_tokens, cfg.n_kv_heads, cfg.head_dim)
+        cache["self_k"] = z((n_units, n_self) + kv)
+        cache["self_v"] = z((n_units, n_self) + kv)
+        cache["cross_k"] = z((n_units,) + img_kv)
+        cache["cross_v"] = z((n_units,) + img_kv)
+    elif cfg.family == "ssm":
+        L, d, Dh = cfg.n_layers, cfg.d_model, cfg.rwkv_head_dim
+        H = d // Dh
+        cache["wkv"] = jnp.zeros((L, B, H, Dh, Dh), jnp.float32)
+        cache["shift_tm"] = z((L, B, d))
+        cache["shift_cm"] = z((L, B, d))
+    elif cfg.family == "hybrid":
+        n_units, n_tail = zamba_units(cfg)
+        u = cfg.shared_attn_every
+        d_in = cfg.ssm_expand * cfg.d_model
+        H = d_in // cfg.ssm_head_dim
+        conv_dim = d_in + 2 * cfg.ssm_state
+        ssm = (B, H, cfg.ssm_state, cfg.ssm_head_dim)
+        conv = (B, mamba2.CONV_K - 1, conv_dim)
+        cache["ssm"] = jnp.zeros((n_units, u) + ssm, jnp.float32)
+        cache["conv"] = z((n_units, u) + conv)
+        kv = _kv_shape(cfg, B, max_len)
+        cache["shared_k"] = z((n_units,) + kv)
+        cache["shared_v"] = z((n_units,) + kv)
+        cache["x0"] = z((B, cfg.d_model))           # embedding residual stream
+        if n_tail:
+            cache["tail_ssm"] = jnp.zeros((n_tail,) + ssm, jnp.float32)
+            cache["tail_conv"] = z((n_tail,) + conv)
+    else:
+        raise ValueError(cfg.family)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# prefill
+# ---------------------------------------------------------------------------
+
+def _pad_to(x, L: int, axis: int):
+    pad = L - x.shape[axis]
+    if pad <= 0:
+        return x[tuple(slice(None) if i != axis else slice(0, L)
+                       for i in range(x.ndim))]
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _window_tail(kv, w: int):
+    """Keep the last min(S, w) positions, padded/rolled into a w-ring."""
+    k, v = kv
+    S = k.shape[1]
+    if S <= w:
+        return _pad_to(k, w, 1), _pad_to(v, w, 1)
+    # ring layout: slot i holds token t ≡ i (mod w) — matches decode_step
+    idx = jnp.arange(S - w, S)
+    slots = jnp.mod(idx, w)
+    kw = jnp.zeros((k.shape[0], w) + k.shape[2:], k.dtype).at[:, slots].set(
+        k[:, idx])
+    vw = jnp.zeros_like(kw).at[:, slots].set(v[:, idx])
+    return kw, vw
+
+
+def prefill(cfg: ModelConfig, params: dict, batch: dict, max_len: int):
+    """Run the full prompt, returning (last-position logits, primed cache)."""
+    x = embed(cfg, params, batch)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    seg = params["segments"]
+    cache = init_cache(cfg, B, max_len)
+    cache["length"] = jnp.asarray(S, jnp.int32)
+    pad_kv = lambda kv: (_pad_to(kv[0], max_len, 1), _pad_to(kv[1], max_len, 1))
+
+    if cfg.family in ("dense", "moe", "audio") and not cfg.local_per_global:
+        def body(x, lp):
+            x, _, kv = _attn_block(cfg, lp, x, positions, collect_kv=True)
+            return _constrain_act(x), pad_kv(kv)
+        x, kvs = jax.lax.scan(body, x, seg["unit"])
+        cache["k"], cache["v"] = kvs
+
+    elif cfg.local_per_global:
+        n_units, n_tail = gemma_units(cfg)
+        w = _win(cfg, max_len)
+        thetas = (cfg.rope_theta, cfg.rope_theta_global or cfg.rope_theta)
+
+        def unit_body(x, up):
+            def loc(x, lp):
+                x, _, kv = _attn_block(cfg, lp, x, positions,
+                                       window=cfg.sliding_window,
+                                       theta=thetas[0], collect_kv=True)
+                return _constrain_act(x), _window_tail(kv, w)
+            x, lkv = jax.lax.scan(loc, x, up["local"])
+            x, _, gkv = _attn_block(cfg, up["global"], x, positions,
+                                    theta=thetas[1], collect_kv=True)
+            return _constrain_act(x), (lkv, pad_kv(gkv))
+        x, (lkvs, gkvs) = jax.lax.scan(unit_body, x, seg["unit"])
+        cache["local_k"], cache["local_v"] = lkvs
+        cache["global_k"], cache["global_v"] = gkvs
+        if n_tail:
+            def tail_body(x, lp):
+                x, _, kv = _attn_block(cfg, lp, x, positions,
+                                       window=cfg.sliding_window,
+                                       theta=thetas[0], collect_kv=True)
+                return _constrain_act(x), _window_tail(kv, w)
+            x, tkvs = jax.lax.scan(tail_body, x, seg["tail"])
+            cache["tail_k"], cache["tail_v"] = tkvs
+
+    elif cfg.family == "vlm":
+        img = batch["img_embeds"].astype(x.dtype)
+
+        def unit_body(x, up):
+            def one_self(x, lp):
+                x, _, kv = _attn_block(cfg, lp, x, positions, collect_kv=True)
+                return _constrain_act(x), pad_kv(kv)
+            x, skv = jax.lax.scan(one_self, x, up["self"])
+            ckv = _img_kv(cfg, up["cross"], img)
+            x = _cross_block_cached(cfg, up["cross"], x, ckv)
+            return _constrain_act(x), (skv, ckv)
+        x, (skvs, ckvs) = jax.lax.scan(unit_body, x, seg["unit"])
+        cache["self_k"], cache["self_v"] = skvs
+        cache["cross_k"], cache["cross_v"] = ckvs
+
+    elif cfg.family == "ssm":
+        _, norm = _norm_fns(cfg)
+        x = norm(params["ln0"], x)
+
+        def body(x, lp):
+            x, st = _rwkv_block(cfg, lp, x, None)
+            return _constrain_act(x), st
+        x, sts = jax.lax.scan(body, x, seg["unit"])
+        cache["wkv"], cache["shift_tm"], cache["shift_cm"] = (
+            sts.wkv, sts.shift_tm, sts.shift_cm)
+
+    elif cfg.family == "hybrid":
+        x0 = x
+        cache["x0"] = x0[:, -1, :]
+
+        def unit_body(x, up):
+            def one_mamba(x, lp):
+                x, st = _mamba_block(cfg, lp, x, None)
+                return _constrain_act(x), st
+            x, msts = jax.lax.scan(one_mamba, x, up["mamba"])
+            x, kv = _shared_block(cfg, params["shared"], x, x0, positions,
+                                  collect_kv=True)
+            return _constrain_act(x), (msts, pad_kv(kv))
+        x, (msts, skvs) = jax.lax.scan(unit_body, x, seg["unit"])
+        cache["ssm"], cache["conv"] = msts.ssm, msts.conv
+        cache["shared_k"], cache["shared_v"] = skvs
+        if "tail" in seg:
+            def tail_body(x, lp):
+                x, st = _mamba_block(cfg, lp, x, None)
+                return _constrain_act(x), st
+            x, tsts = jax.lax.scan(tail_body, x, seg["tail"])
+            cache["tail_ssm"], cache["tail_conv"] = tsts.ssm, tsts.conv
+    else:
+        raise ValueError(cfg.family)
+
+    _, norm = _norm_fns(cfg)
+    hidden = norm(params["final_norm"], x)
+    return logits_last(cfg, params, hidden), cache
+
+
+# ---------------------------------------------------------------------------
+# decode (one token)
+# ---------------------------------------------------------------------------
+
+def _dec_attn(cfg: ModelConfig, p, x, pos, k, v, length, *, window=0,
+              theta=0.0, d_model=0):
+    acfg = _attn_cfg(cfg, window=window, theta=theta, d_model=d_model)
+    _, norm = _norm_fns(cfg)
+    kvc = attention.KVCache(k=k, v=v, length=length)
+    a, kvc = attention.decode_step(p["attn"], acfg, norm(p["ln1"], x), pos, kvc)
+    x = x + a
+    h = norm(p["ln2"], x)
+    if "moe" in p:
+        f, _ = moe_mod.moe(p["moe"], h, cfg.experts_per_tok,
+                           cfg.capacity_factor, cfg.act,
+                           dispatch=cfg.moe_dispatch)
+    else:
+        f = mlp_mod.mlp(p["mlp"], h, cfg.act)
+    return x + f, kvc.k, kvc.v
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache: dict, batch: dict):
+    """One-token step.  batch: {"tokens": (B,1)} or {"frames": (B,1,d)}.
+    Returns ((B, V) logits, updated cache)."""
+    length = cache["length"]
+    x = embed(cfg, params, dict(batch, positions=None))
+    B = x.shape[0]
+    pos = jnp.broadcast_to(length[None, None], (B, 1)).astype(jnp.int32)
+    if cfg.pos == "sinusoidal":                     # embed() used position 0
+        x = x - layers.sinusoidal_positions(jnp.zeros((B, 1), jnp.int32),
+                                            cfg.d_model).astype(x.dtype)
+        x = x + layers.sinusoidal_positions(pos, cfg.d_model).astype(x.dtype)
+    seg = params["segments"]
+    new = dict(cache)
+
+    if cfg.family in ("dense", "moe", "audio") and not cfg.local_per_global:
+        def body(x, inp):
+            lp, k, v = inp
+            x, k, v = _dec_attn(cfg, lp, x, pos, k, v, length)
+            return x, (k, v)
+        x, (ks, vs) = jax.lax.scan(body, x, (seg["unit"], cache["k"],
+                                             cache["v"]))
+        new["k"], new["v"] = ks, vs
+
+    elif cfg.local_per_global:
+        thetas = (cfg.rope_theta, cfg.rope_theta_global or cfg.rope_theta)
+
+        def unit_body(x, inp):
+            up, lk, lv, gk, gv = inp
+            def loc(x, i2):
+                lp, k, v = i2
+                x, k, v = _dec_attn(cfg, lp, x, pos, k, v, length,
+                                    window=cfg.sliding_window, theta=thetas[0])
+                return x, (k, v)
+            x, (lk, lv) = jax.lax.scan(loc, x, (up["local"], lk, lv))
+            x, gk, gv = _dec_attn(cfg, up["global"], x, pos, gk, gv, length,
+                                  theta=thetas[1])
+            return x, (lk, lv, gk, gv)
+        x, (lk, lv, gk, gv) = jax.lax.scan(
+            unit_body, x, (seg["unit"], cache["local_k"], cache["local_v"],
+                           cache["global_k"], cache["global_v"]))
+        new["local_k"], new["local_v"] = lk, lv
+        new["global_k"], new["global_v"] = gk, gv
+        if "tail" in seg:
+            def tail(x, i2):
+                lp, k, v = i2
+                x, k, v = _dec_attn(cfg, lp, x, pos, k, v, length,
+                                    window=cfg.sliding_window, theta=thetas[0])
+                return x, (k, v)
+            x, (tk, tv) = jax.lax.scan(tail, x, (seg["tail"], cache["tail_k"],
+                                                 cache["tail_v"]))
+            new["tail_k"], new["tail_v"] = tk, tv
+
+    elif cfg.family == "vlm":
+        def unit_body(x, inp):
+            up, sk, sv, ck, cv = inp
+            def one_self(x, i2):
+                lp, k, v = i2
+                x, k, v = _dec_attn(cfg, lp, x, pos, k, v, length)
+                return x, (k, v)
+            x, (sk, sv) = jax.lax.scan(one_self, x, (up["self"], sk, sv))
+            x = _cross_block_cached(cfg, up["cross"], x, (ck, cv))
+            return x, (sk, sv)
+        x, (sk, sv) = jax.lax.scan(
+            unit_body, x, (seg["unit"], cache["self_k"], cache["self_v"],
+                           cache["cross_k"], cache["cross_v"]))
+        new["self_k"], new["self_v"] = sk, sv
+
+    elif cfg.family == "ssm":
+        _, norm = _norm_fns(cfg)
+        x = norm(params["ln0"], x)
+
+        def body(x, inp):
+            lp, wkv, stm, scm = inp
+            o, sh_tm, wkv = rwkv6.time_mix_decode(
+                lp["tmix"], norm(lp["ln1"], x), stm, wkv, cfg.rwkv_head_dim)
+            x = x + o
+            o, sh_cm = rwkv6.channel_mix(lp["cmix"], norm(lp["ln2"], x), scm)
+            x = x + o
+            return x, (wkv, sh_tm, sh_cm)
+        x, (wkv, stm, scm) = jax.lax.scan(
+            body, x, (seg["unit"], cache["wkv"], cache["shift_tm"],
+                      cache["shift_cm"]))
+        new["wkv"], new["shift_tm"], new["shift_cm"] = wkv, stm, scm
+
+    elif cfg.family == "hybrid":
+        _, norm = _norm_fns(cfg)
+        x0 = x[:, 0, :]                      # current token's embedding
+        new["x0"] = x0
+        x0b = x0[:, None, :]
+
+        def mamba_dec(x, i2):
+            lp, ssm, conv = i2
+            o, st = mamba2.mamba_decode(
+                lp["mamba"], norm(lp["ln"], x),
+                mamba2.MambaState(ssm=ssm, conv=conv), cfg.d_model,
+                cfg.ssm_state, cfg.ssm_head_dim, cfg.ssm_expand)
+            return x + o, (st.ssm, st.conv)
+
+        def unit_body(x, inp):
+            up, ssm, conv, sk, sv = inp
+            x, (ssm, conv) = jax.lax.scan(mamba_dec, x,
+                                          (up["mamba"], ssm, conv))
+            # shared block decode (width 2d) against its KV cache
+            d2 = 2 * cfg.d_model
+            acfg = _attn_cfg(cfg, d_model=d2)
+            h2 = jnp.concatenate([x, x0b], axis=-1)
+            kvc = attention.KVCache(k=sk, v=sv, length=length)
+            a, kvc = attention.decode_step(
+                params["shared"]["attn"], acfg,
+                norm(params["shared"]["ln1"], h2), pos, kvc)
+            h2 = h2 + a
+            h2 = h2 + mlp_mod.mlp(params["shared"]["mlp"],
+                                  norm(params["shared"]["ln2"], h2), cfg.act)
+            x = x + jnp.einsum(
+                "bse,ed->bsd", h2,
+                params["shared"]["shared_proj"].astype(x.dtype))
+            return x, (ssm, conv, kvc.k, kvc.v)
+        x, (ssm, conv, sk, sv) = jax.lax.scan(
+            unit_body, x, (seg["unit"], cache["ssm"], cache["conv"],
+                           cache["shared_k"], cache["shared_v"]))
+        new["ssm"], new["conv"] = ssm, conv
+        new["shared_k"], new["shared_v"] = sk, sv
+        if "tail" in seg:
+            x, (tssm, tconv) = jax.lax.scan(
+                mamba_dec, x, (seg["tail"], cache["tail_ssm"],
+                               cache["tail_conv"]))
+            new["tail_ssm"], new["tail_conv"] = tssm, tconv
+    else:
+        raise ValueError(cfg.family)
+
+    _, norm = _norm_fns(cfg)
+    hidden = norm(params["final_norm"], x)
+    new["length"] = length + 1
+    return logits_last(cfg, params, hidden), new

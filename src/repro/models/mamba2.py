@@ -1,0 +1,187 @@
+"""Mamba-2 (SSD, arXiv:2405.21060) — chunked state-space duality form.
+
+The selective-SSM recurrence (per head, A scalar)
+    h_t = e^{dt_t·A}·h_{t−1} + dt_t·B_t ⊗ x_t ,   y_t = C_t·h_t + D·x_t
+is evaluated chunk-parallel: within a chunk the (c × c) decay kernel
+L[t,j] = e^{cumA_t − cumA_j} (j ≤ t, always ≤ 1 — unconditionally stable
+exponents, unlike RWKV's per-channel decays) turns the recurrence into two
+matmuls; across chunks a scan carries the (H, N, P) state.  This is the
+attention-free mixer of the zamba2-7b hybrid; decode is O(1)-state.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+CHUNK = 64
+CONV_K = 4
+
+
+def init_mamba_params(key, d_model: int, d_state: int, head_dim: int = 64,
+                      expand: int = 2, param_dtype=jnp.float32) -> dict:
+    d_inner = expand * d_model
+    H = d_inner // head_dim
+    G = 1                                    # single B/C group
+    conv_dim = d_inner + 2 * G * d_state
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": layers.dense_init(
+            ks[0], (d_model, 2 * d_inner + 2 * G * d_state + H), param_dtype),
+        "conv_w": layers.dense_init(ks[1], (CONV_K, conv_dim), param_dtype),
+        "conv_b": jnp.zeros((conv_dim,), param_dtype),
+        "A_log": jnp.zeros((H,), param_dtype),        # A = −exp(A_log) = −1 init
+        "D": jnp.ones((H,), param_dtype),
+        "dt_bias": jnp.zeros((H,), param_dtype),
+        "norm_scale": jnp.ones((d_inner,), param_dtype),
+        "out_proj": layers.dense_init(ks[2], (d_inner, d_model), param_dtype),
+    }
+
+
+class MambaState(NamedTuple):
+    ssm: jnp.ndarray        # (B, H, N, P) f32
+    conv: jnp.ndarray       # (B, CONV_K−1, conv_dim) ring of last inputs
+
+
+def init_mamba_state(batch: int, d_model: int, d_state: int,
+                     head_dim: int = 64, expand: int = 2,
+                     dtype=jnp.bfloat16) -> MambaState:
+    d_inner = expand * d_model
+    H = d_inner // head_dim
+    conv_dim = d_inner + 2 * d_state
+    return MambaState(
+        ssm=jnp.zeros((batch, H, d_state, head_dim), jnp.float32),
+        conv=jnp.zeros((batch, CONV_K - 1, conv_dim), dtype))
+
+
+def _split_proj(p, x, d_model, d_state, head_dim, expand):
+    d_inner = expand * d_model
+    H = d_inner // head_dim
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * d_state], axis=-1)
+    return z, xbc, dt, d_inner, H
+
+
+def _causal_conv(p, xbc, prev=None):
+    """Depthwise causal conv, k=4.  prev: (B, k−1, C) history for decode."""
+    dt = xbc.dtype
+    w = p["conv_w"].astype(dt)                         # (K, C)
+    if prev is None:
+        pad = jnp.zeros((xbc.shape[0], CONV_K - 1, xbc.shape[-1]), dt)
+    else:
+        pad = prev
+    xp = jnp.concatenate([pad, xbc], axis=1)           # (B, S+K−1, C)
+    out = sum(xp[:, i:i + xbc.shape[1]] * w[i] for i in range(CONV_K))
+    return jax.nn.silu(out + p["conv_b"].astype(dt)), xp[:, -(CONV_K - 1):]
+
+
+def ssd_chunked(x, dt_h, A, Bm, Cm, state):
+    """x (B,S,H,P); dt_h (B,S,H) post-softplus; A (H,)≤0 log-decay rate;
+    Bm/Cm (B,S,N); state (B,H,N,P) f32.  Returns (y, new_state).
+
+    ``named_scope("ssd_tile")``: tile traffic attributed for the roofline's
+    kernelized memory term (a Pallas SSD kernel keeps the (c×c) decay tile
+    and state in VMEM — same structure as kernels/rwkv6_wkv.py)."""
+    with jax.named_scope("ssd_tile"):
+        return _ssd_chunked_impl(x, dt_h, A, Bm, Cm, state)
+
+
+def _ssd_chunked_impl(x, dt_h, A, Bm, Cm, state):
+    Bsz, S, H, Pd = x.shape
+    N = Bm.shape[-1]
+    assert S % CHUNK == 0
+    nc = S // CHUNK
+    dt = x.dtype
+
+    xc = x.reshape(Bsz, nc, CHUNK, H, Pd).swapaxes(0, 1)
+    dtc = dt_h.reshape(Bsz, nc, CHUNK, H).swapaxes(0, 1)
+    Bc = Bm.reshape(Bsz, nc, CHUNK, N).swapaxes(0, 1)
+    Cc = Cm.reshape(Bsz, nc, CHUNK, N).swapaxes(0, 1)
+
+    def body(h, inp):
+        xx, dd, BB, CC = inp                            # (B,c,H,P),(B,c,H),(B,c,N)
+        xx32 = xx.astype(jnp.float32)
+        dd32 = dd.astype(jnp.float32)
+        BB32 = BB.astype(jnp.float32)
+        CC32 = CC.astype(jnp.float32)
+        dA = dd32 * A[None, None, :]                    # (B,c,H) ≤ 0
+        cumA = jnp.cumsum(dA, axis=1)                   # inclusive
+        # decay kernel L[t,j] = e^{cumA_t − cumA_j}, j ≤ t (≤ 1 always)
+        L = jnp.exp(cumA[:, :, None, :] - cumA[:, None, :, :])   # (B,c,c,H)
+        tri = jnp.tril(jnp.ones((CHUNK, CHUNK), bool))
+        L = jnp.where(tri[None, :, :, None], L, 0.0)
+        # scores (C_t · B_j) shared across heads (G=1)
+        G_tj = jnp.einsum("btn,bjn->btj", CC32, BB32)   # (B,c,c)
+        M = G_tj[..., None] * L                         # (B,c,c,H)
+        y = jnp.einsum("btjh,bjh,bjhp->bthp", M, dd32, xx32)
+        # inter-chunk: y += C_t · e^{cumA_t} · h
+        decay_in = jnp.exp(cumA)                        # (B,c,H)
+        y = y + jnp.einsum("btn,bth,bhnp->bthp", CC32, decay_in, h)
+        # state: h' = e^{cumA_last}·h + Σ_j e^{cumA_last−cumA_j}·dt_j·B_j ⊗ x_j
+        decay_out = jnp.exp(cumA[:, -1:, :] - cumA)     # (B,c,H) ≤ 1
+        h_new = (jnp.exp(cumA[:, -1])[:, :, None, None] * h
+                 + jnp.einsum("bjn,bjh,bjhp->bhnp", BB32, decay_out * dd32, xx32))
+        return h_new, y.astype(dt)
+
+    state, y = jax.lax.scan(body, state, (xc, dtc, Bc, Cc))
+    return y.swapaxes(0, 1).reshape(Bsz, S, H, Pd), state
+
+
+def mamba_layer(p: dict, x: jnp.ndarray, d_model: int, d_state: int,
+                head_dim: int = 64, expand: int = 2,
+                state: MambaState | None = None):
+    """Full-sequence Mamba2 mixer.  x (B,S,d) → (y, new_state)."""
+    B_, S, _ = x.shape
+    z, xbc, dtp, d_inner, H = _split_proj(p, x, d_model, d_state, head_dim, expand)
+    conv_prev = state.conv if state is not None else None
+    xbc, conv_tail = _causal_conv(p, xbc, conv_prev)
+    xs, Bm, Cm = jnp.split(xbc, [d_inner, d_inner + d_state], axis=-1)
+    xs = xs.reshape(B_, S, H, head_dim)
+    dt_h = jax.nn.softplus(dtp.astype(jnp.float32)
+                           + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    pad = (-S) % CHUNK
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt_h = jnp.pad(dt_h, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+
+    ssm0 = state.ssm if state is not None else jnp.zeros(
+        (B_, H, d_state, head_dim), jnp.float32)
+    y, ssm = ssd_chunked(xs, dt_h, A, Bm, Cm, ssm0)
+    y = y[:, :S] + p["D"].astype(y.dtype)[None, None, :, None] * xs[:, :S]
+    y = y.reshape(B_, S, d_inner)
+    # gated RMSNorm (Mamba2's norm(y)·silu(z), zeros-free scale=ones init)
+    y = layers.rmsnorm({"scale": p["norm_scale"] - 1.0}, y) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype))
+    new_state = MambaState(ssm=ssm, conv=conv_tail)
+    return out, new_state
+
+
+def mamba_decode(p: dict, x: jnp.ndarray, state: MambaState, d_model: int,
+                 d_state: int, head_dim: int = 64, expand: int = 2):
+    """One-token recurrence.  x (B,1,d)."""
+    B_ = x.shape[0]
+    z, xbc, dtp, d_inner, H = _split_proj(p, x, d_model, d_state, head_dim, expand)
+    xbc, conv_tail = _causal_conv(p, xbc, state.conv)
+    xs, Bm, Cm = jnp.split(xbc, [d_inner, d_inner + d_state], axis=-1)
+    xs32 = xs.reshape(B_, H, head_dim).astype(jnp.float32)
+    dt_h = jax.nn.softplus(dtp.astype(jnp.float32)
+                           + p["dt_bias"].astype(jnp.float32))[:, 0]   # (B,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt_h * A[None, :])                                    # (B,H)
+    B32 = Bm[:, 0].astype(jnp.float32)                                 # (B,N)
+    C32 = Cm[:, 0].astype(jnp.float32)
+    dBx = jnp.einsum("bn,bh,bhp->bhnp", B32, dt_h, xs32)
+    h_new = dA[:, :, None, None] * state.ssm + dBx
+    y = jnp.einsum("bn,bhnp->bhp", C32, h_new)
+    y = y + p["D"].astype(jnp.float32)[None, :, None] * xs32
+    y = y.reshape(B_, 1, d_inner).astype(x.dtype)
+    y = layers.rmsnorm({"scale": p["norm_scale"] - 1.0}, y) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype))
+    return out, MambaState(ssm=h_new, conv=conv_tail)

@@ -1,0 +1,29 @@
+"""Dense feed-forward blocks: (Sw)iGLU-gated and plain two-layer MLPs."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+def init_mlp_params(key, d_model: int, d_ff: int, glu: bool,
+                    param_dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {"wi": layers.dense_init(ks[0], (d_model, d_ff), param_dtype),
+         "wo": layers.dense_init(ks[1], (d_ff, d_model), param_dtype)}
+    if glu:
+        p["wg"] = layers.dense_init(ks[2], (d_model, d_ff), param_dtype)
+    return p
+
+
+def mlp(p: dict, x: jnp.ndarray, act: str = "silu") -> jnp.ndarray:
+    dt = x.dtype
+    fn = layers.activation(act)
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"].astype(dt))
+    if "wg" in p:
+        g = jnp.einsum("bsd,df->bsf", x, p["wg"].astype(dt))
+        h = fn(g) * h
+    else:
+        h = fn(h)
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(dt))

@@ -1,0 +1,187 @@
+"""Mixture-of-Experts FFN: top-k routing with sort-based capacity dispatch.
+
+Dispatch is MegaBlocks-style: the (token × k) expert assignments are sorted
+by expert id and scattered into a per-expert capacity buffer (E, C, d), so
+the expert GEMMs are dense einsums over contiguous buffers — no (tokens, E,
+C) one-hot tensors.  With experts sharded over the 'model' axis (EP), XLA
+SPMD turns the scatter/gather into the expected all-to-alls.
+
+Tokens beyond capacity are dropped (pass-through residual), matching
+capacity-factor MoE training practice; C = ceil(tokens·k/E · capacity_factor).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+def init_moe_params(key, d_model: int, d_ff: int, n_experts: int, glu: bool,
+                    param_dtype) -> dict:
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": layers.dense_init(ks[0], (d_model, n_experts), param_dtype),
+        "wi": layers.dense_init(ks[1], (n_experts, d_model, d_ff), param_dtype,
+                                in_axis=1),
+        "wo": layers.dense_init(ks[2], (n_experts, d_ff, d_model), param_dtype,
+                                in_axis=1),
+    }
+    if glu:
+        p["wg"] = layers.dense_init(ks[3], (n_experts, d_model, d_ff),
+                                    param_dtype, in_axis=1)
+    return p
+
+
+def moe(p: dict, x: jnp.ndarray, n_experts_per_tok: int,
+        capacity_factor: float = 1.25, act: str = "silu",
+        dispatch: str = "global") -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x (B, S, d) → (out, aux_loss).  Load-balance aux loss is Switch-style.
+
+    dispatch:
+      "global"  — one argsort over all B·S·k assignments (baseline).  Under
+                  SPMD with tokens dp-sharded, XLA lowers the global sort to
+                  a collective-permute sorting network and all-reduces the
+                  dp-partial expert buffers — the dominant collective cost of
+                  every MoE train cell (EXPERIMENTS §Perf iteration 2).
+      "rowwise" — sort/capacity per sequence row: the sort vmaps over the
+                  sharded batch dim (zero collectives), expert buffers get a
+                  per-row capacity C_b = ⌈S·k/E·cf⌉, expert GEMMs stay
+                  EP-local; only the (B, E, C_b, d) combine crosses the
+                  model axis.  Trade-off: capacity is enforced per
+                  (row, expert) — marginally more dropping under skewed
+                  routing (same spirit as grouped/hierarchical capacity).
+    """
+    if dispatch == "rowwise":
+        return moe_rowwise(p, x, n_experts_per_tok, capacity_factor, act)
+    B, S, d = x.shape
+    dt = x.dtype
+    E = p["router"].shape[1]
+    k = n_experts_per_tok
+    T = B * S
+    xt = x.reshape(T, d)
+
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                     # (T, E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)             # (T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, -1, keepdims=True), 1e-9)            # renormalize
+
+    # Switch-style load-balancing auxiliary loss
+    density = jnp.mean(jax.nn.one_hot(expert_idx[:, 0], E), axis=0)
+    density_proxy = jnp.mean(probs, axis=0)
+    aux_loss = E * jnp.sum(density * density_proxy)
+
+    # ---- sort-based dispatch -------------------------------------------------
+    C = max(1, int((T * k) / E * capacity_factor + 0.999))
+    flat_e = expert_idx.reshape(T * k)                          # (Tk,)
+    flat_tok = jnp.repeat(jnp.arange(T), k)
+    flat_gate = gate_vals.reshape(T * k)
+
+    order = jnp.argsort(flat_e, stable=True)
+    e_sorted = flat_e[order]
+    tok_sorted = flat_tok[order]
+    gate_sorted = flat_gate[order]
+    # position within the expert's segment
+    seg_start = jnp.searchsorted(e_sorted, jnp.arange(E), side="left")
+    pos_in_e = jnp.arange(T * k) - seg_start[e_sorted]
+    keep = pos_in_e < C
+    slot = jnp.where(keep, e_sorted * C + pos_in_e, E * C)      # overflow slot
+
+    buf = jnp.zeros((E * C + 1, d), dt).at[slot].set(xt[tok_sorted])
+    hidden = buf[:E * C].reshape(E, C, d)
+
+    fn = layers.activation(act)
+    h = jnp.einsum("ecd,edf->ecf", hidden, p["wi"].astype(dt))
+    if "wg" in p:
+        g = jnp.einsum("ecd,edf->ecf", hidden, p["wg"].astype(dt))
+        h = fn(g) * h
+    else:
+        h = fn(h)
+    out_e = jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(dt))   # (E, C, d)
+
+    out_flat = out_e.reshape(E * C, d)
+    gathered = jnp.where(keep[:, None],
+                         out_flat[jnp.clip(slot, 0, E * C - 1)], 0.0)
+    weighted = gathered * gate_sorted[:, None].astype(dt)
+    out = jnp.zeros((T, d), dt).at[tok_sorted].add(weighted)
+    return out.reshape(B, S, d), aux_loss.astype(jnp.float32)
+
+
+def moe_rowwise(p: dict, x: jnp.ndarray, n_experts_per_tok: int,
+                capacity_factor: float = 1.25, act: str = "silu"
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Row-local dispatch (see ``moe`` docstring) — §Perf iteration 2.
+
+    Shardings are PINNED through the dispatch: XLA's propagation otherwise
+    re-shards the per-row sort across the whole mesh and rebuilds the global
+    sorting network this path exists to avoid (measured in §Perf iter 2.4)."""
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed import sharding as shd
+
+    B, S, d = x.shape
+    dt = x.dtype
+    E = p["router"].shape[1]
+    k = n_experts_per_tok
+    C = max(1, int(S * k / E * capacity_factor + 0.999))     # per-row capacity
+
+    mesh = shd.get_mesh()
+    if mesh is not None:
+        dp = shd.dp_axes(mesh)
+        row = lambda t: shd.constrain(t, P(dp, *([None] * (t.ndim - 1))))
+        ep = lambda t: shd.constrain(t, P(dp, "model", *([None] * (t.ndim - 2))))
+    else:
+        row = ep = lambda t: t
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                  # (B, S, E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)          # (B, S, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+
+    density = jnp.mean(jax.nn.one_hot(expert_idx[..., 0], E), axis=(0, 1))
+    density_proxy = jnp.mean(probs, axis=(0, 1))
+    aux_loss = E * jnp.sum(density * density_proxy)
+
+    # ---- per-row sort dispatch (vmapped over the sharded batch dim) --------
+    flat_e = row(expert_idx.reshape(B, S * k))
+    flat_tok = jnp.broadcast_to(jnp.repeat(jnp.arange(S), k)[None],
+                                (B, S * k))
+    flat_gate = row(gate_vals.reshape(B, S * k))
+
+    order = row(jnp.argsort(flat_e, axis=1, stable=True))    # row-local sort
+    e_sorted = row(jnp.take_along_axis(flat_e, order, axis=1))
+    tok_sorted = row(jnp.take_along_axis(flat_tok, order, axis=1))
+    gate_sorted = row(jnp.take_along_axis(flat_gate, order, axis=1))
+    seg_start = jax.vmap(
+        lambda es: jnp.searchsorted(es, jnp.arange(E), side="left"))(e_sorted)
+    pos_in_e = jnp.arange(S * k)[None] - jnp.take_along_axis(
+        seg_start, e_sorted, axis=1)
+    keep = row(pos_in_e < C)
+    slot = row(jnp.where(keep, e_sorted * C + pos_in_e, E * C))
+
+    def scatter_row(xr, tok, sl):
+        return jnp.zeros((E * C + 1, d), dt).at[sl].set(xr[tok])[:E * C]
+    buf = row(jax.vmap(scatter_row)(x, tok_sorted, slot))    # (B, E·C, d)
+    hidden = ep(buf.reshape(B, E, C, d))                     # EP re-shard
+
+    fn = layers.activation(act)
+    h = ep(jnp.einsum("becd,edf->becf", hidden, p["wi"].astype(dt)))
+    if "wg" in p:
+        g = jnp.einsum("becd,edf->becf", hidden, p["wg"].astype(dt))
+        h = ep(fn(g) * h)
+    else:
+        h = ep(fn(h))
+    out_e = ep(jnp.einsum("becf,efd->becd", h, p["wo"].astype(dt)))
+
+    def gather_row(oe, sl, tok, gv, kp):
+        flat = oe.reshape(E * C, d)
+        got = jnp.where(kp[:, None], flat[jnp.clip(sl, 0, E * C - 1)], 0.0)
+        return jnp.zeros((S, d), dt).at[tok].add(got * gv[:, None].astype(dt))
+    out = row(jax.vmap(gather_row)(out_e, slot, tok_sorted, gate_sorted,
+                                   keep))
+    return out, aux_loss.astype(jnp.float32)

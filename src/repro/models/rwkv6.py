@@ -1,0 +1,230 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892): data-dependent decay linear attention.
+
+Time-mix layer: token shift with LoRA-produced data-dependent interpolation
+(µ), data-dependent per-channel decay w_t = exp(−exp(ŵ_t)), bonus u, per-head
+GroupNorm, SiLU output gate.  Channel-mix layer: token-shifted squared-ReLU
+FFN (the classic RWKV channel mix).
+
+The WKV recurrence     S_t = diag(w_t)·S_{t−1} + k_t ⊗ v_t,
+                       o_t = r_t·(S_{t−1} + diag(u)·k_t ⊗ v_t)
+is evaluated in *chunked-parallel* form (FLA-style): within a chunk of length
+c the pairwise decays are a (c × c) matmul in f32; across chunks a scan
+carries the (d_k × d_v) state.  Exponent safety: per-token log-decay is
+clamped to [−LOG_CLAMP, −1e−6] and c = 16, bounding every exponential by
+e^{16·LOG_CLAMP} < f32 max (DESIGN.md hardware-adaptation notes).
+
+Decode is the O(1)-state recurrence — no KV cache, which is why the
+``long_500k`` cell is trivially runnable for this architecture.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+LOG_CLAMP = 5.0
+CHUNK = 16
+LORA_MIX = 32
+LORA_DECAY = 64
+
+
+def init_rwkv_params(key, d_model: int, head_dim: int, param_dtype) -> dict:
+    H = d_model // head_dim
+    ks = jax.random.split(key, 12)
+    d = d_model
+    return {
+        # token-shift interpolation: base µ per component + data-dependent LoRA
+        "mu_base": jnp.zeros((5, d), param_dtype),          # r,k,v,w,g
+        "mu_x": jnp.zeros((d,), param_dtype),
+        "maa_w1": layers.dense_init(ks[0], (d, 5 * LORA_MIX), param_dtype),
+        "maa_w2": 0.0 * layers.dense_init(ks[1], (5, LORA_MIX, d), param_dtype,
+                                          in_axis=1),
+        # projections
+        "wr": layers.dense_init(ks[2], (d, d), param_dtype),
+        "wk": layers.dense_init(ks[3], (d, d), param_dtype),
+        "wv": layers.dense_init(ks[4], (d, d), param_dtype),
+        "wg": layers.dense_init(ks[5], (d, d), param_dtype),
+        "wo": layers.dense_init(ks[6], (d, d), param_dtype),
+        # data-dependent decay
+        "w0": jnp.full((d,), -1.0, param_dtype),            # base log-log decay
+        "dec_w1": layers.dense_init(ks[7], (d, LORA_DECAY), param_dtype),
+        "dec_w2": 0.0 * layers.dense_init(ks[8], (LORA_DECAY, d), param_dtype),
+        # bonus
+        "u": jnp.zeros((H, head_dim), param_dtype),
+        # per-head output GroupNorm
+        "ln_x_scale": jnp.ones((H, head_dim), param_dtype),
+        "ln_x_bias": jnp.zeros((H, head_dim), param_dtype),
+    }
+
+
+def init_channel_mix_params(key, d_model: int, d_ff: int, param_dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.full((d_model,), 0.5, param_dtype),
+        "mu_r": jnp.full((d_model,), 0.5, param_dtype),
+        "wk": layers.dense_init(ks[0], (d_model, d_ff), param_dtype),
+        "wv": layers.dense_init(ks[1], (d_ff, d_model), param_dtype),
+        "wr": layers.dense_init(ks[2], (d_model, d_model), param_dtype),
+    }
+
+
+class RWKVState(NamedTuple):
+    wkv: jnp.ndarray        # (B, H, Dk, Dv) per-layer recurrent state
+    shift_tm: jnp.ndarray   # (B, d) last token (time mix)
+    shift_cm: jnp.ndarray   # (B, d) last token (channel mix)
+
+
+def init_rwkv_state(batch: int, d_model: int, head_dim: int, dtype) -> RWKVState:
+    H = d_model // head_dim
+    return RWKVState(
+        wkv=jnp.zeros((batch, H, head_dim, head_dim), jnp.float32),
+        shift_tm=jnp.zeros((batch, d_model), dtype),
+        shift_cm=jnp.zeros((batch, d_model), dtype))
+
+
+def _data_dependent_mix(p, x, x_prev):
+    """RWKV6 token shift: returns the 5 mixed streams (r,k,v,w,g)."""
+    dt = x.dtype
+    dx = x_prev - x                                             # (B,S,d)
+    xx = x + dx * p["mu_x"].astype(dt)
+    t = jnp.tanh(jnp.einsum("bsd,dm->bsm", xx, p["maa_w1"].astype(dt)))
+    t = t.reshape(*xx.shape[:2], 5, LORA_MIX)
+    delta = jnp.einsum("bsem,emd->bsed", t, p["maa_w2"].astype(dt))
+    mu = p["mu_base"].astype(dt)[None, None] + delta            # (B,S,5,d)
+    return x[:, :, None, :] + dx[:, :, None, :] * mu            # (B,S,5,d)
+
+
+def _decay(p, xw):
+    """Per-token per-channel log decay, clamped for chunk-safe exponentials."""
+    dt = xw.dtype
+    lo = jnp.einsum("bsd,dr->bsr", xw, p["dec_w1"].astype(dt))
+    ww = p["w0"].astype(jnp.float32) + jnp.einsum(
+        "bsr,rd->bsd", jnp.tanh(lo), p["dec_w2"].astype(dt)).astype(jnp.float32)
+    return jnp.clip(-jnp.exp(ww), -LOG_CLAMP, -1e-6)            # (B,S,d) f32
+
+
+def wkv_chunked(r, k, v, logw, u, state):
+    """Chunked-parallel WKV.  r,k,v: (B,S,H,D); logw: (B,S,H,D) f32;
+    u: (H,D); state: (B,H,D,Dv) f32.  Returns (o, new_state).
+
+    The body runs under ``named_scope("wkv_tile")``: its inter-kernel tile
+    traffic lives in VMEM under the Pallas kernel (kernels/rwkv6_wkv.py) —
+    the roofline substitutes the kernel's streaming HBM traffic
+    (EXPERIMENTS §Perf, same attribution as flash attention)."""
+    with jax.named_scope("wkv_tile"):
+        return _wkv_chunked_impl(r, k, v, logw, u, state)
+
+
+def _wkv_chunked_impl(r, k, v, logw, u, state):
+    B, S, H, D = r.shape
+    assert S % CHUNK == 0, "caller pads to a CHUNK multiple"
+    n_chunks = S // CHUNK
+    dt = r.dtype
+
+    def reshape_c(x):
+        return x.reshape(B, n_chunks, CHUNK, H, D).swapaxes(0, 1)
+
+    rc, kc, vc, wc = map(reshape_c, (r, k, v, logw))            # (n,B,c,H,D)
+
+    def body(S_prev, inp):
+        rr, kk, vv, ww = inp                                    # (B,c,H,D)
+        rr32 = rr.astype(jnp.float32)
+        kk32 = kk.astype(jnp.float32)
+        vv32 = vv.astype(jnp.float32)
+        Lc = jnp.cumsum(ww, axis=1)                             # Σ_{s≤t} (B,c,H,D)
+        Lc_prev = Lc - ww                                       # Σ_{s<t}
+        Lc_last = Lc[:, -1:]
+        # intra-chunk pairwise decays: A[t,j] = Σ_d r_t·k_j·e^{Lc_prev_t − Lc_j},
+        # strict lower triangle (exponent ≤ 0 ⇔ j < t after clamping)
+        q_t = rr32 * jnp.exp(Lc_prev)                           # ≤ e^0
+        k_in = kk32 * jnp.exp(-Lc)                              # ≤ e^{c·clamp}
+        A = jnp.einsum("bthd,bjhd->bhtj", q_t, k_in)
+        tri = jnp.tril(jnp.ones((CHUNK, CHUNK), bool), k=-1)
+        A = jnp.where(tri[None, None], A, 0.0)
+        o = jnp.einsum("bhtj,bjhd->bthd", A, vv32)
+        # diagonal bonus term: r_t·(u ⊙ k_t) v_t
+        diag = jnp.einsum("bthd,hd,bthd->bth", rr32, u.astype(jnp.float32), kk32)
+        o = o + diag[..., None] * vv32
+        # cross-chunk: r_t·e^{Lc_prev_t} · S_prev
+        o = o + jnp.einsum("bthd,bhdv->bthv", rr32 * jnp.exp(Lc_prev), S_prev)
+        # state update: S_new = e^{Lc_last} ⊙ S + Σ_j (k_j e^{Lc_last−Lc_j}) ⊗ v_j
+        k_out = kk32 * jnp.exp(Lc_last - Lc)                    # ≤ e^0
+        S_new = (jnp.exp(Lc_last)[:, 0, :, :, None] * S_prev
+                 + jnp.einsum("bjhd,bjhv->bhdv", k_out, vv32))
+        return S_new, o.astype(dt)
+
+    state, o = jax.lax.scan(body, state, (rc, kc, vc, wc))
+    return o.swapaxes(0, 1).reshape(B, S, H, D), state
+
+
+def time_mix(p: dict, x: jnp.ndarray, shift: jnp.ndarray, wkv_state,
+             head_dim: int):
+    """Full-sequence RWKV6 attention replacement.  x (B,S,d)."""
+    B, S, d = x.shape
+    H = d // head_dim
+    dt = x.dtype
+    x_prev = jnp.concatenate([shift[:, None, :], x[:, :-1]], axis=1)
+    mixed = _data_dependent_mix(p, x, x_prev)                   # (B,S,5,d)
+    xr, xk, xv, xw, xg = [mixed[:, :, i] for i in range(5)]
+
+    r = jnp.einsum("bsd,de->bse", xr, p["wr"].astype(dt)).reshape(B, S, H, head_dim)
+    k = jnp.einsum("bsd,de->bse", xk, p["wk"].astype(dt)).reshape(B, S, H, head_dim)
+    v = jnp.einsum("bsd,de->bse", xv, p["wv"].astype(dt)).reshape(B, S, H, head_dim)
+    g = jnp.einsum("bsd,de->bse", xg, p["wg"].astype(dt))
+    logw = _decay(p, xw).reshape(B, S, H, head_dim)
+
+    pad = (-S) % CHUNK
+    if pad:
+        zp = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = zp(r), zp(k), zp(v)
+        logw = jnp.pad(logw, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                       constant_values=-1e-6)
+    o, new_state = wkv_chunked(r, k, v, logw, p["u"], wkv_state)
+    o = o[:, :S]
+
+    o = layers.groupnorm_heads(o, p["ln_x_scale"], p["ln_x_bias"])
+    o = o.reshape(B, S, d) * jax.nn.silu(g)
+    out = jnp.einsum("bsd,de->bse", o, p["wo"].astype(dt))
+    return out, x[:, -1, :], new_state
+
+
+def time_mix_decode(p: dict, x: jnp.ndarray, shift: jnp.ndarray, wkv_state,
+                    head_dim: int):
+    """One-token recurrence (decode).  x (B,1,d)."""
+    B, _, d = x.shape
+    H = d // head_dim
+    dt = x.dtype
+    x_prev = shift[:, None, :]
+    mixed = _data_dependent_mix(p, x, x_prev)
+    xr, xk, xv, xw, xg = [mixed[:, :, i] for i in range(5)]
+    r = jnp.einsum("bsd,de->bse", xr, p["wr"].astype(dt)).reshape(B, H, head_dim)
+    k = jnp.einsum("bsd,de->bse", xk, p["wk"].astype(dt)).reshape(B, H, head_dim)
+    v = jnp.einsum("bsd,de->bse", xv, p["wv"].astype(dt)).reshape(B, H, head_dim)
+    g = jnp.einsum("bsd,de->bse", xg, p["wg"].astype(dt))[:, 0]
+    logw = _decay(p, xw).reshape(B, H, head_dim)
+
+    r32, k32, v32 = (a.astype(jnp.float32) for a in (r, k, v))
+    u32 = p["u"].astype(jnp.float32)
+    # o = r·(S + u ⊙ k ⊗ v);  S' = e^{logw} ⊙ S + k ⊗ v
+    kv = jnp.einsum("bhd,bhv->bhdv", k32, v32)
+    o = jnp.einsum("bhd,bhdv->bhv", r32, wkv_state + u32[None, :, :, None] * kv)
+    new_state = jnp.exp(logw)[..., None] * wkv_state + kv
+    o = layers.groupnorm_heads(o.astype(dt), p["ln_x_scale"], p["ln_x_bias"])
+    o = o.reshape(B, d) * jax.nn.silu(g)
+    out = jnp.einsum("bd,de->be", o, p["wo"].astype(dt))
+    return out[:, None, :], x[:, -1, :], new_state
+
+
+def channel_mix(p: dict, x: jnp.ndarray, shift: jnp.ndarray):
+    dt = x.dtype
+    x_prev = jnp.concatenate([shift[:, None, :], x[:, :-1]], axis=1)
+    xk = x + (x_prev - x) * p["mu_k"].astype(dt)
+    xr = x + (x_prev - x) * p["mu_r"].astype(dt)
+    kk = jnp.square(jax.nn.relu(
+        jnp.einsum("bsd,df->bsf", xk, p["wk"].astype(dt))))
+    vv = jnp.einsum("bsf,fd->bsd", kk, p["wv"].astype(dt))
+    rr = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["wr"].astype(dt)))
+    return rr * vv, x[:, -1, :]

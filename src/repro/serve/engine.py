@@ -1,0 +1,95 @@
+"""Batched serving engine: prefill + decode with sharded KV caches.
+
+``make_serve_step`` / ``make_prefill`` are what the dry-run lowers for the
+``prefill_32k`` / ``decode_32k`` / ``long_500k`` cells:
+
+  * batch shards over the DP axes; KV heads over ``model`` (TP);
+  * ``long_500k`` (global_batch=1) cannot absorb DP, so the KV *sequence*
+    dim shards over ``data`` — split-K / flash-decoding-style attention whose
+    softmax max/sum reductions become psums (SP — DESIGN.md §7);
+  * greedy sampling on-device; the host loop batches requests and swaps
+    finished sequences (continuous batching at the step granularity).
+
+The engine is deliberately step-synchronous: one jitted ``decode_step`` per
+token over the whole batch — the production idiom for TPU serving.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed import sharding
+from repro.models import lm
+
+
+def make_prefill(cfg: ModelConfig, max_len: int,
+                 mesh: Optional[jax.sharding.Mesh] = None):
+    def prefill(params, batch):
+        if mesh is not None:
+            sharding.set_mesh(mesh)
+        return lm.prefill(cfg, params, batch, max_len)
+    return prefill
+
+
+def make_serve_step(cfg: ModelConfig,
+                    mesh: Optional[jax.sharding.Mesh] = None,
+                    greedy: bool = True):
+    """(params, cache, batch) → (next_token (B,1), logits, cache)."""
+    def step(params, cache, batch):
+        if mesh is not None:
+            sharding.set_mesh(mesh)
+        logits, cache = lm.decode_step(cfg, params, cache, batch)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return nxt, logits, cache
+    return step
+
+
+def serve_shardings(cfg: ModelConfig, mesh, cache_abstract, batch: int):
+    """NamedShardings for (cache,) under the serving layout."""
+    specs = sharding.cache_specs(cache_abstract, mesh, batch)
+    return jax.tree_util.tree_map(
+        lambda s: jax.sharding.NamedSharding(mesh, s), specs,
+        is_leaf=lambda s: isinstance(s, jax.sharding.PartitionSpec))
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray              # (S,) int32
+    max_new_tokens: int = 32
+    out: Optional[np.ndarray] = None
+
+
+class Engine:
+    """Minimal batched greedy engine for the examples (CPU-sized configs)."""
+
+    def __init__(self, cfg: ModelConfig, params, max_len: int = 256):
+        self.cfg, self.params, self.max_len = cfg, params, max_len
+        self._prefill = jax.jit(
+            lambda p, b: lm.prefill(cfg, p, b, max_len))
+        self._step = jax.jit(make_serve_step(cfg))
+
+    def generate(self, requests: List[Request]) -> List[Request]:
+        cfg = self.cfg
+        B = len(requests)
+        S = max(len(r.prompt) for r in requests)
+        toks = np.zeros((B, S), np.int32)
+        for i, r in enumerate(requests):                 # left-pad-free: right align
+            toks[i, S - len(r.prompt):] = r.prompt
+        batch = {"tokens": jnp.asarray(toks)}
+        last_logits, cache = self._prefill(self.params, batch)
+        nxt = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)[:, None]
+        outs = [list() for _ in range(B)]
+        n_steps = max(r.max_new_tokens for r in requests)
+        for _ in range(n_steps):
+            for i in range(B):
+                outs[i].append(int(nxt[i, 0]))
+            nxt, _, cache = self._step(self.params, cache,
+                                       {"tokens": nxt})
+        for i, r in enumerate(requests):
+            r.out = np.asarray(outs[i][: r.max_new_tokens], np.int32)
+        return requests

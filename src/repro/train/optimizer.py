@@ -1,0 +1,108 @@
+"""AdamW with decoupled weight decay and global-norm clipping — from scratch
+(this container has no optax), sharded states.
+
+Optimizer moments are f32 pytrees mirroring the params; their shardings are
+the *same specs as the params* (the FSDP idiom: states live wherever their
+weight shard lives), so the dry-run's memory analysis reflects a real
+sharded-optimizer deployment.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+class OptState(NamedTuple):
+    mu: dict          # first moment  (f32, sharded like params)
+    nu: dict          # second moment (f32, sharded like params)
+    step: jnp.ndarray  # () int32
+
+
+def init_opt_state(params) -> OptState:
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return OptState(mu=zeros,
+                    nu=jax.tree_util.tree_map(jnp.copy, zeros),
+                    step=jnp.zeros((), jnp.int32))
+
+
+def lr_schedule(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear warmup → cosine decay to min_lr_frac·lr."""
+    s = step.astype(jnp.float32)
+    warm = s / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((s - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(s < cfg.warmup_steps, warm, cos)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in jax.tree_util.tree_leaves(tree)))
+
+
+def _decayable(path: str) -> bool:
+    """No decay on norms/scalars/biases (path-suffix heuristic)."""
+    last = path.rsplit("/", 1)[-1]
+    return not (last.startswith("ln") or "norm" in last or "scale" in last
+                or last.startswith("b") and len(last) <= 2
+                or last.startswith("gate") or last in ("u", "w0", "D",
+                                                       "A_log", "dt_bias"))
+
+
+def adamw_update(cfg: AdamWConfig, params, grads, state: OptState):
+    """Returns (new_params, new_state, metrics)."""
+    from repro.distributed.sharding import tree_paths
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    step = state.step + 1
+    lr = lr_schedule(cfg, step)
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    paths = tree_paths(params)
+    decay_mask = {p: _decayable(p) for p in paths}
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(state.mu)
+    flat_nu = treedef.flatten_up_to(state.nu)
+    path_list = list(paths.keys())
+
+    new_p, new_mu, new_nu = [], [], []
+    for p, g, mu, nu, path in zip(flat_p, flat_g, flat_mu, flat_nu, path_list):
+        g32 = g.astype(jnp.float32) * scale
+        mu = b1 * mu + (1 - b1) * g32
+        nu = b2 * nu + (1 - b2) * jnp.square(g32)
+        upd = (mu / bc1) / (jnp.sqrt(nu / bc2) + cfg.eps)
+        if decay_mask[path] and cfg.weight_decay > 0:
+            upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        new_p.append((p.astype(jnp.float32) - lr * upd).astype(p.dtype))
+        new_mu.append(mu)
+        new_nu.append(nu)
+
+    params2 = jax.tree_util.tree_unflatten(treedef, new_p)
+    mu2 = jax.tree_util.tree_unflatten(treedef, new_mu)
+    nu2 = jax.tree_util.tree_unflatten(treedef, new_nu)
+    return params2, OptState(mu=mu2, nu=nu2, step=step), {
+        "grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,14 @@
+"""Test-session config.
+
+x64 is enabled globally: the CMA-ES core follows the paper's double-precision
+reference C code (tolerances down to 1e-12).  All model/training code passes
+explicit dtypes (bf16/f32) and is unaffected.
+
+NOTE: XLA_FLAGS / host-device-count overrides are deliberately NOT set here —
+smoke tests and benches must see the real single CPU device.  Multi-device
+tests spawn subprocesses (see tests/test_strategies.py) or use
+``jax.make_mesh`` on 1 device.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)

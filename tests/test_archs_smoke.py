@@ -1,0 +1,142 @@
+"""Per-architecture smoke tests: reduced config of the same family, one
+forward + loss + grad step and a prefill→decode roundtrip on CPU.
+
+Asserts output shapes, finiteness (no NaNs), and prefill/decode logits
+consistency where the math guarantees it.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, smoke_config
+from repro.models import lm
+from repro.distributed import sharding
+
+
+def _batch_for(cfg, B, S, key):
+    ks = jax.random.split(key, 3)
+    batch = {}
+    if cfg.embed_inputs:
+        batch["tokens"] = jax.random.randint(ks[0], (B, S), 0, cfg.vocab)
+    else:
+        batch["frames"] = jax.random.normal(ks[0], (B, S, cfg.d_model),
+                                            jnp.bfloat16)
+    if cfg.family == "vlm":
+        batch["img_embeds"] = jax.random.normal(
+            ks[1], (B, cfg.n_img_tokens, cfg.d_model), jnp.bfloat16)
+    batch["labels"] = jax.random.randint(ks[2], (B, S), 0, cfg.vocab)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_and_loss(arch):
+    cfg = smoke_config(arch)
+    key = jax.random.PRNGKey(0)
+    params = lm.init_params(cfg, key)
+    B, S = 2, 64
+    batch = _batch_for(cfg, B, S, jax.random.PRNGKey(1))
+
+    hidden, aux = jax.jit(lambda p, b: lm.forward(cfg, p, b))(params, batch)
+    assert hidden.shape == (B, S, cfg.d_model)
+    assert bool(jnp.all(jnp.isfinite(hidden.astype(jnp.float32))))
+
+    val, metrics = jax.jit(lambda p, b: lm.loss(cfg, p, b))(params, batch)
+    assert np.isfinite(float(val))
+    # random init + uniform labels ⇒ CE ≈ ln(vocab)
+    assert 0.0 < float(metrics["ce"]) < 3.0 * np.log(cfg.vocab)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_grad_step(arch):
+    cfg = smoke_config(arch)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch_for(cfg, 2, 32, jax.random.PRNGKey(1))
+
+    def loss_fn(p):
+        return lm.loss(cfg, p, batch)[0]
+
+    g = jax.jit(jax.grad(loss_fn))(params)
+    leaves = jax.tree_util.tree_leaves(g)
+    assert all(bool(jnp.all(jnp.isfinite(l.astype(jnp.float32))))
+               for l in leaves)
+    # at least one non-zero gradient leaf
+    assert any(float(jnp.max(jnp.abs(l.astype(jnp.float32)))) > 0
+               for l in leaves)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_consistency(arch):
+    """decode(token S) after prefill(0..S−1) ≈ forward(0..S) at position S."""
+    cfg = smoke_config(arch)
+    if cfg.n_experts:
+        # MoE capacity dropping is batch-dependent (forward routes B·S tokens,
+        # decode routes B) — give every expert full capacity so no token is
+        # ever dropped and the paths are mathematically identical.
+        import dataclasses
+        cfg = dataclasses.replace(
+            cfg, capacity_factor=float(cfg.n_experts) / cfg.experts_per_tok)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    B, S, max_len = 2, 33, 64
+    full = _batch_for(cfg, B, S, jax.random.PRNGKey(1))
+    pre = {k: (v[:, :S - 1] if k in ("tokens", "frames") else v)
+           for k, v in full.items() if k != "labels"}
+    step = {k: (v[:, S - 1:S] if k in ("tokens", "frames") else v)
+            for k, v in full.items() if k != "labels"}
+
+    _, cache = jax.jit(lambda p, b: lm.prefill(cfg, p, b, max_len))(params, pre)
+    assert int(cache["length"]) == S - 1
+    logits_dec, cache = jax.jit(
+        lambda p, c, b: lm.decode_step(cfg, p, c, b))(params, cache, step)
+    assert int(cache["length"]) == S
+
+    hidden, _ = lm.forward(cfg, params, {k: v for k, v in full.items()
+                                         if k != "labels"})
+    logits_ref = lm.logits_last(cfg, params, hidden)
+    assert logits_dec.shape == (B, cfg.vocab)
+    np.testing.assert_allclose(np.asarray(logits_dec, np.float32),
+                               np.asarray(logits_ref, np.float32),
+                               rtol=0.15, atol=0.15)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_param_count(arch):
+    """The production config's analytic size is in the published ballpark."""
+    cfg = get_config(arch)
+    n = cfg.n_params()
+    expected = {
+        "musicgen-large": (1.5e9, 3.0e9),
+        "qwen2-0.5b": (0.3e9, 0.8e9),
+        "phi3-mini-3.8b": (3.0e9, 4.5e9),
+        "gemma3-27b": (20e9, 32e9),
+        "gemma3-4b": (3.0e9, 6.0e9),
+        "rwkv6-3b": (2.0e9, 4.0e9),
+        # NOTE: the assignment's exact dims (48L × 64e × d_ff 1408) total ~28B;
+        # the "16b" in the name matches Moonlight's config only with fewer MoE
+        # layers.  Spec dims take precedence (DESIGN.md §5); active ≈ 3B ✓.
+        "moonshot-v1-16b-a3b": (24e9, 31e9),
+        "phi3.5-moe-42b-a6.6b": (38e9, 46e9),
+        "zamba2-7b": (5.5e9, 9.0e9),
+        "llama-3.2-vision-90b": (80e9, 100e9),
+    }[arch]
+    assert expected[0] < n < expected[1], f"{arch}: {n/1e9:.2f}B params"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_sharding_specs_cover_big_leaves(arch):
+    """Every large leaf of the smoke param tree gets a non-trivial spec on a
+    4×2 mesh (divisibility fallback must not silently replicate everything)."""
+    cfg = smoke_config(arch)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    mesh = jax.sharding.Mesh(
+        np.asarray(jax.devices() * 8)[:8].reshape(4, 2), ("data", "model"))
+    specs = sharding.param_specs(params, mesh)
+    flat_p = sharding.tree_paths(params)
+    flat_s = sharding.tree_paths(specs)
+    n_sharded = 0
+    for path, leaf in flat_p.items():
+        spec = flat_s[path]
+        assert len(spec) == leaf.ndim or spec == jax.sharding.PartitionSpec()
+        if any(a is not None for a in spec):
+            n_sharded += 1
+    assert n_sharded >= 3, f"{arch}: only {n_sharded} sharded leaves"

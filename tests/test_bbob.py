@@ -1,0 +1,110 @@
+"""BBOB suite tests: optimum consistency, batching, transforms, CMA-ES solves."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cmaes
+from repro.core.params import CMAConfig, make_params
+from repro.fitness import bbob
+from repro.fitness.surrogates import with_flops_cost
+
+ALL_FIDS = list(range(1, 25))
+
+
+@pytest.mark.parametrize("fid", ALL_FIDS)
+@pytest.mark.parametrize("n", [2, 10, 40])
+def test_optimum_value(fid, n):
+    """f(x_opt) == f_opt for every function and dimension."""
+    inst = bbob.make_instance(fid, n, instance=0)
+    val = bbob.evaluate(fid, inst, inst.x_opt[None, :])
+    np.testing.assert_allclose(float(val[0]), float(inst.f_opt),
+                               rtol=1e-9, atol=1e-9)
+
+
+@pytest.mark.parametrize("fid", ALL_FIDS)
+def test_optimum_is_local_min(fid):
+    """Random perturbations never beat the optimum."""
+    n = 10
+    inst = bbob.make_instance(fid, n, instance=1)
+    key = jax.random.PRNGKey(fid)
+    # stay inside the domain so boundary penalties don't mask regressions
+    pert = jax.random.uniform(key, (256, n), jnp.float64, -0.5, 0.5)
+    X = jnp.clip(inst.x_opt[None, :] + pert, -5.0, 5.0)
+    vals = bbob.evaluate(fid, inst, X)
+    assert float(jnp.min(vals)) >= float(inst.f_opt) - 1e-9
+
+
+@pytest.mark.parametrize("fid", ALL_FIDS)
+def test_batch_and_jit(fid):
+    n = 6
+    fn, inst = bbob.make_fitness(fid, n)
+    X = jax.random.uniform(jax.random.PRNGKey(0), (32, n), jnp.float64, -5, 5)
+    vals = jax.jit(fn)(X)
+    assert vals.shape == (32,)
+    assert bool(jnp.all(jnp.isfinite(vals)))
+    # single-row and batch agree
+    np.testing.assert_allclose(np.asarray(jax.jit(fn)(X[3:4]))[0],
+                               np.asarray(vals)[3], rtol=1e-12)
+
+
+def test_instances_differ():
+    a = bbob.make_instance(8, 10, instance=0)
+    b = bbob.make_instance(8, 10, instance=1)
+    assert not np.allclose(np.asarray(a.x_opt), np.asarray(b.x_opt))
+
+
+def test_rotation_orthogonal():
+    inst = bbob.make_instance(10, 40)
+    R = np.asarray(inst.R)
+    np.testing.assert_allclose(R @ R.T, np.eye(40), atol=1e-10)
+
+
+def test_t_osz_fixed_points():
+    # T_osz(0) = 0, sign-preserving, monotone-ish on small values
+    x = jnp.asarray([-2.0, -1e-8, 0.0, 1e-8, 2.0])
+    y = bbob.t_osz(x)
+    assert float(y[2]) == 0.0
+    assert bool(jnp.all(jnp.sign(y) == jnp.sign(x)))
+
+
+def test_t_asy_identity_below_zero():
+    x = jnp.asarray([-3.0, -0.1, 0.0])
+    np.testing.assert_allclose(np.asarray(bbob.t_asy(x, 0.2)), np.asarray(x))
+
+
+def test_f_pen_zero_inside_domain():
+    x = jnp.asarray([[4.9, -4.9, 0.0]])
+    assert float(bbob.f_pen(x)[0]) == 0.0
+    x = jnp.asarray([[5.5, 0.0, 0.0]])
+    np.testing.assert_allclose(float(bbob.f_pen(x)[0]), 0.25)
+
+
+def test_gallagher_peak_count():
+    i21 = bbob.make_instance(21, 5)
+    i22 = bbob.make_instance(22, 5)
+    assert i21.peaks_y.shape[0] == 101
+    assert i22.peaks_y.shape[0] == 21
+
+
+@pytest.mark.parametrize("fid", [1, 2, 5, 8, 10, 11, 12, 14])
+def test_cmaes_solves_unimodal_bbob(fid):
+    """CMA-ES reaches target 1e-8 on the unimodal functions (paper's easy set)."""
+    n = 6
+    fn, inst = bbob.make_fitness(fid, n)
+    cfg = CMAConfig(n=n, lam=16)
+    p = make_params(cfg)
+    key = jax.random.PRNGKey(fid * 11)
+    x0 = jax.random.uniform(key, (n,), jnp.float64, -4, 4)
+    final = cmaes.run(cfg, p, fn, jax.random.PRNGKey(fid), x0, 2.0,
+                      max_gens=1500)
+    err = float(final.best_f) - float(inst.f_opt)
+    assert err < 1e-8, f"f{fid}: residual {err}"
+
+
+def test_flops_cost_wrapper_preserves_values():
+    fn, inst = bbob.make_fitness(1, 4)
+    wrapped = with_flops_cost(fn, extra_flops=1e6)
+    X = jax.random.uniform(jax.random.PRNGKey(0), (8, 4), jnp.float64, -5, 5)
+    np.testing.assert_allclose(np.asarray(wrapped(X)), np.asarray(fn(X)),
+                               rtol=1e-12)

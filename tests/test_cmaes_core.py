@@ -1,0 +1,170 @@
+"""Unit + convergence tests for the CMA-ES core (paper Alg. 1 / §3.1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cmaes, stopping
+from repro.core.params import CMAConfig, make_params
+
+
+def sphere(x):
+    return jnp.sum(x ** 2, axis=-1)
+
+
+def rosenbrock(x):
+    return jnp.sum(100.0 * (x[..., 1:] - x[..., :-1] ** 2) ** 2
+                   + (1.0 - x[..., :-1]) ** 2, axis=-1)
+
+
+def elli(x):
+    n = x.shape[-1]
+    scales = 10.0 ** (6.0 * jnp.arange(n) / (n - 1))
+    return jnp.sum(scales * x ** 2, axis=-1)
+
+
+class TestParams:
+    def test_weights_sum_to_one(self):
+        for lam in (8, 12, 48, 3072):
+            p = make_params(CMAConfig(n=10, lam=lam))
+            np.testing.assert_allclose(float(jnp.sum(p.weights)), 1.0, rtol=1e-12)
+
+    def test_weights_decreasing_positive(self):
+        p = make_params(CMAConfig(n=10, lam=12))
+        w = np.asarray(p.weights)
+        mu = int(p.mu)
+        assert np.all(np.diff(w[:mu]) < 0) and np.all(w[:mu] > 0)
+        assert np.all(w[mu:] == 0)
+
+    def test_padded_lambda(self):
+        cfg = CMAConfig(n=10, lam=12, lam_max=96)
+        p = make_params(cfg, lam=24)
+        assert p.weights.shape == (96,)
+        assert int(p.lam) == 24
+        np.testing.assert_allclose(float(jnp.sum(p.weights)), 1.0, rtol=1e-12)
+
+    def test_learning_rates_sane(self):
+        for n in (2, 10, 40, 200, 1000):
+            p = make_params(CMAConfig(n=n, lam=12))
+            assert 0 < float(p.c_sigma) < 1
+            assert 0 < float(p.c_c) < 1
+            assert 0 < float(p.c_1) + float(p.c_mu) < 1
+            assert float(p.d_sigma) >= 1
+
+    def test_chi_n(self):
+        p = make_params(CMAConfig(n=1000, lam=12))
+        # E||N(0,I_n)|| ~ sqrt(n - 0.5) for large n
+        assert abs(float(p.chi_n) - np.sqrt(1000)) < 1.0
+
+
+class TestStepMechanics:
+    def test_mean_moves_toward_better_points(self):
+        cfg = CMAConfig(n=4, lam=16)
+        p = make_params(cfg)
+        key = jax.random.PRNGKey(0)
+        st = cmaes.init_state(cfg, key, 3.0 * jnp.ones(4), 1.0)
+        st2 = cmaes.step(cfg, p, st, sphere, jax.random.PRNGKey(1))
+        # one generation on the sphere from (3,3,3,3): mean should move closer to 0
+        assert float(sphere(st2.m)) < float(sphere(st.m))
+        assert int(st2.gen) == 1
+        assert int(st2.fevals) == 16
+
+    def test_covariance_spd_and_symmetric(self):
+        cfg = CMAConfig(n=6, lam=12)
+        p = make_params(cfg)
+        st = cmaes.init_state(cfg, jax.random.PRNGKey(0), jnp.ones(6), 0.5)
+        for i in range(30):
+            st = cmaes.step(cfg, p, st, rosenbrock, jax.random.PRNGKey(i + 1))
+        C = np.asarray(st.C)
+        np.testing.assert_allclose(C, C.T, atol=1e-12)
+        assert np.all(np.linalg.eigvalsh(C) > 0)
+
+    def test_masked_update_freezes_stopped_descent(self):
+        cfg = CMAConfig(n=4, lam=8)
+        p = make_params(cfg)
+        st = cmaes.init_state(cfg, jax.random.PRNGKey(0), jnp.ones(4), 0.3)
+        st = st._replace(stop=jnp.asarray(True))
+        st2 = cmaes.step(cfg, p, st, sphere, jax.random.PRNGKey(1))
+        np.testing.assert_array_equal(np.asarray(st.m), np.asarray(st2.m))
+        assert int(st2.gen) == 0
+
+    def test_rank_weights_match_sort(self):
+        cfg = CMAConfig(n=4, lam=8)
+        p = make_params(cfg)
+        f = jnp.asarray([5.0, 1.0, 3.0, 2.0, 9.0, 0.5, 7.0, 4.0])
+        w = cmaes.rank_weights(f, p)
+        order = np.argsort(np.asarray(f))
+        expected = np.zeros(8)
+        expected[order] = np.asarray(p.weights)[:8]
+        np.testing.assert_allclose(np.asarray(w), expected, rtol=1e-12)
+
+    def test_masked_fitness_gets_zero_weight(self):
+        cfg = CMAConfig(n=4, lam=8)
+        p = make_params(cfg)
+        f = jnp.asarray([5.0, jnp.inf, 3.0, 2.0, jnp.inf, 0.5, 7.0, 4.0])
+        w = cmaes.rank_weights(f, p)
+        assert float(w[1]) == 0.0 and float(w[4]) == 0.0
+
+
+class TestConvergence:
+    @pytest.mark.parametrize("n,lam,gens", [(4, 12, 250), (10, 16, 500)])
+    def test_sphere(self, n, lam, gens):
+        cfg = CMAConfig(n=n, lam=lam)
+        p = make_params(cfg)
+        final = cmaes.run(cfg, p, sphere, jax.random.PRNGKey(42),
+                          2.0 * jnp.ones(n), 1.0, max_gens=gens)
+        assert float(final.best_f) < 1e-10
+
+    def test_rosenbrock_10d(self):
+        cfg = CMAConfig(n=10, lam=24)
+        p = make_params(cfg)
+        final = cmaes.run(cfg, p, rosenbrock, jax.random.PRNGKey(3),
+                          jnp.zeros(10), 0.5, max_gens=1200)
+        assert float(final.best_f) < 1e-8
+
+    def test_high_conditioning_elli(self):
+        cfg = CMAConfig(n=8, lam=16)
+        p = make_params(cfg)
+        final = cmaes.run(cfg, p, elli, jax.random.PRNGKey(7),
+                          jnp.ones(8), 0.5, max_gens=1500)
+        assert float(final.best_f) < 1e-8
+
+    def test_larger_population_same_machinery(self):
+        # IPOP regime: λ = 2^5·12 = 384 on a padded width — one descent still works
+        cfg = CMAConfig(n=6, lam=384, lam_max=384)
+        p = make_params(cfg)
+        final = cmaes.run(cfg, p, sphere, jax.random.PRNGKey(0),
+                          jnp.ones(6), 0.5, max_gens=80)
+        assert float(final.best_f) < 1e-10
+
+
+class TestStopping:
+    def test_tolfun_triggers_on_converged_sphere(self):
+        cfg = CMAConfig(n=4, lam=12)
+        p = make_params(cfg)
+        final = cmaes.run(cfg, p, sphere, jax.random.PRNGKey(0),
+                          jnp.ones(4), 0.5, max_gens=2000)
+        assert bool(final.stop)
+        reason = int(final.stop_reason)
+        assert reason & (stopping.TOLFUN | stopping.TOLFUNHIST | stopping.TOLX)
+
+    def test_maxiter(self):
+        cfg = CMAConfig(n=4, lam=12, max_iter=5)
+        p = make_params(cfg)
+        final = cmaes.run(cfg, p, sphere, jax.random.PRNGKey(0),
+                          jnp.ones(4), 0.5, max_gens=10)
+        assert bool(final.stop)
+        assert int(final.stop_reason) & stopping.MAXITER
+        assert int(final.gen) <= 10
+
+    def test_flat_function_stops(self):
+        cfg = CMAConfig(n=4, lam=12)
+        p = make_params(cfg)
+        flat = lambda x: jnp.zeros(x.shape[0], x.dtype)
+        final = cmaes.run(cfg, p, flat, jax.random.PRNGKey(0),
+                          jnp.ones(4), 0.5, max_gens=500)
+        assert bool(final.stop)  # TolUpSigma / TolFun on flat landscape
+
+    def test_reason_to_str(self):
+        s = stopping.reason_to_str(stopping.TOLFUN | stopping.TOLX)
+        assert "TolFun" in s and "TolX" in s

@@ -1,0 +1,86 @@
+"""Pallas kernel ↔ pure-jnp oracle allclose sweeps (interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.cma_sample import cma_sample
+from repro.kernels.cma_update import cma_rank_mu_update
+
+SHAPES = [  # (lam, n)
+    (8, 4), (12, 10), (24, 40), (48, 130), (96, 200), (12, 257), (384, 64),
+]
+DTYPES = [jnp.float32, jnp.float64]
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, dtype=dtype)
+
+
+@pytest.mark.parametrize("lam,n", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_cma_sample_matches_ref(lam, n, dtype):
+    k = jax.random.split(jax.random.PRNGKey(lam * 1000 + n), 4)
+    m = _rand(k[0], (n,), dtype)
+    B = _rand(k[1], (n, n), dtype)
+    D = jnp.abs(_rand(k[2], (n,), dtype)) + 0.1
+    Z = _rand(k[3], (lam, n), dtype)
+    sigma = jnp.asarray(0.37, dtype)
+    got = cma_sample(m, sigma, B, D, Z, interpret=True)
+    want = ref.sample_points(m, sigma, B, D, Z)
+    tol = 1e-5 if dtype == jnp.float32 else 1e-6  # kernel accumulates in f32
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol * 10)
+
+
+@pytest.mark.parametrize("lam,n", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_cma_rank_mu_update_matches_ref(lam, n, dtype):
+    k = jax.random.split(jax.random.PRNGKey(lam * 7 + n), 4)
+    C = _rand(k[0], (n, n), dtype)
+    C = C @ C.T / n + jnp.eye(n, dtype=dtype)
+    Y = _rand(k[1], (lam, n), dtype)
+    w = jnp.abs(_rand(k[2], (lam,), dtype))
+    w = w / jnp.sum(w)
+    p_c = _rand(k[3], (n,), dtype)
+    decay, c_mu, c_1 = 0.9, 0.08, 0.02
+    got = cma_rank_mu_update(C, Y, w, p_c, decay, c_mu, c_1, interpret=True)
+    want = ref.rank_mu_update(C, Y, w, p_c,
+                              jnp.asarray(decay, dtype), jnp.asarray(c_mu, dtype),
+                              jnp.asarray(c_1, dtype))
+    tol = 1e-5 if dtype == jnp.float32 else 1e-6
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol * 10)
+
+
+def test_update_zero_weights_padding_no_effect():
+    """Padded population slots (w=0) must not change the result."""
+    lam, n, pad = 12, 16, 20
+    k = jax.random.split(jax.random.PRNGKey(0), 4)
+    C = jnp.eye(n, dtype=jnp.float64)
+    Y = _rand(k[0], (lam, n), jnp.float64)
+    Ypad = jnp.concatenate([Y, 1e6 * jnp.ones((pad, n))])  # garbage rows
+    w = jnp.abs(_rand(k[1], (lam,), jnp.float64))
+    wpad = jnp.concatenate([w, jnp.zeros(pad)])
+    p_c = _rand(k[2], (n,), jnp.float64)
+    a = cma_rank_mu_update(C, Y, w, p_c, 0.9, 0.08, 0.02, interpret=True)
+    b = cma_rank_mu_update(C, Ypad, wpad, p_c, 0.9, 0.08, 0.02, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-12)
+
+
+def test_block_shape_sweep():
+    """Different BlockSpec tilings must agree (shape-edge correctness)."""
+    lam, n = 40, 96
+    k = jax.random.split(jax.random.PRNGKey(5), 3)
+    C = jnp.eye(n, dtype=jnp.float32)
+    Y = _rand(k[0], (lam, n), jnp.float32)
+    w = jnp.ones((lam,), jnp.float32) / lam
+    p_c = _rand(k[1], (n,), jnp.float32)
+    want = ref.rank_mu_update(C, Y, w, p_c, jnp.float32(0.9), jnp.float32(0.08),
+                              jnp.float32(0.02))
+    for bi, bj, bk in [(32, 32, 8), (96, 96, 40), (64, 32, 16), (128, 128, 128)]:
+        got = cma_rank_mu_update(C, Y, w, p_c, 0.9, 0.08, 0.02,
+                                 bi=bi, bj=bj, bk=bk, interpret=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)

@@ -1,0 +1,109 @@
+"""Shape/dtype sweeps for the LM Pallas kernels against the pure-jnp
+oracles (interpret mode on CPU — bit-correct kernel body semantics)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rwkv6_wkv import wkv6_forward, CHUNK
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,H,Hk,D", [
+    (1, 128, 4, 4, 64),       # MHA, one block
+    (2, 256, 4, 2, 64),       # GQA 2:1, multi q/kv blocks
+    (1, 384, 8, 1, 128),      # MQA, non-pow2 seq (padding path)
+    (2, 129, 4, 4, 64),       # ragged seq → q-pad
+])
+def test_flash_attention_causal(dtype, B, S, H, Hk, D):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, S, Hk, D), dtype)
+    v = jax.random.normal(ks[2], (B, S, Hk, D), dtype)
+    got = flash_attention(q, k, v, causal=True, interpret=True)
+    want = ref.flash_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("window", [32, 100, 128])
+def test_flash_attention_sliding_window(window):
+    B, S, H, Hk, D = 1, 256, 4, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, Hk, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, Hk, D), jnp.float32)
+    got = flash_attention(q, k, v, causal=True, window=window,
+                          interpret=True, bq=64, bkv=64)
+    want = ref.flash_attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_block_shape_independence():
+    """Output must not depend on the BlockSpec tiling."""
+    B, S, H, Hk, D = 1, 256, 2, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, Hk, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, Hk, D), jnp.float32)
+    o1 = flash_attention(q, k, v, bq=128, bkv=128, interpret=True)
+    o2 = flash_attention(q, k, v, bq=64, bkv=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,H,D", [
+    (1, CHUNK * 2, 2, 32),
+    (2, CHUNK * 4, 4, 64),
+    (1, CHUNK * 8, 1, 128),
+])
+def test_wkv6_kernel(dtype, B, S, H, D):
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    r = jax.random.normal(ks[0], (B, S, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, S, H, D), dtype)
+    v = jax.random.normal(ks[2], (B, S, H, D), dtype)
+    logw = -jnp.exp(jax.random.normal(ks[3], (B, S, H, D), jnp.float32))
+    logw = jnp.clip(logw, -5.0, -1e-6)
+    u = jax.random.normal(ks[4], (H, D), jnp.float32) * 0.1
+    got = wkv6_forward(r, k, v, logw, u, interpret=True)
+    want = ref.wkv6(r, k, v, logw, u)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=3e-2 if dtype == jnp.bfloat16 else 1e-4,
+                               atol=3e-2 if dtype == jnp.bfloat16 else 1e-4)
+
+
+def test_wkv6_state_carry_matches_sequential():
+    """The kernel's cross-chunk state carry must equal a token-by-token
+    recurrence (the decode path), not just the chunked oracle."""
+    B, S, H, D = 1, CHUNK * 3, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(4), 5)
+    r = jax.random.normal(ks[0], (B, S, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, H, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, H, D), jnp.float32)
+    logw = jnp.clip(-jnp.exp(jax.random.normal(ks[3], (B, S, H, D))),
+                    -5.0, -1e-6).astype(jnp.float32)
+    u = jax.random.normal(ks[4], (H, D), jnp.float32) * 0.1
+
+    got = wkv6_forward(r, k, v, logw, u, interpret=True)
+
+    # sequential recurrence
+    S_state = np.zeros((B, H, D, D), np.float32)
+    outs = np.zeros((B, S, H, D), np.float32)
+    rn, kn, vn, wn = map(np.asarray, (r, k, v, logw))
+    un = np.asarray(u)
+    for t in range(S):
+        kv = np.einsum("bhd,bhe->bhde", kn[:, t], vn[:, t])
+        outs[:, t] = np.einsum("bhd,bhde->bhe", rn[:, t],
+                               S_state + un[None, :, :, None] * kv)
+        S_state = np.exp(wn[:, t])[..., None] * S_state + kv
+    np.testing.assert_allclose(np.asarray(got), outs, rtol=1e-4, atol=1e-4)

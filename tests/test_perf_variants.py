@@ -1,0 +1,62 @@
+"""Correctness of the §Perf optimization paths against their baselines:
+rowwise MoE dispatch, CMA comm schedules, f32-Gram reduction."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.models import lm, moe as moe_mod
+
+
+def test_moe_rowwise_matches_global_when_uncapped():
+    """With capacity ≥ worst case, rowwise and global dispatch are the same
+    mathematical function (per-row capping is the only semantic delta)."""
+    key = jax.random.PRNGKey(0)
+    B, S, d, E, k = 2, 16, 32, 8, 2
+    p = moe_mod.init_moe_params(key, d, 64, E, True, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, d), jnp.float32)
+    cf = float(E) / k                      # capacity == all tokens, no drops
+    out_g, aux_g = moe_mod.moe(p, x, k, cf, dispatch="global")
+    out_r, aux_r = moe_mod.moe(p, x, k, cf, dispatch="rowwise")
+    np.testing.assert_allclose(np.asarray(out_g), np.asarray(out_r),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(float(aux_g), float(aux_r), rtol=1e-5)
+
+
+def test_moe_rowwise_grads_finite_and_learn():
+    cfg = dataclasses.replace(smoke_config("phi3.5-moe-42b-a6.6b"),
+                              moe_dispatch="rowwise", attn_impl="flash")
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 32),
+                                          0, cfg.vocab),
+             "labels": jax.random.randint(jax.random.PRNGKey(2), (2, 32),
+                                          0, cfg.vocab)}
+    val, _ = lm.loss(cfg, params, batch)
+    assert np.isfinite(float(val))
+    g = jax.grad(lambda p: lm.loss(cfg, p, batch)[0])(params)
+    assert all(bool(jnp.all(jnp.isfinite(l.astype(jnp.float32))))
+               for l in jax.tree_util.tree_leaves(g))
+    # router must receive gradient (dispatch is differentiable via gates)
+    gr = g["segments"]["unit"]["moe"]["router"]
+    assert float(jnp.max(jnp.abs(gr))) > 0
+
+
+@pytest.mark.parametrize("kw", [dict(comm="central"),
+                                dict(comm="stacked", gram_dtype="float32")])
+def test_kdist_comm_variants_match_stacked(kw):
+    """All comm schedules compute the same generation mathematically."""
+    from repro.core.strategies import KDistributed
+    from repro.fitness import bbob
+    inst = bbob.make_instance(8, 6, 1)
+    fit = lambda X: bbob.evaluate(8, inst, X)
+
+    ref = KDistributed(n=6, n_devices=8, comm="stacked")
+    var = KDistributed(n=6, n_devices=8, **kw)
+    _, tr_ref = ref.run_sim(jax.random.PRNGKey(0), fit, total_gens=20)
+    _, tr_var = var.run_sim(jax.random.PRNGKey(0), fit, total_gens=20)
+    tol = 1e-3 if kw.get("gram_dtype") else 1e-8
+    np.testing.assert_allclose(tr_ref["best_f"], tr_var["best_f"],
+                               rtol=tol, atol=tol)

@@ -1,0 +1,53 @@
+"""Pipeline parallelism: GPipe schedule correctness vs sequential layers."""
+import json
+import subprocess
+import sys
+
+import numpy as np
+
+from repro.distributed.pipeline import bubble_fraction
+
+
+def test_bubble_fraction_law():
+    assert bubble_fraction(1, 1) == 0.0
+    assert abs(bubble_fraction(4, 2) - 1 / 5) < 1e-12
+    assert bubble_fraction(32, 2) < 0.04
+
+
+PIPE_PROG = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import json, jax, jax.numpy as jnp, numpy as np
+from repro.distributed.pipeline import pipeline_apply
+
+mesh = jax.make_mesh((4,), ("pod",))
+S, M, mb, d = 4, 6, 3, 8
+key = jax.random.PRNGKey(0)
+W = jax.random.normal(key, (S, d, d)) * 0.3
+b = jax.random.normal(jax.random.PRNGKey(1), (S, d)) * 0.1
+params = {"w": W, "b": b}
+xs = jax.random.normal(jax.random.PRNGKey(2), (M, mb, d))
+
+def stage(p, x):
+    return jnp.tanh(x @ p["w"] + p["b"])
+
+got = pipeline_apply(stage, params, xs, mesh, axis="pod")
+
+want = xs
+for s in range(S):
+    want = jnp.tanh(want @ W[s] + b[s])
+
+ok = bool(jnp.allclose(got, want, rtol=1e-5, atol=1e-5))
+print(json.dumps({"ok": ok,
+                  "max_err": float(jnp.max(jnp.abs(got - want)))}))
+"""
+
+
+def test_gpipe_matches_sequential_4_stages():
+    out = subprocess.run([sys.executable, "-c", PIPE_PROG],
+                         capture_output=True, text=True, timeout=300,
+                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                              "HOME": "/root"})
+    assert out.returncode == 0, out.stderr[-2000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["ok"], f"pipeline mismatch: max_err={res['max_err']}"

@@ -1,0 +1,158 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cmaes, eval_dispatch
+from repro.core.params import CMAConfig, make_params
+from repro.distributed.hlo_analyzer import shape_bytes
+from repro.fitness import bbob
+
+SET = dict(deadline=None, max_examples=20)
+
+
+# ---------------------------------------------------------------------------
+# ranking / weights
+# ---------------------------------------------------------------------------
+
+@given(st.lists(st.floats(-1e6, 1e6, allow_subnormal=False), min_size=4,
+                max_size=40, unique=True),
+       st.randoms())
+@settings(**SET)
+def test_rank_weights_permutation_invariant(vals, rnd):
+    """Weights follow fitness RANK: permuting a population of distinct
+    fitnesses permutes the weights identically; total stays 1.  (With ties
+    the tie-break is by slot index, so equivariance holds only up to
+    tied-group weight sums — covered below.  Subnormals excluded: XLA-CPU
+    flushes them to zero, manufacturing ties.)"""
+    f = np.asarray(vals, np.float64)
+    lam = len(f)
+    cfg = CMAConfig(n=4, lam=lam)
+    params = make_params(cfg)
+    w1 = np.asarray(cmaes.rank_weights(jnp.asarray(f), params))
+    perm = np.asarray(rnd.sample(range(lam), lam))
+    w2 = np.asarray(cmaes.rank_weights(jnp.asarray(f[perm]), params))
+    np.testing.assert_allclose(w1[perm], w2, rtol=1e-12)
+    np.testing.assert_allclose(w1.sum(), 1.0, rtol=1e-9)
+
+
+@given(st.lists(st.sampled_from([0.0, 1.0, 2.0]), min_size=4, max_size=24),
+       st.randoms())
+@settings(**SET)
+def test_rank_weights_tied_group_sums_invariant(vals, rnd):
+    """Under ties, the total weight per distinct fitness VALUE is
+    permutation-invariant (individual tied slots may swap weights)."""
+    f = np.asarray(vals, np.float64)
+    lam = len(f)
+    cfg = CMAConfig(n=4, lam=lam)
+    params = make_params(cfg)
+    perm = np.asarray(rnd.sample(range(lam), lam))
+    w1 = np.asarray(cmaes.rank_weights(jnp.asarray(f), params))
+    w2 = np.asarray(cmaes.rank_weights(jnp.asarray(f[perm]), params))
+    for v in np.unique(f):
+        np.testing.assert_allclose(w1[f == v].sum(), w2[f[perm] == v].sum(),
+                                   rtol=1e-12, atol=1e-15)
+
+
+@given(st.lists(st.floats(-100, 100), min_size=2, max_size=24),
+       st.integers(0, 5))
+@settings(**SET)
+def test_local_ranks_match_global_argsort(vals, n_inf):
+    """local_ranks (the distributed path) == centralized argsort ranks,
+    including ties and failed (+inf) evaluations."""
+    f = np.asarray(vals + [np.inf] * n_inf, np.float64)
+    full = jnp.asarray(f)
+    order = np.argsort(f, kind="stable")
+    central = np.empty(len(f), np.int64)
+    central[order] = np.arange(len(f))
+    got = np.asarray(eval_dispatch.local_ranks(full, full,
+                                               jnp.asarray(0)))
+    finite = np.isfinite(f)
+    np.testing.assert_array_equal(got[finite], central[finite])
+
+
+# ---------------------------------------------------------------------------
+# BBOB
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 24), st.integers(2, 12), st.integers(0, 3))
+@settings(**SET)
+def test_bbob_fopt_is_lower_bound(fid, dim, instance):
+    inst = bbob.make_instance(fid, dim, instance)
+    X = np.asarray(jax.random.uniform(
+        jax.random.PRNGKey(fid * 100 + dim), (16, dim),
+        jnp.float64, -5.0, 5.0))
+    vals = np.asarray(bbob.evaluate(fid, inst, jnp.asarray(X)))
+    assert np.all(np.isfinite(vals))
+    assert np.all(vals >= float(inst.f_opt) - 1e-6)
+
+
+# ---------------------------------------------------------------------------
+# chunked CE == full CE
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 3), st.sampled_from([5, 8, 16]),
+       st.sampled_from([3, 8, 64]))
+@settings(**SET)
+def test_chunked_ce_equals_full(B, S, chunk):
+    from repro.configs import smoke_config
+    from repro.models import lm
+    cfg = dataclasses.replace(smoke_config("phi3-mini-3.8b"),
+                              logits_chunk=chunk, dtype="float32")
+    key = jax.random.PRNGKey(S * chunk)
+    hidden = jax.random.normal(key, (B, S, cfg.d_model), jnp.float32)
+    labels = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    got = float(lm.chunked_ce(cfg, params, hidden, labels))
+    head = lm.head_matrix(cfg, params)
+    logits = hidden @ head
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], -1)[..., 0]
+    want = float(jnp.mean(lse - gold))
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# HLO shape parsing
+# ---------------------------------------------------------------------------
+
+@given(st.lists(st.integers(1, 64), min_size=0, max_size=4),
+       st.sampled_from(["f32", "bf16", "s32", "pred", "f64"]))
+@settings(**SET)
+def test_shape_bytes_roundtrip(dims, dt):
+    size = {"f32": 4, "bf16": 2, "s32": 4, "pred": 1, "f64": 8}[dt]
+    n = int(np.prod(dims)) if dims else 1
+    s = f"{dt}[{','.join(map(str, dims))}]{{{0}}}"
+    assert shape_bytes(s) == n * size
+
+
+# ---------------------------------------------------------------------------
+# sharding rules
+# ---------------------------------------------------------------------------
+
+@given(st.sampled_from(["qwen2-0.5b", "rwkv6-3b", "zamba2-7b",
+                        "phi3.5-moe-42b-a6.6b"]))
+@settings(deadline=None, max_examples=4)
+def test_sharded_dims_divide_mesh(arch):
+    from repro.configs import smoke_config
+    from repro.distributed import sharding
+    from repro.models import lm
+    cfg = smoke_config(arch)
+    params = jax.eval_shape(lambda k: lm.init_params(cfg, k),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    mesh = jax.sharding.Mesh(
+        np.asarray(jax.devices() * 8)[:8].reshape(4, 2), ("data", "model"))
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    specs = sharding.param_specs(params, mesh)
+    flat_p = sharding.tree_paths(params)
+    flat_s = sharding.tree_paths(specs)
+    for path, leaf in flat_p.items():
+        for dim, ax in zip(leaf.shape, flat_s[path]):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            total = int(np.prod([sizes[a] for a in axes]))
+            assert dim % total == 0, f"{path}: {dim} vs {axes}"

@@ -1,0 +1,187 @@
+"""Tests for the K-Distributed / K-Replicated mesh schedules (paper §3.2).
+
+Run via the vmap simulation path: bit-identical program to the shard_map
+production path (same per-device code, same named-axis collectives).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cmaes, ipop, strategies
+from repro.core.params import CMAConfig, make_params
+from repro.fitness import bbob
+
+
+def sphere(X):
+    return jnp.sum(X ** 2, axis=-1)
+
+
+class TestHeapLayout:
+    def test_descent_of(self):
+        # devices [0 | 1 2 | 3 4 5 6 | 7..14] → descents 0,1,1,2,2,2,2,3...
+        got = np.asarray(strategies.heap_descent_of(jnp.arange(15), 15))
+        want = [0, 1, 1, 2, 2, 2, 2, 3, 3, 3, 3, 3, 3, 3, 3]
+        np.testing.assert_array_equal(got, want)
+
+    def test_group_sizes_sum(self):
+        kd = strategies.KDistributed(n=4, n_devices=8, lam_start=4, lam_slots=4)
+        assert kd.kmax_exp == 2
+        assert kd.n_active == 7
+        assert kd.n_descents == 3
+
+
+class TestKDistributed:
+    def test_converges_on_sphere(self):
+        kd = strategies.KDistributed(n=4, n_devices=7, lam_start=6, lam_slots=6,
+                                     kmax_exp=2, domain=(-5, 5))
+        carry, trace = kd.run_sim(jax.random.PRNGKey(0), sphere, total_gens=120)
+        assert float(carry.best_f) < 1e-8
+        # best-so-far is monotonically non-increasing
+        bf = trace["best_f"]
+        assert np.all(np.diff(bf) <= 1e-15)
+
+    def test_descent_populations(self):
+        kd = strategies.KDistributed(n=4, n_devices=7, lam_start=6, lam_slots=6,
+                                     kmax_exp=2)
+        lams = np.asarray(kd.sparams.lam)
+        np.testing.assert_array_equal(lams, [6, 12, 24])
+
+    def test_eval_accounting(self):
+        kd = strategies.KDistributed(n=3, n_devices=7, lam_start=4, lam_slots=4,
+                                     kmax_exp=2)
+        carry, trace = kd.run_sim(jax.random.PRNGKey(1), sphere, total_gens=10)
+        # per gen: 4 + 8 + 16 = 28 evaluations
+        assert int(trace["fevals"][-1]) == 28 * 10
+        np.testing.assert_array_equal(np.asarray(carry.fevals), [40, 80, 160])
+
+    def test_replicated_consistency_across_devices(self):
+        """All devices must hold identical carries (SPMD invariant)."""
+        kd = strategies.KDistributed(n=3, n_devices=3, lam_start=4, lam_slots=4,
+                                     kmax_exp=1)
+        carry = kd.init_carry(jax.random.PRNGKey(0))
+        keys = jax.random.split(jax.random.PRNGKey(1), 5)
+        fn = jax.vmap(kd.chunk_fn(sphere, ("ev",), 5), in_axes=(None, None),
+                      out_axes=0, axis_name="ev", axis_size=3)
+        carry_b, _ = fn(carry, keys)
+        for leaf in jax.tree_util.tree_leaves(carry_b):
+            for d in range(1, 3):
+                np.testing.assert_array_equal(np.asarray(leaf[0]),
+                                              np.asarray(leaf[d]))
+
+    def test_distributed_matches_dense_oracle(self):
+        """One distributed generation == dense CMA-ES update on gathered points."""
+        n, lam_start, kmax = 5, 4, 1
+        kd = strategies.KDistributed(n=n, n_devices=3, lam_start=lam_start,
+                                     lam_slots=lam_start, kmax_exp=kmax,
+                                     restart_on_stop=False)
+        carry = kd.init_carry(jax.random.PRNGKey(7))
+        gen_key = jax.random.PRNGKey(13)
+        fn = jax.vmap(kd.chunk_fn(sphere, ("ev",), 1), in_axes=(None, None),
+                      out_axes=0, axis_name="ev", axis_size=3)
+        carry2_b, _ = fn(carry, gen_key[None])
+        carry2 = jax.tree_util.tree_map(lambda a: a[0], carry2_b)
+
+        # dense replay: regenerate each device's points with the same keys
+        for desc, devs in [(0, [0]), (1, [1, 2])]:
+            st0 = jax.tree_util.tree_map(lambda a: a[desc], carry.states)
+            ys, xs = [], []
+            for d in devs:
+                k = jax.random.fold_in(gen_key, d)
+                k = jax.random.fold_in(k, 0)
+                k_s, _ = jax.random.split(k)
+                y, x = cmaes.sample_population(st0, k_s, lam_start)
+                ys.append(y)
+                xs.append(x)
+            Y = jnp.concatenate(ys)
+            X = jnp.concatenate(xs)
+            f = sphere(X)
+            params_d = jax.tree_util.tree_map(lambda a: a[desc], kd.sparams)
+            mom = cmaes.compute_moments(Y, f, X, params_d, kd.lam_max)
+            dense = cmaes.update_from_moments(kd.cfg, params_d, st0, mom)
+            dist = jax.tree_util.tree_map(lambda a: a[desc], carry2.states)
+            np.testing.assert_allclose(np.asarray(dist.m), np.asarray(dense.m),
+                                       rtol=1e-10)
+            np.testing.assert_allclose(np.asarray(dist.C), np.asarray(dense.C),
+                                       rtol=1e-10)
+            np.testing.assert_allclose(np.asarray(dist.sigma),
+                                       np.asarray(dense.sigma), rtol=1e-10)
+
+    def test_restart_in_place(self):
+        """Descents restart with fresh state on a flat function (all criteria fire)."""
+        flat = lambda X: jnp.zeros(X.shape[0], X.dtype)
+        kd = strategies.KDistributed(n=3, n_devices=3, lam_start=4, lam_slots=4,
+                                     kmax_exp=1)
+        carry, trace = kd.run_sim(jax.random.PRNGKey(0), flat, total_gens=400)
+        assert int(np.sum(trace["stopped"])) > 0
+        assert int(np.max(np.asarray(carry.restarts))) >= 1
+
+    def test_straggler_masking_still_converges(self):
+        kd = strategies.KDistributed(n=3, n_devices=7, lam_start=6, lam_slots=6,
+                                     kmax_exp=2, drop_prob=0.25)
+        carry, _ = kd.run_sim(jax.random.PRNGKey(5), sphere, total_gens=150)
+        assert float(carry.best_f) < 1e-6
+
+    def test_shard_map_matches_sim_on_1dev(self):
+        kd = strategies.KDistributed(n=3, n_devices=1, lam_start=8, lam_slots=8,
+                                     kmax_exp=0)
+        c1, t1 = kd.run_sim(jax.random.PRNGKey(2), sphere, total_gens=20)
+        from repro.launch.mesh import make_eval_mesh
+        mesh = make_eval_mesh(1)
+        c2, t2 = kd.run_on_mesh(mesh, jax.random.PRNGKey(2), sphere,
+                                total_gens=20)
+        np.testing.assert_allclose(float(c1.best_f), float(c2.best_f), rtol=1e-12)
+        np.testing.assert_allclose(t1["best_f"], t2["best_f"], rtol=1e-12)
+
+
+class TestKReplicated:
+    def test_phases_progress_and_converge(self):
+        kr = strategies.KReplicated(n=4, n_devices=4, lam_start=6, lam_slots=6)
+        res = kr.run_sim(jax.random.PRNGKey(0), sphere, phase_gens=150)
+        assert res["best_f"] < 1e-8
+        assert len(res["phases"]) >= 1
+        lams = [p["lam"] for p in res["phases"]]
+        assert lams == sorted(lams)  # increasing population phases
+
+    def test_phase_descent_counts(self):
+        kr = strategies.KReplicated(n=3, n_devices=8, lam_start=4, lam_slots=4)
+        cfg, params, G, g = kr.phase_cfg(0)
+        assert (G, g, cfg.lam) == (8, 1, 4)
+        cfg, params, G, g = kr.phase_cfg(3)
+        assert (G, g, cfg.lam) == (1, 8, 32)
+
+    def test_bbob_rastrigin_multistart_beats_single(self):
+        """K-Replicated's many restarts help on multimodal f3 (paper's premise)."""
+        fn, inst = bbob.make_fitness(3, 4, instance=2)
+        kr = strategies.KReplicated(n=4, n_devices=8, lam_start=6, lam_slots=6)
+        res = kr.run_sim(jax.random.PRNGKey(1), fn, phase_gens=120,
+                         phases=[0, 1])
+        err = res["best_f"] - float(inst.f_opt)
+        assert err < 10.0  # multiple parallel descents find a decent basin
+
+    def test_evals_stop_when_descents_stop(self):
+        flat = lambda X: jnp.zeros(X.shape[0], X.dtype)
+        kr = strategies.KReplicated(n=3, n_devices=2, lam_start=4, lam_slots=4)
+        res = kr.run_sim(jax.random.PRNGKey(0), flat, phase_gens=500)
+        ph = res["phases"][0]
+        # once all groups stopped the phase ends (barrier) — trace is finite
+        assert ph["n_stopped"][-1] == ph["n_groups"]
+
+
+class TestSequentialIPOP:
+    def test_ipop_ladder(self):
+        fn, inst = bbob.make_fitness(1, 4)
+        res = ipop.run_ipop(fn, 4, jax.random.PRNGKey(0), lam_start=8,
+                            kmax_exp=2, max_evals=30_000)
+        assert res.best_f - float(inst.f_opt) < 1e-8
+        assert len(res.descents) >= 1
+        lams = [d.lam for d in res.descents]
+        assert lams == sorted(lams)
+
+    def test_hit_evals(self):
+        fn, inst = bbob.make_fitness(1, 4)
+        res = ipop.run_ipop(fn, 4, jax.random.PRNGKey(0), lam_start=8,
+                            kmax_exp=1, max_evals=20_000)
+        hits = res.hit_evals(np.asarray([1e2, 1e-8]), float(inst.f_opt))
+        assert hits[0] <= hits[1]
+        assert np.isfinite(hits[0])
