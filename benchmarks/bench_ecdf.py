@@ -13,8 +13,9 @@ import numpy as np
 from benchmarks.bench_strategies import (TARGETS, kd_hit_times, kr_hit_times,
                                          seq_hit_times)
 from benchmarks.parallel_time import CostModel
+from repro.core import ladder
 from repro.core.ipop import run_ipop
-from repro.core.strategies import KDistributed, KReplicated
+from repro.core.strategies import KReplicated
 from repro.fitness import bbob
 
 
@@ -33,9 +34,9 @@ def collect_hits(fids, dim, devices, cost_ms, runs, gens, max_evals):
             hits["seq"].extend(h)
             ends["seq"] = max(ends["seq"], b)
 
-            kd = KDistributed(n=dim, n_devices=devices)
-            _, tr = kd.run_sim(jax.random.PRNGKey(200 + r), fit,
-                               total_gens=gens)
+            kd, _, tr = ladder.run_concurrent(
+                dim, devices, jax.random.PRNGKey(200 + r), fit,
+                total_gens=gens)
             h, b = kd_hit_times(kd, tr, f_opt, cm, devices)
             hits["kdist"].extend(h)
             ends["kdist"] = max(ends["kdist"], b)

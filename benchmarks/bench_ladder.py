@@ -1,0 +1,103 @@
+"""Host-loop vs device-resident ladder: wall-time and evals/sec.
+
+Runs the same (function, run) members once through the legacy host-driven
+chunked IPOP loop (per-descent dispatch, host-side early exit) and once as a
+single jitted/vmapped ladder campaign, and writes ``BENCH_ladder.json`` so
+the perf trajectory of the ladder engine is recorded per commit.
+
+  PYTHONPATH=src python -m benchmarks.bench_ladder [--dim 10] [--fids 1,8]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np  # noqa: E402
+
+from repro.core import ladder  # noqa: E402
+from repro.core.ipop import run_ipop_hostloop  # noqa: E402
+from repro.fitness import bbob  # noqa: E402
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dim", type=int, default=10)
+    ap.add_argument("--fids", default="1,8")
+    ap.add_argument("--runs", type=int, default=2)
+    ap.add_argument("--lam-start", type=int, default=8)
+    ap.add_argument("--kmax", type=int, default=3)
+    ap.add_argument("--max-evals", type=int, default=12_000)
+    ap.add_argument("--out", default="BENCH_ladder.json")
+    args = ap.parse_args(argv)
+    fids = [int(f) for f in args.fids.split(",")]
+    members = [(fid, r) for fid in fids for r in range(args.runs)]
+
+    # -- host-loop baseline: one python-driven ladder per member --------------
+    t0 = time.perf_counter()
+    host_evals, host_best = 0, []
+    for j, (fid, _r) in enumerate(members):
+        inst = bbob.make_instance(fid, args.dim, 1)
+        fit = lambda X: bbob.evaluate(fid, inst, X)  # noqa: B023
+        res = run_ipop_hostloop(
+            fit, args.dim, jax.random.fold_in(jax.random.PRNGKey(0), j),
+            lam_start=args.lam_start, kmax_exp=args.kmax,
+            max_evals=args.max_evals)
+        host_evals += res.total_fevals
+        host_best.append(res.best_f)
+    host_wall = time.perf_counter() - t0
+
+    # -- device-resident ladder: ONE program for the whole campaign ----------
+    engine = ladder.LadderEngine(
+        n=args.dim, lam_start=args.lam_start, kmax_exp=args.kmax,
+        schedule="sequential", max_evals=args.max_evals)
+    t0 = time.perf_counter()
+    res1 = ladder.run_campaign(engine, fids=fids, instances=(1,),
+                               runs=args.runs, seed=0)
+    jax.block_until_ready(res1.best_f)
+    first_wall = time.perf_counter() - t0          # includes the one compile
+    t0 = time.perf_counter()
+    res2 = ladder.run_campaign(engine, fids=fids, instances=(1,),
+                               runs=args.runs, seed=1)
+    jax.block_until_ready(res2.best_f)
+    steady_wall = time.perf_counter() - t0         # cached executable
+    ladder_evals = int(np.sum(res2.total_fevals))
+
+    out = {
+        "config": {
+            "dim": args.dim, "fids": fids, "runs": args.runs,
+            "lam_start": args.lam_start, "kmax_exp": args.kmax,
+            "max_evals": args.max_evals, "lam_max": engine.lam_max,
+            "members": len(members),
+            "note": "evals/sec counts useful (unpadded) evaluations; the "
+                    "ladder additionally pays lam_max padding on device",
+        },
+        "host_loop": {
+            "wall_s": round(host_wall, 4),
+            "evals": int(host_evals),
+            "evals_per_s": round(host_evals / max(host_wall, 1e-9), 1),
+        },
+        "ladder": {
+            "first_call_wall_s": round(first_wall, 4),
+            "wall_s": round(steady_wall, 4),
+            "evals": ladder_evals,
+            "evals_per_s": round(ladder_evals / max(steady_wall, 1e-9), 1),
+            "compiles": res2.compiles,
+        },
+        "speedup_steady": round(
+            (ladder_evals / max(steady_wall, 1e-9))
+            / max(host_evals / max(host_wall, 1e-9), 1e-9), 3),
+    }
+    with open(args.out, "w") as fh:
+        json.dump(out, fh, indent=2)
+    print(json.dumps(out, indent=2))
+    print(f"[bench_ladder] wrote {args.out}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -10,7 +10,7 @@ import argparse
 import jax
 import numpy as np
 
-from repro.core.strategies import KDistributed
+from repro.core import ladder
 from repro.fitness import bbob
 
 TARGETS = np.array([1e2, 1e1, 1e0, 1e-1, 1e-2])
@@ -51,9 +51,9 @@ def main(argv=None):
         f_opt = float(inst.f_opt)
         acc = []
         for r in range(args.runs):
-            kd = KDistributed(n=args.dim, n_devices=args.devices)
-            _, tr = kd.run_sim(jax.random.PRNGKey(400 + r), fit,
-                               total_gens=args.gens)
+            _, _, tr = ladder.run_concurrent(
+                args.dim, args.devices, jax.random.PRNGKey(400 + r), fit,
+                total_gens=args.gens)
             acc.append(first_descent_to_target(tr, f_opt))
         avg = np.nanmean(np.stack(acc), axis=0)
         cells = [f"{v:.1f}" if np.isfinite(v) else "—" for v in avg]

@@ -13,8 +13,9 @@ import jax
 import numpy as np
 
 from benchmarks.parallel_time import CostModel, ert
+from repro.core import ladder
 from repro.core.ipop import run_ipop
-from repro.core.strategies import KDistributed, KReplicated
+from repro.core.strategies import KReplicated
 from repro.fitness import bbob
 
 TARGETS = np.array([1e2, 1e1, 1e0, 1e-1, 1e-2])
@@ -70,14 +71,16 @@ def run(fids, dim, devices, cost_ms, runs, gens, max_evals):
         seq_h, kd_h, kr_h = [], [], []
         seq_b, kd_b, kr_b = [], [], []
         for r in range(runs):
+            # sequential IPOP: the whole restart ladder as one device program
             res = run_ipop(fit, dim, jax.random.PRNGKey(100 + r),
                            max_evals=max_evals)
             h, b = seq_hit_times(res, f_opt, cm)
             seq_h.append(h); seq_b.append(b)
 
-            kd = KDistributed(n=dim, n_devices=devices)
-            _, tr = kd.run_sim(jax.random.PRNGKey(200 + r), fit,
-                               total_gens=gens)
+            # concurrent rungs on the strategies collectives, single jit
+            kd, _, tr = ladder.run_concurrent(
+                dim, devices, jax.random.PRNGKey(200 + r), fit,
+                total_gens=gens)
             h, b = kd_hit_times(kd, tr, f_opt, cm, devices)
             kd_h.append(h); kd_b.append(b)
 

@@ -1,17 +1,26 @@
 """Benchmark aggregator — one section per paper table/figure + the roofline.
 
-  PYTHONPATH=src python -m benchmarks.run [--full]
+  PYTHONPATH=src python -m benchmarks.run [--full | --smoke]
 
 Default sizes are CI-scale (single CPU core); --full widens dims/functions
 to the paper's ranges (hours on this container, intended for real hardware).
+--smoke runs only the ladder-engine benchmark (a couple of minutes) and
+writes BENCH_ladder.json for the CI artifact.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 
-import jax
+# allow `python benchmarks/run.py` without an editable install
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+import jax  # noqa: E402
 
 jax.config.update("jax_enable_x64", True)
 
@@ -23,11 +32,32 @@ def section(title):
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="ladder bench only; writes BENCH_ladder.json")
     args = ap.parse_args(argv)
     t0 = time.time()
 
-    from benchmarks import (bench_comm_share, bench_ecdf, bench_linalg,
-                            bench_popsize, bench_strategies, roofline)
+    if args.smoke:
+        from benchmarks import bench_ladder
+        section("Smoke — host-loop IPOP vs device-resident ladder")
+        bench_ladder.main(["--dim", "6", "--fids", "1,8", "--runs", "2",
+                           "--lam-start", "8", "--kmax", "2",
+                           "--max-evals", "6000", "--out",
+                           "BENCH_ladder.json"])
+        print(f"\n[benchmarks.run] total {time.time() - t0:.1f}s")
+        return 0
+
+    from benchmarks import (bench_comm_share, bench_ecdf, bench_ladder,
+                            bench_linalg, bench_popsize, bench_strategies,
+                            roofline)
+
+    section("Ladder engine — host-loop vs device-resident (BENCH_ladder.json)")
+    if args.full:
+        bench_ladder.main(["--dim", "40", "--fids", "1,8,15", "--runs", "3",
+                           "--lam-start", "12", "--kmax", "4",
+                           "--max-evals", "60000"])
+    else:
+        bench_ladder.main([])
 
     section("Fig.5/Table 1 — BLAS/GEMM linear-algebra rewrites")
     if args.full:

@@ -1,10 +1,11 @@
 """BBOB campaign: the paper's §4 experiment at laptop scale.
 
-Runs sequential IPOP, K-Replicated and K-Distributed over a set of BBOB
-functions, collects per-(function, target) hitting evaluations, and prints
-a Table-2-style speedup summary (evaluation-parallel time model: a
-generation of a descent with population λ on d devices costs ⌈λ/λ_slots/d⌉
-rounds — the paper's 1-eval-per-core deployment).
+The sequential-IPOP column now runs on the device-resident ladder engine
+(core/ladder.py): every (function, run) member of the campaign is one batch
+row of a single jitted/vmapped scanned program with in-place doubled-λ
+restarts — one compile for the whole table.  K-Distributed runs all rungs
+concurrently on the strategies collectives inside one jit
+(``ladder.run_concurrent``); K-Replicated keeps its phase barriers.
 
   PYTHONPATH=src python examples/bbob_campaign.py [--fids 1,8,10] [--dim 10]
 """
@@ -16,8 +17,8 @@ jax.config.update("jax_enable_x64", True)
 
 import numpy as np
 
-from repro.core.ipop import run_ipop
-from repro.core.strategies import KDistributed, KReplicated
+from repro.core import ladder
+from repro.core.strategies import KReplicated
 from repro.fitness import bbob
 
 TARGETS = np.array([1e2, 1e1, 1e0, 1e-1, 1e-2])
@@ -40,27 +41,38 @@ def main():
     ap.add_argument("--dim", type=int, default=10)
     ap.add_argument("--devices", type=int, default=8)
     ap.add_argument("--gens", type=int, default=120)
+    ap.add_argument("--max-evals", type=int, default=60_000)
+    ap.add_argument("--kmax", type=int, default=5)
     args = ap.parse_args()
     fids = [int(f) for f in args.fids.split(",")]
 
+    # -- sequential IPOP: whole campaign = ONE jitted/vmapped ladder program --
+    engine = ladder.LadderEngine(
+        n=args.dim, lam_start=12, kmax_exp=args.kmax, schedule="sequential",
+        max_evals=args.max_evals)
+    camp = ladder.run_campaign(engine, fids=fids, instances=(1,), runs=1,
+                               seed=1)
+    seq_hits_all = camp.hit_evals(TARGETS)          # (B, targets)
+    print(f"[campaign] {len(camp.members)} members, one ladder program, "
+          f"compiles={camp.compiles}")
+
     print(f"{'f':>3} {'target':>8} {'seq-IPOP':>10} {'K-Dist':>10} "
           f"{'K-Rep':>10}   (evaluations to target)")
-    for fid in fids:
+    for j, fid in enumerate(fids):
         inst = bbob.make_instance(fid, args.dim, 1)
-        fit = lambda X: bbob.evaluate(fid, inst, X)
+        fit = lambda X: bbob.evaluate(fid, inst, X)  # noqa: B023
         f_opt = float(inst.f_opt)
 
-        res = run_ipop(fit, args.dim, jax.random.PRNGKey(1),
-                       max_evals=60_000)
-        seq_hits = res.hit_evals(TARGETS, f_opt)
+        seq_hits = seq_hits_all[j]
 
-        kd = KDistributed(n=args.dim, n_devices=args.devices)
-        _, tr = kd.run_sim(jax.random.PRNGKey(2), fit, total_gens=args.gens)
+        _, _, tr = ladder.run_concurrent(
+            args.dim, args.devices, jax.random.PRNGKey(2), fit,
+            total_gens=args.gens)
         kd_hits = hits_from_trace(tr["best_f"], tr["fevals"], f_opt)
 
         kr = KReplicated(n=args.dim, n_devices=args.devices)
         out = kr.run_sim(jax.random.PRNGKey(3), fit, phase_gens=args.gens,
-                         max_evals=60_000)
+                         max_evals=args.max_evals)
         bfs = np.concatenate([p["best_f"] for p in out["phases"]])
         fes = np.concatenate([p["fevals"] for p in out["phases"]])
         kr_hits = hits_from_trace(bfs, fes, f_opt)

@@ -26,14 +26,36 @@ import jax.numpy as jnp
 AxisNames = Sequence[str]
 
 
+def shard_map_compat(f, mesh, in_specs, out_specs, check: bool = False):
+    """``jax.shard_map`` across jax versions.
+
+    New jax exposes it at the top level with ``check_vma``; 0.4.x has
+    ``jax.experimental.shard_map.shard_map`` with ``check_rep``.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=check)
+
+
 def flat_index(axes: AxisNames) -> jnp.ndarray:
     """Linearized device index over (possibly multiple) named axes."""
     return jax.lax.axis_index(tuple(axes))
 
 
 def axis_size(axes: AxisNames) -> int:
-    import numpy as np
-    return int(np.prod([jax.lax.axis_size(a) for a in axes]))
+    # jax.lax.axis_size only exists in newer jax; psum of the constant 1 is
+    # the portable spelling and constant-folds to a python int at trace time.
+    if hasattr(jax.lax, "axis_size"):
+        sizes = [jax.lax.axis_size(a) for a in axes]
+    else:
+        sizes = [jax.lax.psum(1, a) for a in axes]
+    out = 1
+    for s in sizes:
+        out *= int(s)
+    return out
 
 
 def all_gather_flat(x: jnp.ndarray, axes: AxisNames) -> jnp.ndarray:

@@ -1,11 +1,17 @@
-"""Sequential IPOP-CMA-ES (paper Alg. 2) — the baseline both parallel
-strategies are compared against (paper Table 2).
+"""Sequential IPOP-CMA-ES (paper Alg. 2) — thin host wrapper over the
+device-resident ladder engine (core/ladder.py).
 
-Runs descents of population K·λ_start for K = 2⁰, 2¹, …, K_max in order,
-restarting fresh (new random mean, reset σ) after each stopping criterion.
-Each descent is a jitted scan in chunks with host-side early exit, so the
-baseline does not waste compute after a stop fires (matching the reference
-C code's control flow).
+``run_ipop`` runs descents of population K·λ_start for K = 2⁰, 2¹, …, K_max
+in order, restarting fresh (new random mean, reset σ) after each stopping
+criterion — but the whole ladder now executes as ONE scanned, jitted device
+program with in-place restarts; this wrapper only slices the scanned trace
+back into per-descent ``DescentTrace`` records.
+
+``run_ipop_hostloop`` keeps the original control flow — per-descent jitted
+chunks with host-side early exit — on the SAME key schedule and λ_max-padded
+generation step, so it is trajectory-equivalent to the ladder (asserted in
+tests/test_ladder.py) and serves as the baseline for
+benchmarks/bench_ladder.py.
 """
 from __future__ import annotations
 
@@ -16,8 +22,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import cmaes
-from repro.core.params import CMAConfig, make_params
+from repro.core import ladder as ladder_mod
+from repro.core.params import select_params
 
 
 class DescentTrace(NamedTuple):
@@ -56,44 +62,109 @@ class IPOPResult:
         return hits
 
 
+def _result_from_ladder(engine: ladder_mod.LadderEngine,
+                        carry: ladder_mod.LadderCarry,
+                        trace: ladder_mod.LadderTrace) -> IPOPResult:
+    """Slice a sequential-ladder trace (leaves (T, 1)) into DescentTraces."""
+    ran = np.asarray(trace.ran)[:, 0]
+    k = np.asarray(trace.k_idx)[:, 0]
+    gens = np.asarray(trace.gen)[:, 0]
+    fevals = np.asarray(trace.fevals)[:, 0]
+    best_f = np.asarray(trace.best_f)[:, 0]
+    reason = np.asarray(trace.stop_reason)[:, 0]
+    descents: List[DescentTrace] = []
+    for k_exp in range(engine.kmax_exp + 1):
+        idx = np.nonzero(ran & (k == k_exp))[0]
+        if idx.size == 0:
+            continue
+        descents.append(DescentTrace(
+            k_exp=k_exp, lam=(2 ** k_exp) * engine.lam_start,
+            gens=np.asarray(gens[idx], np.int64),
+            fevals=np.asarray(fevals[idx], np.int64),
+            best_f=np.asarray(best_f[idx], np.float64),
+            stop_reason=int(reason[idx[-1]])))
+    return IPOPResult(best_f=float(carry.best_f),
+                      best_x=np.asarray(carry.best_x),
+                      total_fevals=int(carry.total_fevals),
+                      descents=descents)
+
+
 def run_ipop(fitness_fn: Callable, n: int, key: jax.Array,
              lam_start: int = 12, kmax_exp: int = 8,
              max_evals: int = 200_000, domain=(-5.0, 5.0),
              sigma0_frac: float = 0.25, chunk: int = 32,
-             impl: str = "xla", dtype: str = "float64") -> IPOPResult:
-    """Paper Alg. 2 with multiplicative factor 2 and K_max = 2^kmax_exp."""
-    lo, hi = domain
-    width = hi - lo
+             impl: str = "xla", dtype: str = "float64",
+             total_gens: int | None = None,
+             backend: str = "ladder") -> IPOPResult:
+    """Paper Alg. 2 with multiplicative factor 2 and K_max = 2^kmax_exp.
+
+    ``backend="ladder"`` (default) runs the whole restart ladder as one
+    device-resident scanned program; ``backend="hostloop"`` keeps the legacy
+    host-driven chunked loop (same keys, same padded arithmetic).  ``chunk``
+    only affects the host-loop backend.
+    """
+    if backend == "hostloop":
+        if total_gens is not None:
+            raise ValueError("total_gens only applies to backend='ladder'; "
+                             "the host loop is bounded by max_evals/stops")
+        return run_ipop_hostloop(
+            fitness_fn, n, key, lam_start=lam_start, kmax_exp=kmax_exp,
+            max_evals=max_evals, domain=domain, sigma0_frac=sigma0_frac,
+            chunk=chunk, impl=impl, dtype=dtype)
+    if backend != "ladder":
+        raise ValueError(f"unknown backend {backend!r}")
+    engine = ladder_mod.LadderEngine(
+        n=n, lam_start=lam_start, kmax_exp=kmax_exp, schedule="sequential",
+        max_evals=max_evals, domain=domain, sigma0_frac=sigma0_frac,
+        impl=impl, dtype=dtype)
+    carry, trace = engine.run(key, fitness_fn, total_gens)
+    return _result_from_ladder(engine, carry, trace)
+
+
+def run_ipop_hostloop(fitness_fn: Callable, n: int, key: jax.Array,
+                      lam_start: int = 12, kmax_exp: int = 8,
+                      max_evals: int = 200_000, domain=(-5.0, 5.0),
+                      sigma0_frac: float = 0.25, chunk: int = 32,
+                      impl: str = "xla",
+                      dtype: str = "float64") -> IPOPResult:
+    """Host-driven baseline: one jitted chunk-scan per descent, host-side
+    early exit on the stop flag, Python-level restart between rungs."""
+    engine = ladder_mod.LadderEngine(
+        n=n, lam_start=lam_start, kmax_exp=kmax_exp, schedule="sequential",
+        max_evals=max_evals, domain=domain, sigma0_frac=sigma0_frac,
+        impl=impl, dtype=dtype)
+    cfg, sparams = engine.cfg, engine.sparams
+
+    @jax.jit
+    def run_chunk(params, st, ks):
+        def body(s, kg):
+            s = ladder_mod.padded_gen_step(cfg, params, s, kg, fitness_fn,
+                                           impl=impl)
+            return s, (s.best_f, s.fevals, s.stop)
+        return jax.lax.scan(body, st, ks)
+
     total_evals = 0
     best_f, best_x = np.inf, np.zeros(n)
     descents: List[DescentTrace] = []
 
     for k_exp in range(kmax_exp + 1):
-        if total_evals >= max_evals:
-            break
         lam = (2 ** k_exp) * lam_start
-        cfg = CMAConfig(n=n, lam=lam, sigma0=sigma0_frac * width, dtype=dtype)
-        params = make_params(cfg)
-        key, k_init, k_x0 = jax.random.split(key, 3)
-        x0 = jax.random.uniform(k_x0, (n,), cfg.jdtype, lo, hi)
-        state = cmaes.init_state(cfg, k_init, x0)
+        if total_evals + lam > max_evals:
+            break
+        params = select_params(sparams, k_exp)
+        kd = ladder_mod.slot_key(key, 0, k_exp)
+        state = ladder_mod.fresh_state(cfg, kd, domain)
 
-        @jax.jit
-        def run_chunk(st, ks):
-            def body(s, kk):
-                s = cmaes.step(cfg, params, s, fitness_fn, kk, impl=impl)
-                return s, (s.best_f, s.fevals, s.stop)
-            return jax.lax.scan(body, st, ks)
-
+        budget_gens = (max_evals - total_evals) // lam
         gens_l, fe_l, bf_l = [], [], []
         gen = 0
-        budget_gens = max(1, (max_evals - total_evals) // lam)
-        while gen < min(cfg.max_iter, budget_gens):
-            key, k_chunk = jax.random.split(key)
-            ks = jax.random.split(k_chunk, chunk)
-            state, (bfs, fes, stops) = run_chunk(state, ks)
+        while gen < budget_gens:
+            m = min(chunk, budget_gens - gen)
+            ks = jax.vmap(lambda g: ladder_mod.gen_key(kd, g))(
+                jnp.arange(gen, gen + m))
+            state, (bfs, fes, stops) = run_chunk(params, state, ks)
             bfs, fes, stops = map(np.asarray, (bfs, fes, stops))
-            n_valid = int(np.argmax(stops)) + 1 if stops.any() else chunk
+            n_valid = int(np.argmax(stops)) + 1 if stops.any() else m
             gens_l.extend(range(gen + 1, gen + n_valid + 1))
             fe_l.extend(fes[:n_valid])
             bf_l.extend(bfs[:n_valid])
@@ -106,7 +177,7 @@ def run_ipop(fitness_fn: Callable, n: int, key: jax.Array,
             best_f = float(state.best_f)
             best_x = np.asarray(state.best_x)
         descents.append(DescentTrace(
-            k_exp=k_exp, lam=lam, gens=np.asarray(gens_l),
+            k_exp=k_exp, lam=lam, gens=np.asarray(gens_l, np.int64),
             fevals=np.asarray(fe_l, dtype=np.int64),
             best_f=np.asarray(bf_l, dtype=np.float64),
             stop_reason=int(state.stop_reason)))

@@ -1,0 +1,386 @@
+"""Device-resident IPOP restart ladder — single-jit campaigns (paper Alg. 2).
+
+The sequential baseline in core/ipop.py used to drive each descent as a
+host-side chunked Python loop: per-descent recompiles (a new CMAConfig per
+population size), a host round-trip per chunk to poll the stop flag, and a
+host-side restart between rungs.  This module keeps the *entire* restart
+ladder on device:
+
+* All rungs K = 2⁰..2^kmax share ONE λ_max-padded ``CMAConfig``; their
+  per-rung strategy parameters are precomputed as a stacked ``CMAParams``
+  (``params.ladder_params``) whose leaves carry a leading rung axis, so a
+  *traced* rung index can gather a descent's parameters on device
+  (``params.select_params``).
+* Descent slots live in one stacked ``CMAState`` pytree and advance inside a
+  single ``jax.lax.scan``.  When ``stopping.check_stop`` fires for a slot,
+  the slot re-initializes **in place** from a fresh key with doubled-λ
+  weights gathered from the stack — no host round-trip, no recompile.
+* Two schedules: ``sequential`` (paper Alg. 2 semantics — one active descent
+  whose rung index walks the ladder, masked no-ops once it is exhausted or
+  the evaluation budget cannot pay for another generation) and
+  ``concurrent`` (all rungs as live slots at once, the IPOP analogue of
+  K-Distributed).  ``run_concurrent`` additionally wraps the strategies.py
+  collectives (KDistributed's per-device program) in one full-length scan
+  for the sharded concurrent path.
+* ``run_campaign`` vmaps the scanned ladder over (function, instance, run)
+  triples: stacked instances (``bbob.stack_instances``) with traced-fid
+  dispatch (``bbob.evaluate_dynamic``; its pre-vmapped form is
+  ``bbob.evaluate_stacked``), so an entire campaign compiles once per
+  (n, λ_max) shape and runs as one program.
+
+The price of the single program is padding: every generation samples and
+evaluates λ_max points even on the λ_start rung (masked slots carry zero
+weight and +inf fitness, exactly as core/cmaes.py promises).  On the target
+deployment — one evaluation per core, the paper's §3.2.1 — those lanes are
+idle hardware, not wasted wall-clock; on CPU the padded GEMMs are still far
+cheaper than per-chunk host synchronization (see benchmarks/bench_ladder.py).
+
+The key schedule (``slot_key`` / ``gen_key``) is shared with the host-loop
+baseline ``ipop.run_ipop_hostloop`` so the two are trajectory-equivalent on
+identical base keys (tests/test_ladder.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cmaes
+from repro.core.params import (CMAConfig, default_max_iter, ladder_params,
+                               select_params)
+from repro.fitness import bbob
+
+
+# ---------------------------------------------------------------------------
+# key schedule — shared by the device ladder and the host-loop baseline
+# ---------------------------------------------------------------------------
+
+def slot_key(base_key: jax.Array, slot_id, incarnation) -> jax.Array:
+    """Key of one descent incarnation of one slot (both indices may be traced)."""
+    return jax.random.fold_in(jax.random.fold_in(base_key, slot_id), incarnation)
+
+
+def init_keys(kd: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """(k_init, k_x0) for a fresh descent keyed by ``kd``."""
+    ks = jax.random.split(kd)
+    return ks[0], ks[1]
+
+
+def gen_key(kd: jax.Array, gen) -> jax.Array:
+    """Sampling key of (0-based) generation ``gen`` within an incarnation."""
+    return jax.random.fold_in(kd, gen)
+
+
+def fresh_state(cfg: CMAConfig, kd: jax.Array,
+                domain: Tuple[float, float]) -> cmaes.CMAState:
+    """Fresh descent state: uniform mean in the search domain, reset σ."""
+    k_init, k_x0 = init_keys(kd)
+    lo, hi = domain
+    x0 = jax.random.uniform(k_x0, (cfg.n,), cfg.jdtype, lo, hi)
+    return cmaes.init_state(cfg, k_init, x0)
+
+
+# ---------------------------------------------------------------------------
+# one λ_max-padded generation (also the host-loop baseline's step)
+# ---------------------------------------------------------------------------
+
+def padded_gen_step(cfg: CMAConfig, params, state: cmaes.CMAState,
+                    k_gen: jax.Array, fitness_fn: Callable,
+                    impl: str = "xla") -> cmaes.CMAState:
+    """Sample λ_max points, mask slots ≥ λ to +inf, apply the CMA update."""
+    lam_max = cfg.lam_max
+    y, x = cmaes.sample_population(state, k_gen, lam_max, impl=impl)
+    f = fitness_fn(x)
+    f = jnp.where(jnp.arange(lam_max) < params.lam, f, jnp.inf)
+    mom = cmaes.compute_moments(y, f, x, params, lam_max, impl=impl)
+    return cmaes.masked_update(cfg, params, state, mom, impl=impl)
+
+
+def _tree_select(mask: jnp.ndarray, a, b):
+    """Per-slot select over stacked pytrees: mask (S,), leaves (S, ...)."""
+    def sel(x, y):
+        m = mask.reshape(mask.shape + (1,) * (x.ndim - mask.ndim))
+        return jnp.where(m, x, y)
+    return jax.tree_util.tree_map(sel, a, b)
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+
+class LadderCarry(NamedTuple):
+    states: cmaes.CMAState      # (S, ...) stacked descent slots
+    k_idx: jnp.ndarray          # (S,) int32 — rung index, λ = 2ᵏ·λ_start
+    incarnation: jnp.ndarray    # (S,) int32 — restarts of this slot so far
+    active: jnp.ndarray         # (S,) bool — False once a slot retired
+    total_fevals: jnp.ndarray   # () int — across all slots and restarts
+    best_f: jnp.ndarray         # () global best
+    best_x: jnp.ndarray         # (n,)
+
+
+class LadderTrace(NamedTuple):
+    """Per-generation record (slot-stacked leaves, shape (S,) unless noted)."""
+    ran: jnp.ndarray            # bool — slot executed this generation
+    k_idx: jnp.ndarray          # int32 — rung during this generation
+    gen: jnp.ndarray            # int32 — within-descent generation (1-based)
+    fevals: jnp.ndarray         # within-descent cumulative evaluations
+    best_f: jnp.ndarray         # within-descent best-so-far
+    stop_reason: jnp.ndarray    # int32 bitmask (core/stopping.py)
+    stopped: jnp.ndarray        # bool — stop fired; slot restarted or retired
+    total_fevals: jnp.ndarray   # () cumulative across the whole ladder
+    global_best: jnp.ndarray    # () best across slots and restarts
+
+
+@dataclasses.dataclass
+class LadderEngine:
+    """Stacked IPOP ladder: all rungs in one padded pytree, one scanned program."""
+
+    n: int
+    lam_start: int = 12
+    kmax_exp: int = 4
+    schedule: str = "sequential"        # "sequential" | "concurrent"
+    max_evals: int = 200_000
+    domain: Tuple[float, float] = (-5.0, 5.0)
+    sigma0_frac: float = 0.25
+    impl: str = "xla"
+    dtype: str = "float64"
+    restart_mode: str = "double"        # concurrent slots: "double" | "same_k"
+
+    def __post_init__(self):
+        if self.schedule not in ("sequential", "concurrent"):
+            raise ValueError(f"unknown schedule {self.schedule!r}")
+        if self.restart_mode not in ("double", "same_k"):
+            raise ValueError(f"unknown restart_mode {self.restart_mode!r}")
+        self.lam_max = (2 ** self.kmax_exp) * self.lam_start
+        width = self.domain[1] - self.domain[0]
+        self.cfg = CMAConfig(n=self.n, lam=self.lam_max, lam_max=self.lam_max,
+                             sigma0=self.sigma0_frac * width, dtype=self.dtype)
+        self.sparams = ladder_params(self.cfg, self.lam_start, self.kmax_exp)
+        self.n_slots = 1 if self.schedule == "sequential" else self.kmax_exp + 1
+        self._runner_cache: dict = {}
+
+    # -- sizing ---------------------------------------------------------------
+    def default_gens(self, total_gens: Optional[int] = None) -> int:
+        """Upper bound on useful scan length for the sequential schedule."""
+        if total_gens is not None:
+            return int(total_gens)
+        by_budget = self.max_evals // self.lam_start
+        by_iter = sum(default_max_iter(self.n, (2 ** k) * self.lam_start)
+                      for k in range(self.kmax_exp + 1))
+        return max(1, min(by_budget, by_iter))
+
+    # -- init -----------------------------------------------------------------
+    def init_carry(self, base_key: jax.Array) -> LadderCarry:
+        S, n, dt = self.n_slots, self.n, self.cfg.jdtype
+        slot_ids = jnp.arange(S, dtype=jnp.int32)
+        if self.schedule == "concurrent":
+            k0 = slot_ids                       # slot i starts on rung i
+        else:
+            k0 = jnp.zeros((S,), jnp.int32)     # the single slot walks the ladder
+        inc0 = jnp.zeros((S,), jnp.int32)
+        kds = jax.vmap(lambda s, i: slot_key(base_key, s, i))(slot_ids, inc0)
+        states = jax.vmap(lambda kd: fresh_state(self.cfg, kd, self.domain))(kds)
+        return LadderCarry(
+            states=states, k_idx=k0, incarnation=inc0,
+            active=jnp.ones((S,), bool),
+            total_fevals=jnp.zeros((), jnp.int64),
+            best_f=jnp.asarray(jnp.inf, dt),
+            best_x=jnp.zeros((n,), dt))
+
+    # -- one generation over all slots ----------------------------------------
+    def gen_step(self, carry: LadderCarry, base_key: jax.Array,
+                 fitness_fn: Callable) -> Tuple[LadderCarry, LadderTrace]:
+        cfg = self.cfg
+        S = self.n_slots
+        slot_ids = jnp.arange(S, dtype=jnp.int32)
+
+        params_k = select_params(self.sparams, carry.k_idx)   # leaves (S, ...)
+        lam_k = params_k.lam.astype(carry.total_fevals.dtype)
+
+        # budget gate: a slot only starts a generation it can fully pay for.
+        # Concurrent slots spend from the shared budget in the same step, so
+        # each is gated on the cumulative reservation of the slots before it —
+        # the summed spend never exceeds max_evals.
+        reserve = jnp.cumsum(jnp.where(carry.active, lam_k, 0))
+        ran = carry.active & (carry.total_fevals + reserve <= self.max_evals)
+
+        kds = jax.vmap(lambda s, i: slot_key(base_key, s, i))(
+            slot_ids, carry.incarnation)
+        kgs = jax.vmap(gen_key)(kds, carry.states.gen)
+
+        upd = jax.vmap(lambda p, st, kg: padded_gen_step(
+            cfg, p, st, kg, fitness_fn, impl=self.impl))(
+                params_k, carry.states, kgs)
+        new_states = _tree_select(ran, upd, carry.states)
+
+        evals_gen = jnp.sum(jnp.where(ran, lam_k, 0))
+        total_fevals = carry.total_fevals + evals_gen
+
+        cand = jnp.where(ran, new_states.best_f, jnp.inf)
+        i_star = jnp.argmin(cand)
+        better = cand[i_star] < carry.best_f
+        best_f = jnp.where(better, cand[i_star], carry.best_f)
+        best_x = jnp.where(better, new_states.best_x[i_star], carry.best_x)
+
+        stopped = ran & new_states.stop
+        trace = LadderTrace(
+            ran=ran, k_idx=carry.k_idx, gen=new_states.gen,
+            fevals=new_states.fevals, best_f=new_states.best_f,
+            stop_reason=new_states.stop_reason, stopped=stopped,
+            total_fevals=total_fevals, global_best=best_f)
+
+        # -- in-place restart: doubled-λ params gathered from the stack -------
+        if self.schedule == "concurrent" and self.restart_mode == "same_k":
+            next_k = carry.k_idx
+        else:
+            next_k = carry.k_idx + 1
+        if self.schedule == "sequential":
+            retire = stopped & (next_k > self.kmax_exp)   # ladder exhausted
+        else:
+            retire = jnp.zeros_like(stopped)
+            next_k = jnp.minimum(next_k, self.kmax_exp)
+        restart = stopped & ~retire
+        k_new = jnp.where(restart, next_k, carry.k_idx)
+        inc_new = carry.incarnation + restart.astype(jnp.int32)
+        active_new = carry.active & ~retire
+
+        kds_new = jax.vmap(lambda s, i: slot_key(base_key, s, i))(
+            slot_ids, inc_new)
+        fresh = jax.vmap(lambda kd: fresh_state(cfg, kd, self.domain))(kds_new)
+        fresh = fresh._replace(restarts=inc_new)
+        states_out = _tree_select(restart, fresh, new_states)
+
+        return LadderCarry(
+            states=states_out, k_idx=k_new, incarnation=inc_new,
+            active=active_new, total_fevals=total_fevals,
+            best_f=best_f, best_x=best_x), trace
+
+    # -- the whole ladder as one scan ------------------------------------------
+    def run_scan(self, base_key: jax.Array, fitness_fn: Callable,
+                 total_gens: int) -> Tuple[LadderCarry, LadderTrace]:
+        """Pure scanned program — call under jit (and vmap, for campaigns)."""
+        carry0 = self.init_carry(base_key)
+
+        def body(c, _):
+            return self.gen_step(c, base_key, fitness_fn)
+
+        return jax.lax.scan(body, carry0, None, length=int(total_gens))
+
+    def run(self, base_key: jax.Array, fitness_fn: Callable,
+            total_gens: Optional[int] = None) -> Tuple[LadderCarry, LadderTrace]:
+        """Single-problem convenience wrapper (one jit, one device program)."""
+        total_gens = self.default_gens(total_gens)
+        fn = jax.jit(lambda k: self.run_scan(k, fitness_fn, total_gens))
+        return fn(base_key)
+
+    # -- campaign: vmap over (function, instance, run) triples -----------------
+    def campaign_runner(self, branch_fids: Tuple[int, ...], total_gens: int):
+        """Jitted vmapped runner, cached per (fid set, scan length)."""
+        key = (tuple(branch_fids), int(total_gens))
+        if key not in self._runner_cache:
+            def run_one(base_key, inst):
+                def fit(X):
+                    return bbob.evaluate_dynamic(inst, X, branch_fids)
+                return self.run_scan(base_key, fit, total_gens)
+            self._runner_cache[key] = jax.jit(jax.vmap(run_one))
+        return self._runner_cache[key]
+
+
+@dataclasses.dataclass
+class CampaignResult:
+    members: List[Tuple[int, int, int]]   # (fid, instance, run) per batch row
+    f_opt: np.ndarray                     # (B,)
+    best_f: np.ndarray                    # (B,)
+    best_x: np.ndarray                    # (B, n)
+    total_fevals: np.ndarray              # (B,)
+    trace: LadderTrace                    # leaves (B, T, S) / (B, T)
+    compiles: int                         # jit cache entries of the runner
+
+    def hit_evals(self, targets: np.ndarray) -> np.ndarray:
+        """(B, len(targets)) first total-eval count reaching best−f_opt ≤ t."""
+        gb = np.asarray(self.trace.global_best)          # (B, T)
+        fe = np.asarray(self.trace.total_fevals)         # (B, T)
+        out = np.full((gb.shape[0], len(targets)), np.inf)
+        for b in range(gb.shape[0]):
+            err = gb[b] - self.f_opt[b]
+            for i, t in enumerate(targets):
+                idx = np.nonzero(err <= t)[0]
+                if idx.size:
+                    out[b, i] = fe[b, idx[0]]
+        return out
+
+
+def run_campaign(engine: LadderEngine, fids, instances=(1,), runs: int = 1,
+                 seed: int = 0,
+                 total_gens: Optional[int] = None) -> CampaignResult:
+    """Run a whole BBOB campaign as ONE jitted/vmapped ladder program.
+
+    Every (fid, instance, run) triple becomes one batch row of the vmapped
+    scan; the instance pytrees are stacked (Gallagher peaks padded) and the
+    fitness dispatch is a lax.switch over the campaign's static fid set.
+    Compiles at most once per (n, λ_max, fid set, batch, scan length) shape.
+    """
+    fids = tuple(fids)
+    members = [(f, i, r) for f in fids for i in instances for r in range(runs)]
+    insts = [bbob.make_instance(f, engine.n, i, engine.cfg.jdtype)
+             for (f, i, _r) in members]
+    stacked = bbob.stack_instances(insts)
+    branch_fids = tuple(sorted(set(fids)))
+    total_gens = engine.default_gens(total_gens)
+
+    runner = engine.campaign_runner(branch_fids, total_gens)
+    base = jax.random.PRNGKey(seed)
+    keys = jnp.stack([jax.random.fold_in(base, j) for j in range(len(members))])
+    carry, trace = runner(keys, stacked)
+
+    compiles = -1
+    cache_size = getattr(runner, "_cache_size", None)
+    if callable(cache_size):
+        compiles = int(cache_size())
+    return CampaignResult(
+        members=members,
+        f_opt=np.asarray([i.f_opt for i in insts], np.float64),
+        best_f=np.asarray(carry.best_f),
+        best_x=np.asarray(carry.best_x),
+        total_fevals=np.asarray(carry.total_fevals),
+        trace=jax.tree_util.tree_map(np.asarray, trace),
+        compiles=compiles)
+
+
+# ---------------------------------------------------------------------------
+# concurrent schedule on the strategies.py collectives (single-jit)
+# ---------------------------------------------------------------------------
+
+def run_concurrent(n: int, n_devices: int, key: jax.Array,
+                   fitness_fn: Callable, total_gens: int,
+                   lam_start: int = 12, kmax_exp: Optional[int] = None,
+                   domain: Tuple[float, float] = (-5.0, 5.0),
+                   sigma0_frac: float = 0.25, impl: str = "xla",
+                   dtype: str = "float64", drop_prob: float = 0.0):
+    """All rungs concurrently via KDistributed's per-device program, scanned
+    over ALL generations inside one jit — the device-resident replacement for
+    ``KDistributed.run_sim``'s host-side chunk loop.
+
+    Returns ``(kd, carry, trace_dict)`` with the same trace-dict layout
+    ``run_sim`` produced, so the benchmarks swap in directly.
+    """
+    from repro.core.strategies import KDistributed
+
+    kd = KDistributed(n=n, n_devices=n_devices, lam_start=lam_start,
+                      lam_slots=lam_start, kmax_exp=kmax_exp, domain=domain,
+                      sigma0_frac=sigma0_frac, impl=impl, dtype=dtype,
+                      drop_prob=drop_prob)
+    axes = ("ev",)
+    fn = jax.jit(jax.vmap(kd.chunk_fn(fitness_fn, axes, int(total_gens)),
+                          in_axes=(None, None), out_axes=0,
+                          axis_name="ev", axis_size=kd.n_devices))
+    carry0 = kd.init_carry(jax.random.fold_in(key, 0))
+    keys = jax.random.split(key, int(total_gens))
+    carry_b, tr = fn(carry0, keys)
+    # replicated outputs: take the device-0 view
+    carry = jax.tree_util.tree_map(lambda a: a[0], carry_b)
+    trace = {k: np.asarray(getattr(tr, k)[0]) for k in tr._fields}
+    return kd, carry, trace

@@ -20,6 +20,13 @@ def _raw_weights(lam: int) -> np.ndarray:
     return w / np.sum(w)
 
 
+def default_max_iter(n: int, lam: int) -> int:
+    """Default per-descent generation allowance (evaluation budget usually
+    stops a run first).  Single source of truth — the ladder engine sizes its
+    scan from the same formula (core/ladder.py)."""
+    return 100 + int(3000 * n / lam)
+
+
 @dataclasses.dataclass(frozen=True)
 class CMAConfig:
     """Static (Python-level) configuration of a CMA-ES run."""
@@ -39,6 +46,9 @@ class CMAConfig:
     dtype: str = "float64"
 
     def __post_init__(self):
+        # remember whether max_iter was derived so make_params can re-derive
+        # it per population size when building a stacked ladder (core/ladder.py)
+        object.__setattr__(self, "max_iter_auto", self.max_iter is None)
         if self.lam_max is None:
             object.__setattr__(self, "lam_max", self.lam)
         if self.eigen_interval is None:
@@ -53,8 +63,8 @@ class CMAConfig:
             interval = max(1, int(1.0 / ((c_1 + c_mu) * self.n * 10.0)))
             object.__setattr__(self, "eigen_interval", interval)
         if self.max_iter is None:
-            # generous default; the evaluation budget usually stops us first
-            object.__setattr__(self, "max_iter", 100 + int(3000 * self.n / self.lam))
+            object.__setattr__(self, "max_iter",
+                               default_max_iter(self.n, self.lam))
 
     @property
     def jdtype(self) -> jnp.dtype:
@@ -101,6 +111,12 @@ def make_params(cfg: CMAConfig, lam: Optional[int] = None) -> CMAParams:
     c_mu = min(1.0 - c_1, 2.0 * (mu_eff - 2.0 + 1.0 / mu_eff) / ((n + 2.0) ** 2 + mu_eff))
     chi_n = np.sqrt(n) * (1.0 - 1.0 / (4.0 * n) + 1.0 / (21.0 * n ** 2))
     hist_window = min(cfg.hist_len, 10 + int(np.ceil(30.0 * n / lam)))
+    if lam != cfg.lam and getattr(cfg, "max_iter_auto", False):
+        # per-descent budget: a small-λ rung of a stacked ladder gets the
+        # generation allowance its own population size implies
+        max_iter = default_max_iter(n, lam)
+    else:
+        max_iter = cfg.max_iter
     return CMAParams(
         lam=jnp.asarray(lam, jnp.int32),
         weights=jnp.asarray(w, dt),
@@ -114,7 +130,7 @@ def make_params(cfg: CMAConfig, lam: Optional[int] = None) -> CMAParams:
         chi_n=jnp.asarray(chi_n, dt),
         sigma0=jnp.asarray(cfg.sigma0, dt),
         hist_window=jnp.asarray(hist_window, jnp.int32),
-        max_iter=jnp.asarray(cfg.max_iter, jnp.int32),
+        max_iter=jnp.asarray(max_iter, jnp.int32),
     )
 
 
@@ -122,3 +138,21 @@ def stack_params(params: list[CMAParams]) -> CMAParams:
     """Stack per-descent params along a leading descent axis (for vmap)."""
     import jax
     return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *params)
+
+
+def ladder_params(cfg: CMAConfig, lam_start: int, kmax_exp: int) -> CMAParams:
+    """Stacked params for the IPOP ladder: rung k has λ = 2ᵏ·lam_start.
+
+    All rungs share ``cfg`` (and its λ_max padding); the result's leaves have a
+    leading (kmax_exp+1,) rung axis, so a traced rung index can gather a
+    descent's parameters on device (``select_params``) — the mechanism behind
+    the in-place doubled-λ restarts in core/ladder.py.
+    """
+    return stack_params([make_params(cfg, lam=(2 ** k) * lam_start)
+                         for k in range(kmax_exp + 1)])
+
+
+def select_params(sparams: CMAParams, idx) -> CMAParams:
+    """Gather one rung's params from a stacked ladder by (possibly traced) index."""
+    import jax
+    return jax.tree_util.tree_map(lambda a: a[idx], sparams)

@@ -6,6 +6,7 @@ except budget exhaustion, which the strategy level handles).
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 TOLFUN = 1
@@ -89,3 +90,14 @@ def check_stop(cfg, params, state, f_sorted: jnp.ndarray) -> jnp.ndarray:
     reason = reason | jnp.where(maxiter_hit, MAXITER, 0)
 
     return reason.astype(jnp.int32)
+
+
+def check_stop_stacked(cfg, sparams, states, f_sorted: jnp.ndarray) -> jnp.ndarray:
+    """``check_stop`` over stacked leaves: params/state pytrees carry a leading
+    descent axis, ``f_sorted`` is (D, lam_max).  Returns (D,) int32 masks.
+
+    ``cfg`` stays a single static config — the ladder engine (core/ladder.py)
+    shares one λ_max-padded config across every rung of the stack.
+    """
+    return jax.vmap(lambda p, s, fs: check_stop(cfg, p, s, fs))(
+        sparams, states, f_sorted)

@@ -310,9 +310,9 @@ class KDistributed:
                     chunk: int = 16, axes: Optional[Tuple[str, ...]] = None):
         """shard_map on a real mesh (all axes collapsed into the eval axis)."""
         axes = tuple(axes if axes is not None else mesh.axis_names)
-        fn = jax.shard_map(self.chunk_fn(fitness_fn, axes, chunk), mesh=mesh,
-                           in_specs=(P(), P()), out_specs=(P(), P()),
-                           check_vma=False)
+        fn = eval_dispatch.shard_map_compat(
+            self.chunk_fn(fitness_fn, axes, chunk), mesh=mesh,
+            in_specs=(P(), P()), out_specs=(P(), P()))
         fn = jax.jit(fn)
         carry = self.init_carry(jax.random.fold_in(key, 0))
         traces = []
@@ -327,9 +327,9 @@ class KDistributed:
                    axes: Optional[Tuple[str, ...]] = None):
         """Lower (no execute) one chunk for the dry-run / roofline harness."""
         axes = tuple(axes if axes is not None else mesh.axis_names)
-        fn = jax.shard_map(self.chunk_fn(fitness_fn, axes, chunk), mesh=mesh,
-                           in_specs=(P(), P()), out_specs=(P(), P()),
-                           check_vma=False)
+        fn = eval_dispatch.shard_map_compat(
+            self.chunk_fn(fitness_fn, axes, chunk), mesh=mesh,
+            in_specs=(P(), P()), out_specs=(P(), P()))
         carry = jax.eval_shape(lambda k: self.init_carry(k),
                                jax.ShapeDtypeStruct((2,), jnp.uint32))
         keys = jax.ShapeDtypeStruct((chunk, 2), jnp.uint32)
@@ -396,7 +396,7 @@ class KReplicated:
                     gen_key: jax.Array, fitness_fn: Callable
                     ) -> Tuple[KRepCarry, KRepTrace]:
         n, dt, lam_slots = self.n, cfg.jdtype, self.lam_slots
-        g = jax.lax.axis_size("mem")
+        g = eval_dispatch.axis_size(("mem",))
         mem = jax.lax.axis_index("mem")
         dev = eval_dispatch.flat_index(("grp", "mem"))
 
@@ -556,8 +556,9 @@ class KReplicated:
                               fevals=P()), P())
         out_specs = (KRepCarry(state=P("grp"), best_f=P(), best_x=P(),
                                fevals=P()), P())
-        fn = jax.shard_map(wrapped, mesh=mesh, in_specs=in_specs,
-                           out_specs=out_specs, check_vma=False)
+        fn = eval_dispatch.shard_map_compat(wrapped, mesh=mesh,
+                                            in_specs=in_specs,
+                                            out_specs=out_specs)
         carry = jax.eval_shape(
             lambda k: KRepCarry(
                 state=self.init_phase_states(cfg, G, k),

@@ -71,8 +71,9 @@ def pipeline_apply(stage_fn: Callable, params_stages, x_microbatches,
 
     in_specs = (jax.tree_util.tree_map(lambda _: P(axis), params_stages),
                 P())
-    fn = jax.shard_map(per_device, mesh=mesh, in_specs=in_specs,
-                       out_specs=P(), check_vma=False)
+    from repro.core.eval_dispatch import shard_map_compat
+    fn = shard_map_compat(per_device, mesh=mesh, in_specs=in_specs,
+                          out_specs=P())
     return fn(params_stages, x_microbatches)
 
 

@@ -374,3 +374,65 @@ def make_fitness(fid: int, n: int, instance: int = 0, dtype=jnp.float64):
     def fn(X):
         return evaluate(fid, inst, X)
     return fn, inst
+
+
+# ---------------------------------------------------------------------------
+# stacked campaigns — traced-fid dispatch over a batch of instances
+# ---------------------------------------------------------------------------
+
+def pad_instance(inst: BBOBInstance, m_max: int) -> BBOBInstance:
+    """Pad the Gallagher peak set to ``m_max`` rows so heterogeneous instances
+    stack into one pytree.  Padding peaks carry weight 0 and therefore never
+    win the max in ``_gallagher`` (real peaks have weight ≥ 1.1)."""
+    m, n = inst.peaks_y.shape
+    if m >= m_max:
+        return inst
+    pad = m_max - m
+    dt = inst.peaks_y.dtype
+    return inst._replace(
+        peaks_y=jnp.concatenate([inst.peaks_y, jnp.zeros((pad, n), dt)]),
+        peaks_w=jnp.concatenate([inst.peaks_w, jnp.zeros((pad,), dt)]),
+        peaks_c=jnp.concatenate([inst.peaks_c, jnp.ones((pad, n), dt)]),
+    )
+
+
+def stack_instances(instances: list[BBOBInstance]) -> BBOBInstance:
+    """Stack instances along a leading batch axis (peaks padded to a common m)."""
+    m_max = max(int(i.peaks_y.shape[0]) for i in instances)
+    padded = [pad_instance(i, m_max) for i in instances]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *padded)
+
+
+def evaluate_dynamic(inst: BBOBInstance, X: jnp.ndarray,
+                     branch_fids: tuple = tuple(range(1, 25))) -> jnp.ndarray:
+    """``evaluate`` with a *traced* function id (``inst.fid``).
+
+    Dispatch is a ``lax.switch`` over ``branch_fids`` — pass the (static) set
+    of fids actually present in a campaign to keep the compiled program small.
+    Under ``vmap`` a batched switch index evaluates every branch and selects,
+    so the per-point cost is len(branch_fids)×; with the per-campaign fid set
+    that is the price of running heterogeneous functions in one program.
+    """
+    branch_fids = tuple(branch_fids)
+    branches = [lambda i, x, f=f: _EVALS[f](i, x) for f in branch_fids]
+    fid_tab = jnp.asarray(branch_fids, jnp.int32)
+    match = fid_tab == inst.fid.astype(jnp.int32)
+    idx = jnp.argmax(match)
+    val = jax.lax.switch(idx, branches, inst, X) + inst.f_opt
+    # a fid outside branch_fids would silently dispatch to branch 0 (argmax of
+    # all-False is 0); the fid is traced so we cannot raise — poison instead
+    return jnp.where(jnp.any(match), val, jnp.nan)
+
+
+def evaluate_stacked(fid_array: jnp.ndarray, inst_params: BBOBInstance,
+                     X: jnp.ndarray,
+                     branch_fids: tuple = tuple(range(1, 25))) -> jnp.ndarray:
+    """Batched campaign evaluation: one program over stacked instances.
+
+    ``fid_array``: (B,) int32; ``inst_params``: BBOBInstance with (B, ...)
+    leaves (see ``stack_instances``); ``X``: (B, batch, n).  Returns
+    (B, batch) absolute fitness values.
+    """
+    def one(fid, inst, x):
+        return evaluate_dynamic(inst._replace(fid=fid), x, branch_fids)
+    return jax.vmap(one)(fid_array.astype(jnp.int32), inst_params, X)

@@ -27,11 +27,14 @@ import numpy as np
 
 
 def _mk(shape, names, devices=None):
-    axis_types = (jax.sharding.AxisType.Auto,) * len(names)
+    # jax.sharding.AxisType landed after 0.4.x; older jax only has untyped axes
+    kw = {}
+    if hasattr(jax.sharding, "AxisType"):
+        kw["axis_types"] = (jax.sharding.AxisType.Auto,) * len(names)
     if devices is None:
-        return jax.make_mesh(shape, names, axis_types=axis_types)
+        return jax.make_mesh(shape, names, **kw)
     devs = np.asarray(devices).reshape(shape)
-    return jax.sharding.Mesh(devs, names, axis_types=axis_types)
+    return jax.sharding.Mesh(devs, names, **kw)
 
 
 def make_production_mesh(*, multi_pod: bool = False):

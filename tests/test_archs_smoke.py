@@ -13,6 +13,8 @@ from repro.configs import ARCHS, get_config, smoke_config
 from repro.models import lm
 from repro.distributed import sharding
 
+pytestmark = pytest.mark.slow  # heavy model/train/serve tier — excluded from fast CI
+
 
 def _batch_for(cfg, B, S, key):
     ks = jax.random.split(key, 3)

@@ -43,9 +43,10 @@ def test_batch_and_jit(fid):
     vals = jax.jit(fn)(X)
     assert vals.shape == (32,)
     assert bool(jnp.all(jnp.isfinite(vals)))
-    # single-row and batch agree
+    # single-row and batch agree (XLA may reassociate the batched GEMMs,
+    # so exact bitwise equality is not guaranteed across batch shapes)
     np.testing.assert_allclose(np.asarray(jax.jit(fn)(X[3:4]))[0],
-                               np.asarray(vals)[3], rtol=1e-12)
+                               np.asarray(vals)[3], rtol=1e-10)
 
 
 def test_instances_differ():

@@ -8,6 +8,8 @@ import pytest
 from repro.kernels import ref
 from repro.models.flash_xla import flash_mha
 
+pytestmark = pytest.mark.slow  # heavy model/train/serve tier — excluded from fast CI
+
 
 def _inputs(B, S, H, Hk, D, dtype=jnp.float32, seed=0):
     ks = jax.random.split(jax.random.PRNGKey(seed), 3)

@@ -9,6 +9,8 @@ from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.rwkv6_wkv import wkv6_forward, CHUNK
 
+pytestmark = pytest.mark.slow  # heavy model/train/serve tier — excluded from fast CI
+
 
 def _tol(dtype):
     return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \

@@ -1,0 +1,234 @@
+"""Device-resident IPOP ladder engine (core/ladder.py).
+
+Covers the PR's acceptance bar: host-loop ↔ ladder trajectory equivalence on
+the shared key schedule, in-place doubled-λ restarts, the single-compile
+whole-campaign program, and the batched BBOB dispatch it rides on.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cmaes, ladder, stopping
+from repro.core.ipop import run_ipop, run_ipop_hostloop
+from repro.core.params import ladder_params, select_params
+from repro.fitness import bbob
+
+
+# ---------------------------------------------------------------------------
+# equivalence: device-resident sequential ladder == host-loop baseline
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fid", [1, 8])
+def test_ladder_matches_hostloop(fid):
+    n = 4
+    inst = bbob.make_instance(fid, n, 1)
+    fit = lambda X: bbob.evaluate(fid, inst, X)
+    kw = dict(lam_start=8, kmax_exp=2, max_evals=5000)
+    res_l = run_ipop(fit, n, jax.random.PRNGKey(7), **kw)
+    res_h = run_ipop_hostloop(fit, n, jax.random.PRNGKey(7), **kw)
+
+    assert res_l.total_fevals == res_h.total_fevals
+    assert len(res_l.descents) == len(res_h.descents)
+    for dl, dh in zip(res_l.descents, res_h.descents):
+        assert dl.k_exp == dh.k_exp and dl.lam == dh.lam
+        assert len(dl.best_f) == len(dh.best_f)
+        # the two programs are the same arithmetic modulo batched-vs-unbatched
+        # lowering (vmapped eigh/GEMM); on f8 that ~1e-13 seed difference is
+        # amplified chaotically late in a descent, hence the loose tolerance
+        np.testing.assert_allclose(dl.best_f, dh.best_f, rtol=1e-5, atol=1e-7)
+        np.testing.assert_array_equal(dl.fevals, dh.fevals)
+        assert dl.stop_reason == dh.stop_reason
+    np.testing.assert_allclose(res_l.best_f, res_h.best_f,
+                               rtol=1e-5, atol=1e-7)
+
+
+def test_ladder_rungs_increase_and_budget_respected():
+    fn, inst = bbob.make_fitness(1, 4)
+    res = run_ipop(fn, 4, jax.random.PRNGKey(0), lam_start=8,
+                   kmax_exp=2, max_evals=6000)
+    assert res.best_f - float(inst.f_opt) < 1e-8
+    lams = [d.lam for d in res.descents]
+    assert lams == sorted(lams) and len(lams) >= 1
+    assert res.total_fevals <= 6000
+
+
+# ---------------------------------------------------------------------------
+# in-place restart: λ doubles, state re-initializes on device
+# ---------------------------------------------------------------------------
+
+def test_forced_stop_doubles_lambda_and_reinits_in_place():
+    engine = ladder.LadderEngine(n=4, lam_start=6, kmax_exp=2,
+                                 schedule="sequential", max_evals=10**9)
+    base = jax.random.PRNGKey(3)
+    carry = engine.init_carry(base)
+    m_before = np.asarray(carry.states.m).copy()
+
+    # force MaxIter on the next update: gen already at the rung-0 allowance
+    big = jnp.broadcast_to(select_params(engine.sparams, 0).max_iter, (1,))
+    carry = carry._replace(states=carry.states._replace(
+        gen=big.astype(jnp.int32)))
+
+    sphere = lambda X: jnp.sum(X ** 2, axis=-1)
+    carry2, trace = engine.gen_step(carry, base, sphere)
+
+    assert bool(trace.stopped[0])
+    assert int(trace.stop_reason[0]) & stopping.MAXITER
+    # λ doubled: rung 0 → rung 1, params gathered from the stack
+    assert int(carry2.k_idx[0]) == 1
+    assert int(select_params(engine.sparams, carry2.k_idx[0]).lam) == 12
+    # state re-initialized in place (no host round-trip): gen reset, σ reset,
+    # C back to identity, mean re-drawn from the fresh incarnation key
+    assert int(carry2.states.gen[0]) == 0
+    assert float(carry2.states.sigma[0]) == pytest.approx(engine.cfg.sigma0)
+    np.testing.assert_array_equal(np.asarray(carry2.states.C[0]), np.eye(4))
+    assert int(carry2.incarnation[0]) == 1
+    assert int(carry2.states.restarts[0]) == 1
+    expected = ladder.fresh_state(
+        engine.cfg, ladder.slot_key(base, 0, 1), engine.domain)
+    np.testing.assert_allclose(np.asarray(carry2.states.m[0]),
+                               np.asarray(expected.m))
+    assert not np.allclose(np.asarray(carry2.states.m[0]), m_before[0])
+
+
+def test_sequential_slot_retires_after_last_rung():
+    # a flat function trips TolUpSigma/TolFun quickly on every rung
+    flat = lambda X: jnp.zeros(X.shape[0], X.dtype)
+    engine = ladder.LadderEngine(n=3, lam_start=4, kmax_exp=1,
+                                 schedule="sequential", max_evals=10**6)
+    carry, trace = engine.run(jax.random.PRNGKey(0), flat, total_gens=400)
+    ran = np.asarray(trace.ran)[:, 0]
+    stops = np.asarray(trace.stopped)[:, 0]
+    assert stops.sum() == 2            # both rungs stopped
+    assert not bool(np.asarray(carry.active)[0])   # slot retired
+    assert not ran[-1]                 # trailing generations are masked no-ops
+
+
+def test_concurrent_schedule_restarts_double_in_place():
+    flat = lambda X: jnp.zeros(X.shape[0], X.dtype)
+    engine = ladder.LadderEngine(n=3, lam_start=4, kmax_exp=2,
+                                 schedule="concurrent", max_evals=10**6)
+    carry, trace = engine.run(jax.random.PRNGKey(1), flat, total_gens=300)
+    k_idx = np.asarray(carry.k_idx)
+    inc = np.asarray(carry.incarnation)
+    assert (inc >= 1).all()                       # every slot restarted
+    assert (k_idx <= engine.kmax_exp).all()       # doubling clips at the top
+    assert k_idx[0] > 0                           # slot 0 walked up the ladder
+    assert bool(np.asarray(carry.active).all())   # concurrent slots never retire
+
+
+# ---------------------------------------------------------------------------
+# whole-campaign single program
+# ---------------------------------------------------------------------------
+
+def test_campaign_single_compile_and_converges():
+    engine = ladder.LadderEngine(n=4, lam_start=8, kmax_exp=2,
+                                 schedule="sequential", max_evals=5000)
+    res = ladder.run_campaign(engine, fids=(1, 8), instances=(1,), runs=2,
+                              seed=0)
+    # ≥2 fids × ≥2 runs in ONE jitted/vmapped program: one executable
+    assert len(res.members) == 4
+    assert res.compiles == 1
+    # a second campaign with the same shapes reuses the cached executable
+    res2 = ladder.run_campaign(engine, fids=(1, 8), instances=(1,), runs=2,
+                               seed=9)
+    assert res2.compiles == 1
+    # sphere members must converge; every member respects the budget
+    err = res.best_f - res.f_opt
+    for (fid, _i, _r), e in zip(res.members, err):
+        if fid == 1:
+            assert e < 1e-8
+    assert (res.total_fevals <= 5000).all()
+    # campaign member 0 reproduces a standalone run on the same derived key
+    inst = bbob.make_instance(1, 4, 1)
+    fit = lambda X: bbob.evaluate(1, inst, X)
+    solo = run_ipop(fit, 4, jax.random.fold_in(jax.random.PRNGKey(0), 0),
+                    lam_start=8, kmax_exp=2, max_evals=5000)
+    np.testing.assert_allclose(solo.best_f, res.best_f[0], rtol=1e-9)
+
+
+def test_campaign_hit_evals_monotone():
+    engine = ladder.LadderEngine(n=4, lam_start=8, kmax_exp=1,
+                                 schedule="sequential", max_evals=4000)
+    res = ladder.run_campaign(engine, fids=(1,), instances=(1,), runs=2)
+    hits = res.hit_evals(np.array([1e2, 1e-8]))
+    assert hits.shape == (2, 2)
+    assert (hits[:, 0] <= hits[:, 1]).all()
+    assert np.isfinite(hits[:, 0]).all()
+
+
+# ---------------------------------------------------------------------------
+# batched BBOB dispatch
+# ---------------------------------------------------------------------------
+
+def test_evaluate_stacked_matches_static_dispatch():
+    n = 5
+    fids = (1, 8, 21)          # includes a Gallagher (peak padding path)
+    insts = [bbob.make_instance(f, n, 1) for f in fids]
+    stacked = bbob.stack_instances(insts)
+    assert stacked.peaks_y.shape == (3, 101, n)
+    X = jax.random.uniform(jax.random.PRNGKey(0), (3, 7, n),
+                           jnp.float64, -5.0, 5.0)
+    fid_arr = jnp.asarray(fids, jnp.int32)
+    out = jax.jit(lambda fa, i, x: bbob.evaluate_stacked(fa, i, x, fids))(
+        fid_arr, stacked, X)
+    assert out.shape == (3, 7)
+    for j, f in enumerate(fids):
+        np.testing.assert_allclose(np.asarray(out[j]),
+                                   np.asarray(bbob.evaluate(f, insts[j], X[j])),
+                                   rtol=1e-12)
+
+
+def test_padded_gen_step_matches_dense_step_on_unpadded_width():
+    """λ == λ_max: the padded step must reduce to the dense cmaes.step."""
+    from repro.core.params import CMAConfig, make_params
+    cfg = CMAConfig(n=4, lam=12)
+    p = make_params(cfg)
+    sphere = lambda X: jnp.sum(X ** 2, axis=-1)
+    st = cmaes.init_state(cfg, jax.random.PRNGKey(0), jnp.ones(4), 0.5)
+    k = jax.random.PRNGKey(1)
+    a = ladder.padded_gen_step(cfg, p, st, k, sphere)
+    b = cmaes.step(cfg, p, st, sphere, k)
+    np.testing.assert_allclose(np.asarray(a.m), np.asarray(b.m), rtol=1e-12)
+    np.testing.assert_allclose(np.asarray(a.C), np.asarray(b.C), rtol=1e-12)
+
+
+def test_check_stop_stacked_matches_per_slot():
+    """The stacked stopping helper agrees with per-rung check_stop calls."""
+    from repro.core.params import select_params as sel
+    engine = ladder.LadderEngine(n=4, lam_start=6, kmax_exp=2,
+                                 schedule="concurrent", max_evals=10**6)
+    carry = engine.init_carry(jax.random.PRNGKey(2))
+    params_k = sel(engine.sparams, carry.k_idx)
+    f_sorted = jnp.broadcast_to(
+        jnp.sort(jnp.arange(engine.lam_max, dtype=jnp.float64)),
+        (engine.n_slots, engine.lam_max))
+    stacked = stopping.check_stop_stacked(engine.cfg, params_k,
+                                          carry.states, f_sorted)
+    for s in range(engine.n_slots):
+        one = stopping.check_stop(engine.cfg, sel(params_k, s),
+                                  jax.tree_util.tree_map(lambda a: a[s],
+                                                         carry.states),
+                                  f_sorted[s])
+        assert int(stacked[s]) == int(one)
+
+
+def test_concurrent_budget_never_overspent():
+    """Slots spending from the shared budget in one step must not overshoot."""
+    sphere = lambda X: jnp.sum(X ** 2, axis=-1)
+    engine = ladder.LadderEngine(n=3, lam_start=4, kmax_exp=2,
+                                 schedule="concurrent", max_evals=38)
+    carry, _ = engine.run(jax.random.PRNGKey(0), sphere, total_gens=20)
+    assert int(carry.total_fevals) <= 38
+
+
+def test_ladder_params_per_rung_max_iter():
+    from repro.core.params import CMAConfig
+    cfg = CMAConfig(n=10, lam=48, lam_max=48)
+    sp = ladder_params(cfg, lam_start=12, kmax_exp=2)
+    assert sp.lam.tolist() == [12, 24, 48]
+    mi = sp.max_iter.tolist()
+    assert mi[0] > mi[1] > 0           # smaller rungs get more generations
+    w = np.asarray(sp.weights)
+    assert w.shape == (3, 48)
+    np.testing.assert_allclose(w.sum(axis=1), 1.0, rtol=1e-12)

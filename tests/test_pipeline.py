@@ -1,4 +1,6 @@
 """Pipeline parallelism: GPipe schedule correctness vs sequential layers."""
+import pytest
+
 import json
 import subprocess
 import sys
@@ -6,6 +8,8 @@ import sys
 import numpy as np
 
 from repro.distributed.pipeline import bubble_fraction
+
+pytestmark = pytest.mark.slow  # heavy model/train/serve tier — excluded from fast CI
 
 
 def test_bubble_fraction_law():

@@ -4,7 +4,12 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need the optional 'hypothesis' dep (test extra)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import cmaes, eval_dispatch
 from repro.core.params import CMAConfig, make_params

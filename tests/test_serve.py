@@ -14,6 +14,8 @@ from repro.distributed import sharding
 from repro.models import lm
 from repro.serve.engine import Engine, Request
 
+pytestmark = pytest.mark.slow  # heavy model/train/serve tier — excluded from fast CI
+
 
 def test_engine_generates_consistent_greedy():
     cfg = smoke_config("qwen2-0.5b")

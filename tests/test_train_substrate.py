@@ -18,6 +18,8 @@ from repro.train import optimizer as opt_mod
 from repro.train import train_step as ts_mod
 from repro.train.trainer import Trainer, TrainerConfig
 
+pytestmark = pytest.mark.slow  # heavy model/train/serve tier — excluded from fast CI
+
 
 # ---------------------------------------------------------------------------
 # optimizer
