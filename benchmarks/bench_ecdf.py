@@ -10,7 +10,7 @@ import argparse
 import jax
 import numpy as np
 
-from benchmarks.bench_strategies import (TARGETS, kd_hit_times, kr_hit_times,
+from benchmarks.bench_strategies import (kd_hit_times, kr_hit_times,
                                          seq_hit_times)
 from benchmarks.parallel_time import CostModel
 from repro.core import ladder

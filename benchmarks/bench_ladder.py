@@ -1,11 +1,19 @@
-"""Host-loop vs device-resident ladder: wall-time and evals/sec.
+"""Ladder-engine benchmarks: host loop vs padded scan vs rung buckets.
 
-Runs the same (function, run) members once through the legacy host-driven
-chunked IPOP loop (per-descent dispatch, host-side early exit) and once as a
-single jitted/vmapped ladder campaign, and writes ``BENCH_ladder.json`` so
-the perf trajectory of the ladder engine is recorded per commit.
+Two sections, two artifacts:
+
+* ``main`` (``BENCH_ladder.json``) — the PR-1 comparison: legacy host-driven
+  chunked IPOP loop vs the device-resident λ_max-padded ladder campaign,
+  now also reporting the padded engine's per-rung padding waste.
+* ``main_bucketed`` (``BENCH_bucketed.json``) — the work-proportional
+  comparison on a config where padding actually bites (kmax_exp=4 → 16×
+  λ padding, eigen_interval>1): PR-1's flat scan (whose ``lax.cond`` eigen
+  laziness vmap silently defeats) vs this PR's nested-scan padded engine vs
+  the rung-bucketed segment driver under both scheduling policies, with
+  per-bucket steady-state timings and padded-vs-useful accounting.
 
   PYTHONPATH=src python -m benchmarks.bench_ladder [--dim 10] [--fids 1,8]
+  PYTHONPATH=src python -m benchmarks.bench_ladder --bucketed [--dim 32]
 """
 from __future__ import annotations
 
@@ -19,9 +27,25 @@ jax.config.update("jax_enable_x64", True)
 
 import numpy as np  # noqa: E402
 
-from repro.core import ladder  # noqa: E402
+from repro.core import bucketed, ladder  # noqa: E402
 from repro.core.ipop import run_ipop_hostloop  # noqa: E402
 from repro.fitness import bbob  # noqa: E402
+
+
+def _timed_campaign(engine, fids, runs, seed):
+    t0 = time.perf_counter()
+    res = ladder.run_campaign(engine, fids=fids, instances=(1,), runs=runs,
+                              seed=seed)
+    jax.block_until_ready(res.best_f)
+    return res, time.perf_counter() - t0
+
+
+def _timed_bucketed(engine, fids, runs, seed):
+    t0 = time.perf_counter()
+    res = bucketed.run_campaign_bucketed(engine, fids=fids, instances=(1,),
+                                         runs=runs, seed=seed)
+    jax.block_until_ready(res.best_f)
+    return res, time.perf_counter() - t0
 
 
 def main(argv=None):
@@ -55,16 +79,8 @@ def main(argv=None):
     engine = ladder.LadderEngine(
         n=args.dim, lam_start=args.lam_start, kmax_exp=args.kmax,
         schedule="sequential", max_evals=args.max_evals)
-    t0 = time.perf_counter()
-    res1 = ladder.run_campaign(engine, fids=fids, instances=(1,),
-                               runs=args.runs, seed=0)
-    jax.block_until_ready(res1.best_f)
-    first_wall = time.perf_counter() - t0          # includes the one compile
-    t0 = time.perf_counter()
-    res2 = ladder.run_campaign(engine, fids=fids, instances=(1,),
-                               runs=args.runs, seed=1)
-    jax.block_until_ready(res2.best_f)
-    steady_wall = time.perf_counter() - t0         # cached executable
+    res1, first_wall = _timed_campaign(engine, fids, args.runs, 0)
+    res2, steady_wall = _timed_campaign(engine, fids, args.runs, 1)
     ladder_evals = int(np.sum(res2.total_fevals))
 
     out = {
@@ -74,7 +90,9 @@ def main(argv=None):
             "max_evals": args.max_evals, "lam_max": engine.lam_max,
             "members": len(members),
             "note": "evals/sec counts useful (unpadded) evaluations; the "
-                    "ladder additionally pays lam_max padding on device",
+                    "ladder additionally pays lam_max padding on device — "
+                    "see BENCH_bucketed.json for the work-proportional "
+                    "engines",
         },
         "host_loop": {
             "wall_s": round(host_wall, 4),
@@ -87,6 +105,8 @@ def main(argv=None):
             "evals": ladder_evals,
             "evals_per_s": round(ladder_evals / max(steady_wall, 1e-9), 1),
             "compiles": res2.compiles,
+            "padding": bucketed.padding_report(
+                res2.trace, args.lam_start, args.kmax, engine.lam_max),
         },
         "speedup_steady": round(
             (ladder_evals / max(steady_wall, 1e-9))
@@ -99,5 +119,95 @@ def main(argv=None):
     return out
 
 
+def main_bucketed(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dim", type=int, default=32)
+    ap.add_argument("--fids", default="1,8")
+    ap.add_argument("--runs", type=int, default=2)
+    ap.add_argument("--lam-start", type=int, default=8)
+    ap.add_argument("--kmax", type=int, default=4)
+    ap.add_argument("--max-evals", type=int, default=20_000)
+    ap.add_argument("--eigen-interval", type=int, default=5)
+    ap.add_argument("--out", default="BENCH_bucketed.json")
+    args = ap.parse_args(argv)
+    fids = [int(f) for f in args.fids.split(",")]
+    kw = dict(n=args.dim, lam_start=args.lam_start, kmax_exp=args.kmax,
+              max_evals=args.max_evals, eigen_interval=args.eigen_interval)
+
+    sections = {}
+
+    def ladder_section(label, eigen_schedule):
+        eng = ladder.LadderEngine(schedule="sequential",
+                                  eigen_schedule=eigen_schedule, **kw)
+        _, first = _timed_campaign(eng, fids, args.runs, 0)
+        res, steady = _timed_campaign(eng, fids, args.runs, 1)
+        evals = int(np.sum(res.total_fevals))
+        sections[label] = {
+            "first_call_wall_s": round(first, 4),
+            "wall_s": round(steady, 4),
+            "evals": evals,
+            "evals_per_s": round(evals / max(steady, 1e-9), 1),
+            "compiles": res.compiles,
+            "padding": bucketed.padding_report(
+                res.trace, args.lam_start, args.kmax, eng.lam_max),
+        }
+        return evals / max(steady, 1e-9)
+
+    # PR-1's engine: flat scan, λ_max padding, eigh every vmapped generation
+    flat_rate = ladder_section("ladder_flat_pr1", "flat")
+    # this PR, axis 2: nested scan — eigh once per eigen block
+    ladder_section("ladder_nested", "nested")
+
+    # this PR, axis 1+2: rung buckets over the nested scan
+    for policy in ("cover", "min"):
+        eng_b = bucketed.BucketedLadderEngine(policy=policy, **kw)
+        _, first = _timed_bucketed(eng_b, fids, args.runs, 0)
+        res_b, steady = _timed_bucketed(eng_b, fids, args.runs, 1)
+        sections[f"bucketed_{policy}"] = {
+            "first_call_wall_s": round(first, 4),
+            "wall_s": round(steady, 4),
+            "evals": res_b.useful_evals,
+            "evals_per_s": round(res_b.useful_evals / max(steady, 1e-9), 1),
+            "compiles": res_b.compiles,
+            "segments": res_b.segments,
+            "bucket_wall_s": {str(k): v
+                              for k, v in res_b.bucket_wall_s.items()},
+            "padding": {
+                "useful_evals": res_b.useful_evals,
+                "padded_evals": res_b.padded_evals,
+                "waste": round(res_b.padding_waste(), 3),
+            },
+        }
+
+    out = {
+        "config": {
+            "dim": args.dim, "fids": fids, "runs": args.runs,
+            "lam_start": args.lam_start, "kmax_exp": args.kmax,
+            "max_evals": args.max_evals,
+            "eigen_interval": args.eigen_interval,
+            "lam_max": (2 ** args.kmax) * args.lam_start,
+            "note": "useful-evals/sec, identical workload per engine; "
+                    "ladder_flat_pr1 is PR 1's λ_max-padded flat-scan "
+                    "engine (vmap-defeated eigh laziness)",
+        },
+        **sections,
+        "speedups_vs_flat_ladder": {
+            label: round(sections[label]["evals_per_s"]
+                         / max(flat_rate, 1e-9), 3)
+            for label in sections if label != "ladder_flat_pr1"
+        },
+    }
+    with open(args.out, "w") as fh:
+        json.dump(out, fh, indent=2)
+    print(json.dumps(out, indent=2))
+    print(f"[bench_ladder] wrote {args.out}")
+    return out
+
+
 if __name__ == "__main__":
-    main()
+    import sys
+    if "--bucketed" in sys.argv:
+        sys.argv.remove("--bucketed")
+        main_bucketed()
+    else:
+        main()

@@ -44,6 +44,12 @@ def main(argv=None):
                            "--lam-start", "8", "--kmax", "2",
                            "--max-evals", "6000", "--out",
                            "BENCH_ladder.json"])
+        section("Smoke — work-proportional campaigns (buckets + eigen blocks)")
+        bench_ladder.main_bucketed(["--dim", "32", "--fids", "1,8",
+                                    "--runs", "2", "--lam-start", "8",
+                                    "--kmax", "4", "--max-evals", "20000",
+                                    "--eigen-interval", "5", "--out",
+                                    "BENCH_bucketed.json"])
         print(f"\n[benchmarks.run] total {time.time() - t0:.1f}s")
         return 0
 

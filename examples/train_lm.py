@@ -13,8 +13,6 @@ import argparse
 import dataclasses
 import shutil
 
-import jax
-
 from repro.configs import smoke_config
 from repro.train import optimizer as opt_mod
 from repro.train import train_step as ts_mod

@@ -16,7 +16,7 @@ Shapes (assignment):
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,0 +1,379 @@
+"""Rung-bucketed campaign execution — work proportional to the active rung.
+
+The λ_max-padded ladder engine (core/ladder.py) compiles ONE program whose
+every generation samples, evaluates and Gram-reduces λ_max points even when
+the live rung needs only λ_start — a 2^kmax× (16× at paper defaults)
+overcount of sampling, evaluation and rank-μ GEMM work on the first rung,
+and a λ_max-padded masked tail once a member's ladder is exhausted.  This
+module replaces the single program with a small FAMILY of per-rung-bucket
+programs plus a host-side segment driver:
+
+* **Bucket programs** — bucket k pads to λ_k = 2^k·λ_start
+  (``params.bucket_config``) and carries the rung-0..k parameter stack
+  padded to that width.  Each program runs a fixed-length *segment*
+  (``seg_blocks`` eigen blocks of the nested scan — see
+  ``ladder.scan_eigen_blocks``) over the FULL campaign batch, jitted and
+  vmapped exactly like ``LadderEngine.campaign_runner``; shapes are cached,
+  so the whole campaign compiles at most once per bucket
+  (``compiles ≤ kmax_exp+1``, asserted in tests/test_bucketed.py).
+* **Parking** — inside a bucket-k program, members whose rung index exceeds
+  k (their in-place restart outgrew the bucket) or whose ladder
+  retired/budget died are parked: ``ran=False``, state frozen
+  (``slots_gen_step(bucket_cap=k)``).
+* **Segment driver** (``run_campaign_bucketed``) — between device-resident
+  segments it pulls only the (B,) rung indices / active flags, re-buckets
+  members as their rungs advance (members only move up, so it always runs
+  the lowest occupied bucket next), and stops as soon as every member has
+  retired or exhausted its budget — no λ_max-padded masked tail.
+
+Trajectory equivalence with the padded engine holds when the eigen cadence
+is unchanged (``eigen_interval == 1``): sampling is row-keyed
+(``cmaes.sample_population``), so a member sees the identical z-stream, rank
+weights and Gram reductions no matter which bucket executes it — while each
+bucket pays RNG proportional to its own width, not λ_max's.  The compiled
+programs differ in shape, so XLA's fusion choices leave ~1e-13 seed noise
+that chaos can amplify late in a descent — the same tolerance the host-loop
+baseline comparison carries (tests/test_ladder.py).  With
+``eigen_interval > 1`` the nested-scan eigen cadence is segment-local rather
+than campaign-global and the engines are ECDF-equivalent instead
+(tests/test_bucketed.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ladder
+from repro.core.params import bucket_config, default_max_iter, ladder_params
+from repro.fitness import bbob
+
+
+@dataclasses.dataclass
+class BucketedLadderEngine:
+    """Per-rung-bucket compiled programs over a shared ladder state.
+
+    Mirrors ``LadderEngine``'s sequential schedule (one slot walking the
+    rungs) and its key schedule exactly; ``schedule="concurrent"`` keeps all
+    rungs live at once and therefore has no narrow bucket to exploit.
+    """
+
+    n: int
+    lam_start: int = 12
+    kmax_exp: int = 4
+    max_evals: int = 200_000
+    domain: Tuple[float, float] = (-5.0, 5.0)
+    sigma0_frac: float = 0.25
+    impl: str = "xla"
+    dtype: str = "float64"
+    eigen_interval: Optional[int] = None
+    seg_blocks: Optional[int] = None    # segment length cap in eigen blocks
+    policy: str = "cover"               # "cover" | "min" (see run_campaign_bucketed)
+
+    def __post_init__(self):
+        if self.policy not in ("cover", "min"):
+            raise ValueError(f"unknown policy {self.policy!r}")
+        if self.seg_blocks is None and self.policy == "cover":
+            # cover tracks the max live rung, so segments must stay short
+            # enough for the covering bucket to follow climbers between
+            # host syncs (a sync is ~ms; a 64-block segment is ~100ms)
+            self.seg_blocks = 64
+        # the λ_max-padded engine supplies cfg/sparams/key schedule/init —
+        # buckets only narrow the padding.
+        self.full = ladder.LadderEngine(
+            n=self.n, lam_start=self.lam_start, kmax_exp=self.kmax_exp,
+            schedule="sequential", max_evals=self.max_evals,
+            domain=self.domain, sigma0_frac=self.sigma0_frac, impl=self.impl,
+            dtype=self.dtype, eigen_interval=self.eigen_interval)
+        self.lam_max = self.full.lam_max
+        self.interval = int(self.full.cfg.eigen_interval)
+        self.bucket_cfgs = []
+        self.bucket_sparams = []
+        for k in range(self.kmax_exp + 1):
+            lam_k = (2 ** k) * self.lam_start
+            cfg_k = bucket_config(self.full.cfg, lam_k)
+            self.bucket_cfgs.append(cfg_k)
+            self.bucket_sparams.append(
+                ladder_params(cfg_k, self.lam_start, k))
+        self._runner_cache: dict = {}
+        self._init_runner = jax.jit(jax.vmap(self.full.init_carry))
+
+    # -- sizing ---------------------------------------------------------------
+    def bucket_seg_gens(self, k: int, need_gens: Optional[int] = None) -> int:
+        """Segment length (generations) of bucket k: whole eigen blocks,
+        capped by what a rung-k descent can possibly still run — its MaxIter
+        allowance, the budget's generation count at λ_k, and (when the
+        driver knows it) the cohort's actual remaining-budget need.  The
+        block count is rounded UP to a power of two so segment shapes come
+        from a tiny menu and the jit cache stays hot across campaigns."""
+        lam_k = (2 ** k) * self.lam_start
+        most = max(1, self.max_evals // lam_k)
+        if self.policy == "min":
+            # a bucket-k cohort is all ON rung k, so its descents cannot
+            # outlive rung k's own MaxIter allowance; under "cover" lower-rung
+            # members keep walking the ladder inside the same segment
+            most = min(most, default_max_iter(self.n, lam_k))
+        if need_gens is not None:
+            most = min(most, max(1, int(need_gens)))
+        blocks = -(-most // self.interval)
+        blocks = 1 << (blocks - 1).bit_length()          # next power of two
+        if self.seg_blocks is not None:
+            blocks = min(blocks, max(1, int(self.seg_blocks)))
+        return blocks * self.interval
+
+    def init_carry(self, base_key: jax.Array) -> ladder.LadderCarry:
+        return self.full.init_carry(base_key)
+
+    # -- one bucket segment as a pure scanned program --------------------------
+    def segment_scan(self, k: int, base_key: jax.Array, fitness_fn: Callable,
+                     carry: ladder.LadderCarry, seg_gens: int,
+                     ) -> Tuple[ladder.LadderCarry, ladder.LadderTrace]:
+        cfg_k = self.bucket_cfgs[k]
+        sparams_k = self.bucket_sparams[k]
+
+        def step_fn(c, eigen):
+            return ladder.slots_gen_step(
+                cfg_k, sparams_k, c, base_key, fitness_fn,
+                max_evals=self.max_evals, kmax_exp=self.kmax_exp,
+                schedule="sequential", domain=self.domain, impl=self.impl,
+                eigen=eigen, bucket_cap=k)
+
+        return ladder.scan_eigen_blocks(step_fn, carry, self.interval,
+                                        int(seg_gens) // self.interval)
+
+    def segment_runner(self, k: int, branch_fids: Tuple[int, ...],
+                       seg_gens: int):
+        """Jitted vmapped segment program, cached per (bucket, length, fids)."""
+        key = (int(k), int(seg_gens), tuple(branch_fids))
+        if key not in self._runner_cache:
+            def run_one(base_key, inst, carry):
+                def fit(X):
+                    return bbob.evaluate_dynamic(inst, X, branch_fids)
+                return self.segment_scan(k, base_key, fit, carry, seg_gens)
+            self._runner_cache[key] = jax.jit(jax.vmap(run_one))
+        return self._runner_cache[key]
+
+    def compiles(self) -> int:
+        total = 0
+        for fn in self._runner_cache.values():
+            cs = getattr(fn, "_cache_size", None)
+            total += int(cs()) if callable(cs) else 1
+        return total
+
+
+@dataclasses.dataclass
+class BucketedCampaignResult(ladder.CampaignResult):
+    """Campaign result plus the driver's per-bucket execution record.
+
+    ``trace`` concatenates the per-segment traces along time: each member's
+    generations appear in its own chronological order (the driver runs one
+    bucket at a time and members only move upward), with parked steps as
+    ``ran=False`` rows — every ``CampaignResult`` consumer (``hit_evals``,
+    the ipop slicer) already masks on ``ran``.
+    """
+
+    segments: List[dict] = dataclasses.field(default_factory=list)
+    bucket_wall_s: Dict[int, float] = dataclasses.field(default_factory=dict)
+    useful_evals: int = 0
+    padded_evals: int = 0
+
+    def padding_waste(self) -> float:
+        """Padded-to-useful evaluation ratio actually paid on device."""
+        return self.padded_evals / max(self.useful_evals, 1)
+
+
+def _useful_evals_per_rung(trace: ladder.LadderTrace, lam_start: int,
+                           kmax_exp: int) -> Dict[int, int]:
+    """Σ over executed generations of that generation's true λ, keyed by rung."""
+    ran = np.asarray(trace.ran)
+    k_idx = np.asarray(trace.k_idx)
+    out = {}
+    for k in range(kmax_exp + 1):
+        gens_k = int(np.sum(ran & (k_idx == k)))
+        out[k] = gens_k * (2 ** k) * lam_start
+    return out
+
+
+def padding_report(trace: ladder.LadderTrace, lam_start: int, kmax_exp: int,
+                   padded_lam: int) -> dict:
+    """Padded-vs-useful evaluation accounting of a fixed-width campaign trace.
+
+    Every (member, step, slot) cell of a ``padded_lam``-wide program pays
+    ``padded_lam`` evaluation rows on device (masked tail steps included);
+    the useful count is each executed generation's true rung λ.  Returns
+    per-rung useful counts plus the overall waste ratio — the number the
+    rung-bucketed driver exists to shrink (benchmarks/bench_ladder.py).
+    """
+    useful = _useful_evals_per_rung(trace, lam_start, kmax_exp)
+    padded = int(np.asarray(trace.ran).size) * int(padded_lam)
+    total_useful = int(sum(useful.values()))
+    return {
+        "useful_evals": total_useful,
+        "padded_evals": padded,
+        "waste": round(padded / max(total_useful, 1), 3),
+        "useful_per_rung": {str(k): v for k, v in useful.items()},
+    }
+
+
+def drive_segments(engine: BucketedLadderEngine, carry: ladder.LadderCarry,
+                   dispatch: Callable, max_segments: int = 10_000,
+                   time_axis: int = 1):
+    """The host-side re-bucketing loop shared by campaign and single runs.
+
+    ``dispatch(k, seg_gens, carry) -> (carry, trace)`` runs one jitted
+    segment of bucket ``k``.  Between segments only the (B,) rung indices,
+    active flags and budget counters cross the device boundary; per-segment
+    traces stay device-resident until the driver finishes.  Returns
+    ``(carry, trace, segments, bucket_wall)``; segment traces are
+    concatenated along ``time_axis`` (1 for vmapped campaigns whose leaves
+    are (B, T, ...), 0 for a single run's (T, ...)).
+    """
+    lam_start = engine.lam_start
+    seg_traces: List[ladder.LadderTrace] = []
+    segments: List[dict] = []
+    bucket_wall: Dict[int, float] = {}
+    seg_len: Dict[int, int] = {}        # one segment length per bucket/campaign
+
+    for _ in range(max_segments):
+        k_idx = np.atleast_1d(np.asarray(carry.k_idx)[..., 0])
+        active = np.atleast_1d(np.asarray(carry.active)[..., 0])
+        fevals = np.atleast_1d(np.asarray(carry.total_fevals))
+        lam_cur = lam_start * (2 ** k_idx)
+        live = active & (fevals + lam_cur <= engine.max_evals)
+        if not live.any():
+            break
+        if engine.policy == "min":
+            # narrowest program first: members only move up the ladder, so
+            # the lowest occupied rung is work-conserving (least padded rows)
+            k = int(k_idx[live].min())
+        else:
+            # covering program: every live member executes every step (no
+            # parked rows), padded only to the widest LIVE rung — fewest
+            # total scan steps (host-dispatch-bound backends)
+            k = int(k_idx[live].max())
+        if k not in seg_len:
+            # size this bucket's program for what its first cohort can still
+            # possibly run; ONE length per bucket keeps compiles ≤ #buckets
+            cohort = live if engine.policy == "cover" else live & (k_idx == k)
+            need = int(np.max((engine.max_evals - fevals[cohort])
+                              // lam_cur[cohort]))
+            seg_len[k] = engine.bucket_seg_gens(k, need_gens=need)
+        t0 = time.perf_counter()
+        carry, tr = dispatch(k, seg_len[k], carry)
+        jax.block_until_ready(carry.total_fevals)
+        wall = time.perf_counter() - t0
+        seg_traces.append(tr)           # device-resident; transfer at the end
+        segments.append({"bucket": k, "gens": seg_len[k],
+                         "wall_s": round(wall, 5)})
+        bucket_wall[k] = bucket_wall.get(k, 0.0) + wall
+    else:
+        raise RuntimeError("segment driver did not converge "
+                           f"within {max_segments} segments")
+
+    if not seg_traces:
+        # nothing could run (e.g. max_evals below one λ_start generation):
+        # return a zero-length trace shaped like the padded engine's, so
+        # every consumer sees the same empty-progress result
+        return carry, _empty_trace(carry, time_axis), segments, bucket_wall
+    trace = jax.tree_util.tree_map(
+        lambda *xs: np.concatenate([np.asarray(x) for x in xs],
+                                   axis=time_axis),
+        *seg_traces)
+    return carry, trace, segments, bucket_wall
+
+
+def _empty_trace(carry: ladder.LadderCarry, time_axis: int) -> ladder.LadderTrace:
+    """Zero-generation LadderTrace with the batch/slot layout of ``carry``."""
+    k = np.asarray(carry.k_idx)                       # (B, S) or (S,)
+    slot = k.shape[:time_axis] + (0,) + k.shape[time_axis:]
+    glob = k.shape[:time_axis] + (0,)
+    dt = np.asarray(carry.best_f).dtype
+    return ladder.LadderTrace(
+        ran=np.zeros(slot, bool),
+        k_idx=np.zeros(slot, np.int32),
+        gen=np.zeros(slot, np.int32),
+        fevals=np.zeros(slot, np.asarray(carry.states.fevals).dtype),
+        best_f=np.zeros(slot, dt),
+        stop_reason=np.zeros(slot, np.int32),
+        stopped=np.zeros(slot, bool),
+        total_fevals=np.zeros(glob, np.asarray(carry.total_fevals).dtype),
+        global_best=np.zeros(glob, dt))
+
+
+def run_bucketed_single(engine: BucketedLadderEngine, base_key: jax.Array,
+                        fitness_fn: Callable,
+                        max_segments: int = 10_000):
+    """One (un-vmapped) problem through the segment driver — the bucketed
+    backend behind ``ipop.run_ipop``.  Returns ``(carry, trace)`` shaped like
+    ``LadderEngine.run``'s output (trace leaves (T, S)).
+
+    Runners are cached per call, not on the engine: the fitness closure is
+    baked in at trace time, so an engine-level cache would silently replay a
+    previous call's fitness.
+    """
+    carry = jax.jit(engine.init_carry)(base_key)
+    cache: Dict[Tuple[int, int], Callable] = {}
+
+    def dispatch(k, seg_gens, c):
+        ck = (k, seg_gens)
+        if ck not in cache:
+            def run_seg(bk, cc, _k=k, _g=seg_gens):
+                return engine.segment_scan(_k, bk, fitness_fn, cc, _g)
+            cache[ck] = jax.jit(run_seg)
+        return cache[ck](base_key, c)
+
+    carry, trace, _segs, _walls = drive_segments(engine, carry, dispatch,
+                                                 max_segments, time_axis=0)
+    return carry, trace
+
+
+def run_campaign_bucketed(engine: BucketedLadderEngine, fids,
+                          instances=(1,), runs: int = 1, seed: int = 0,
+                          max_segments: int = 10_000,
+                          ) -> BucketedCampaignResult:
+    """Run a whole BBOB campaign through the rung-bucketed segment driver.
+
+    Same member layout, instance stacking and key schedule as
+    ``ladder.run_campaign`` — the two are trajectory-equivalent (bit-exact
+    arithmetic per generation at ``eigen_interval == 1``, modulo per-shape
+    XLA fusion rounding); this driver just never pays λ_max padding on a
+    λ_start rung and stops as soon as the whole cohort is done.
+    """
+    fids = tuple(fids)
+    members = [(f, i, r) for f in fids for i in instances for r in range(runs)]
+    insts = [bbob.make_instance(f, engine.n, i, engine.full.cfg.jdtype)
+             for (f, i, _r) in members]
+    stacked = bbob.stack_instances(insts)
+    branch_fids = tuple(sorted(set(fids)))
+
+    base = jax.random.PRNGKey(seed)
+    keys = jnp.stack([jax.random.fold_in(base, j) for j in range(len(members))])
+    carry = engine._init_runner(keys)
+
+    def dispatch(k, seg_gens, c):
+        runner = engine.segment_runner(k, branch_fids, seg_gens)
+        return runner(keys, stacked, c)
+
+    carry, trace, segments, bucket_wall = drive_segments(
+        engine, carry, dispatch, max_segments)
+    lam_start, kmax = engine.lam_start, engine.kmax_exp
+    useful = _useful_evals_per_rung(trace, lam_start, kmax)
+    B = len(members)
+    padded = sum(B * s["gens"] * (2 ** s["bucket"]) * lam_start
+                 for s in segments)
+    return BucketedCampaignResult(
+        members=members,
+        f_opt=np.asarray([i.f_opt for i in insts], np.float64),
+        best_f=np.asarray(carry.best_f),
+        best_x=np.asarray(carry.best_x),
+        total_fevals=np.asarray(carry.total_fevals),
+        trace=trace,
+        compiles=engine.compiles(),
+        segments=segments,
+        bucket_wall_s={k: round(v, 5) for k, v in bucket_wall.items()},
+        useful_evals=int(sum(useful.values())),
+        padded_evals=int(padded))

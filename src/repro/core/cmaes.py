@@ -24,8 +24,8 @@ from typing import Callable, NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.params import CMAConfig, CMAParams
 from repro.core import stopping
+from repro.core.params import CMAConfig, CMAParams
 from repro.kernels import ops as kops
 
 
@@ -79,12 +79,29 @@ def init_state(cfg: CMAConfig, key: jax.Array, x0: jnp.ndarray,
 # ---------------------------------------------------------------------------
 
 def sample_population(state: CMAState, key: jax.Array, lam_slots: int,
-                      impl: str = "xla") -> Tuple[jnp.ndarray, jnp.ndarray]:
+                      impl: str = "xla",
+                      row_keys: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Sample ``lam_slots`` points.  Returns (Y, X): x_k = m + σ·y_k, y = B·(D∘z).
 
     ``lam_slots`` is static — strategies call this with the per-device slot count.
+
+    ``row_keys=True`` (the repo-wide key schema) keys each population member
+    by ``fold_in(key, row)``, so row i's draw is independent of how many rows
+    a program materializes.  That makes the sample stream *prefix-stable
+    across padded widths*: a rung-bucketed program padded to λ_bucket < λ_max
+    (core/bucketed.py) sees bit-identical points to the λ_max-padded engine
+    and to the host-loop baseline on the same (slot, incarnation, generation)
+    key — AND pays RNG proportional to its own width instead of λ_max's.
+    ``row_keys=False`` keeps the flat counter draw (one block keyed by ``key``),
+    whose draw is width-dependent.
     """
-    z = jax.random.normal(key, (lam_slots, state.m.shape[0]), dtype=state.m.dtype)
+    n = state.m.shape[0]
+    if row_keys:
+        ks = jax.vmap(jax.random.fold_in, (None, 0))(
+            key, jnp.arange(lam_slots, dtype=jnp.uint32))
+        z = jax.vmap(lambda k: jax.random.normal(k, (n,), state.m.dtype))(ks)
+    else:
+        z = jax.random.normal(key, (lam_slots, n), dtype=state.m.dtype)
     y = kops.sample_transform(state.B, state.D, z, impl=impl)   # (lam, n)
     x = state.m[None, :] + state.sigma * y
     return y, x
@@ -138,9 +155,32 @@ def compute_moments(y: jnp.ndarray, fitness: jnp.ndarray, x: jnp.ndarray,
 # State update (replicated O(n²) part)
 # ---------------------------------------------------------------------------
 
+def eigen_decompose(C: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(B, D) factorization of a covariance: C = B·diag(D²)·Bᵀ."""
+    evals, evecs = jnp.linalg.eigh(C)
+    d = jnp.sqrt(jnp.maximum(evals, 1e-300))
+    return evecs, d
+
+
 def update_from_moments(cfg: CMAConfig, params: CMAParams, state: CMAState,
-                        mom: Moments, impl: str = "xla") -> CMAState:
-    """One CMA-ES generation given population moments.  Pure; no masking here."""
+                        mom: Moments, impl: str = "xla",
+                        eigen: str = "lazy") -> CMAState:
+    """One CMA-ES generation given population moments.  Pure; no masking here.
+
+    ``eigen`` (static) controls the B/D refresh from the new covariance:
+
+    * ``"lazy"``   — ``lax.cond`` on the per-descent cadence counter
+      (``gen − last_eigen_gen ≥ cfg.eigen_interval``).  Correct and cheap in
+      un-vmapped code, but vmap lowers the cond to a select that executes BOTH
+      branches, so every vmapped generation pays the full O(n³) ``eigh``
+      regardless of ``eigen_interval``.
+    * ``"always"`` — unconditional ``eigh``.  Used by the ladder engine on the
+      last generation of each eigen block of its nested scan: exactly one
+      batched ``eigh`` per block survives jit+vmap.
+    * ``"defer"``  — keep the frozen B/D and leave ``last_eigen_gen``
+      untouched; the inner generations of an eigen block.  The covariance C
+      itself is always updated — only its factorization is stale.
+    """
     n = cfg.n
     dt = state.m.dtype
     lam_f = params.lam.astype(dt)
@@ -183,16 +223,20 @@ def update_from_moments(cfg: CMAConfig, params: CMAParams, state: CMAState,
     sigma_new = jnp.where(flat, sigma_new * jnp.exp(0.2 + c_sig / d_sig), sigma_new)
 
     # -- lazy eigendecomposition ------------------------------------------------
-    do_eigen = (state.gen + 1 - state.last_eigen_gen) >= cfg.eigen_interval
-
-    def _eig(C):
-        evals, evecs = jnp.linalg.eigh(C)
-        d = jnp.sqrt(jnp.maximum(evals, 1e-300))
-        return evecs, d
-
-    B_new, D_new = jax.lax.cond(
-        do_eigen, lambda C: _eig(C), lambda _: (state.B, state.D), C_new)
-    last_eigen = jnp.where(do_eigen, state.gen + 1, state.last_eigen_gen)
+    if eigen == "lazy":
+        do_eigen = (state.gen + 1 - state.last_eigen_gen) >= cfg.eigen_interval
+        B_new, D_new = jax.lax.cond(
+            do_eigen, lambda C: eigen_decompose(C), lambda _: (state.B, state.D),
+            C_new)
+        last_eigen = jnp.where(do_eigen, state.gen + 1, state.last_eigen_gen)
+    elif eigen == "always":
+        B_new, D_new = eigen_decompose(C_new)
+        last_eigen = state.gen + 1
+    elif eigen == "defer":
+        B_new, D_new = state.B, state.D
+        last_eigen = state.last_eigen_gen
+    else:
+        raise ValueError(f"unknown eigen mode {eigen!r}")
 
     # -- bookkeeping -------------------------------------------------------------
     better = f_best_gen < state.best_f
@@ -216,9 +260,10 @@ def update_from_moments(cfg: CMAConfig, params: CMAParams, state: CMAState,
 
 
 def masked_update(cfg: CMAConfig, params: CMAParams, state: CMAState,
-                  mom: Moments, impl: str = "xla") -> CMAState:
+                  mom: Moments, impl: str = "xla",
+                  eigen: str = "lazy") -> CMAState:
     """Apply the generation update unless the descent already stopped."""
-    new = update_from_moments(cfg, params, state, mom, impl=impl)
+    new = update_from_moments(cfg, params, state, mom, impl=impl, eigen=eigen)
     return jax.tree_util.tree_map(
         lambda old, nw: jnp.where(state.stop, old, nw), state, new)
 

@@ -99,9 +99,11 @@ def run_ipop(fitness_fn: Callable, n: int, key: jax.Array,
     """Paper Alg. 2 with multiplicative factor 2 and K_max = 2^kmax_exp.
 
     ``backend="ladder"`` (default) runs the whole restart ladder as one
-    device-resident scanned program; ``backend="hostloop"`` keeps the legacy
-    host-driven chunked loop (same keys, same padded arithmetic).  ``chunk``
-    only affects the host-loop backend.
+    device-resident scanned program; ``backend="bucketed"`` drives it through
+    the rung-bucketed segment programs (core/bucketed.py — work proportional
+    to the live rung instead of λ_max); ``backend="hostloop"`` keeps the
+    legacy host-driven chunked loop (same keys, same padded arithmetic).
+    ``chunk`` only affects the host-loop backend.
     """
     if backend == "hostloop":
         if total_gens is not None:
@@ -111,6 +113,17 @@ def run_ipop(fitness_fn: Callable, n: int, key: jax.Array,
             fitness_fn, n, key, lam_start=lam_start, kmax_exp=kmax_exp,
             max_evals=max_evals, domain=domain, sigma0_frac=sigma0_frac,
             chunk=chunk, impl=impl, dtype=dtype)
+    if backend == "bucketed":
+        from repro.core import bucketed as bucketed_mod
+        if total_gens is not None:
+            raise ValueError("total_gens only applies to backend='ladder'; "
+                             "the segment driver sizes its own programs")
+        engine_b = bucketed_mod.BucketedLadderEngine(
+            n=n, lam_start=lam_start, kmax_exp=kmax_exp, max_evals=max_evals,
+            domain=domain, sigma0_frac=sigma0_frac, impl=impl, dtype=dtype)
+        carry, trace = bucketed_mod.run_bucketed_single(engine_b, key,
+                                                        fitness_fn)
+        return _result_from_ladder(engine_b.full, carry, trace)
     if backend != "ladder":
         raise ValueError(f"unknown backend {backend!r}")
     engine = ladder_mod.LadderEngine(

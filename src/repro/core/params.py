@@ -152,6 +152,27 @@ def ladder_params(cfg: CMAConfig, lam_start: int, kmax_exp: int) -> CMAParams:
                          for k in range(kmax_exp + 1)])
 
 
+def bucket_config(cfg: CMAConfig, lam_bucket: int) -> CMAConfig:
+    """Narrow a full-ladder config to one rung bucket's padding width.
+
+    Everything that shapes the *trajectory* — tolerances, history length,
+    eigen cadence, per-rung iteration allowances — is inherited verbatim from
+    the λ_max-padded config; only the padded population width changes.  This
+    is what lets the rung-bucketed programs (core/bucketed.py) reproduce the
+    padded engine's arithmetic exactly while sampling/evaluating/Gram-reducing
+    λ_bucket instead of λ_max points.
+    """
+    if lam_bucket > cfg.lam_max:
+        raise ValueError(f"lam_bucket={lam_bucket} exceeds lam_max={cfg.lam_max}")
+    # dataclasses.replace keeps every *other* field verbatim — including any
+    # added later — so bucket programs can never silently drift from the
+    # full config's trajectory knobs.  max_iter=None re-derives the auto
+    # allowance for the bucket's own λ in __post_init__.
+    return dataclasses.replace(
+        cfg, lam=lam_bucket, lam_max=lam_bucket,
+        max_iter=None if getattr(cfg, "max_iter_auto", False) else cfg.max_iter)
+
+
 def select_params(sparams: CMAParams, idx) -> CMAParams:
     """Gather one rung's params from a stacked ladder by (possibly traced) index."""
     import jax

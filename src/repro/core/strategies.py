@@ -28,13 +28,12 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from functools import partial
 from typing import Callable, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import PartitionSpec as P
+import numpy as np
 
 from repro.core import cmaes, eval_dispatch
 from repro.core.params import CMAConfig, CMAParams, make_params, stack_params

@@ -195,44 +195,54 @@ class Analyzer:
             entry = list(self.comps)[-1] if self.comps else ""
         self.entry = entry
 
-    # flops of a computation including everything called from it, NO bytes
-    # (used for fused computations, whose inner ops touch no HBM)
-    def _flops_only(self, name: str) -> float:
-        if name in self._flops_memo:
-            return self._flops_memo[name]
+    # -- generic loop-aware scalar fold over the call graph -------------------
+    # One traversal serves every scalar metric (flops, executed-op counts):
+    # while bodies/conds × known_trip_count, conditionals take their max
+    # branch, fusions/calls/custom-calls recurse into the called computation.
+    def _fold_scalar(self, name: str, leaf_fn, memo: Dict[str, float]) -> float:
+        if name in memo:
+            return memo[name]
         comp = self.comps.get(name)
         if comp is None:
             return 0.0
-        self._flops_memo[name] = 0.0          # cycle guard
+        memo[name] = 0.0                      # cycle guard
         total = 0.0
         for ins in comp.instrs:
-            total += self._instr_flops(ins, comp)
-        self._flops_memo[name] = total
+            if ins.opcode == "while":
+                trip, body, cond = self._while_parts(ins)
+                total += trip * (self._fold_scalar(body, leaf_fn, memo)
+                                 + self._fold_scalar(cond, leaf_fn, memo))
+                continue
+            if ins.opcode == "conditional":
+                m = _COND_BRANCH_RE.search(ins.rest)
+                if m:
+                    branches = _OPERAND_RE.findall(m.group(1))
+                    total += max(
+                        (self._fold_scalar(b, leaf_fn, memo)
+                         for b in branches), default=0.0)
+                continue
+            total += leaf_fn(ins, comp)
+            if ins.opcode in ("fusion", "call", "custom-call"):
+                m = _CALLED_RE.search(ins.rest)
+                if m:
+                    total += self._fold_scalar(m.group(1), leaf_fn, memo)
+        memo[name] = total
         return total
 
-    def _instr_flops(self, ins: Instr, comp: Comp) -> float:
+    @staticmethod
+    def _leaf_flops(ins: Instr, comp: Comp) -> float:
         if ins.opcode == "dot":
             return _dot_flops(ins, comp)
         if ins.opcode in _ELEMENTWISE:
             return float(_shape_elems(ins.shape))
         if ins.opcode in ("reduce", "reduce-window"):
             return float(_shape_elems(ins.shape)) * 2.0
-        if ins.opcode == "fusion":
-            m = _CALLED_RE.search(ins.rest)
-            return self._flops_only(m.group(1)) if m else 0.0
-        if ins.opcode in ("call", "custom-call"):
-            m = _CALLED_RE.search(ins.rest)
-            return self._flops_only(m.group(1)) if m else 0.0
-        if ins.opcode == "while":
-            trip, body, cond = self._while_parts(ins)
-            return trip * (self._flops_only(body) + self._flops_only(cond))
-        if ins.opcode == "conditional":
-            m = _COND_BRANCH_RE.search(ins.rest)
-            if m:
-                branches = _OPERAND_RE.findall(m.group(1))
-                return max((self._flops_only(b) for b in branches),
-                           default=0.0)
         return 0.0
+
+    # flops of a computation including everything called from it, NO bytes
+    # (used for fused computations, whose inner ops touch no HBM)
+    def _flops_only(self, name: str) -> float:
+        return self._fold_scalar(name, self._leaf_flops, self._flops_memo)
 
     def _while_parts(self, ins: Instr):
         mt = _TRIP_RE.search(ins.rest)
@@ -281,7 +291,11 @@ class Analyzer:
                     t.add(self.totals(m.group(1)))
                 continue
             # ordinary / fusion instruction
-            t.flops += self._instr_flops(ins, comp)
+            t.flops += self._leaf_flops(ins, comp)
+            if ins.opcode in ("fusion", "custom-call"):
+                m = _CALLED_RE.search(ins.rest)
+                if m:
+                    t.flops += self._flops_only(m.group(1))
             if ins.opcode not in _SKIP_BYTES:
                 out_b = shape_bytes(ins.shape)
                 opnds = _OPERAND_RE.findall(ins.rest.split("), ")[0])
@@ -291,6 +305,33 @@ class Analyzer:
                 if tag:
                     t.tagged[tag] += out_b + in_b
         return t
+
+
+_TARGET_RE = re.compile(r'custom_call_target="([^"]+)"')
+
+
+def count_ops(hlo_text: str, pattern: str) -> float:
+    """Executed-instance count of instructions matching ``pattern``.
+
+    ``pattern`` is a regex tested against each instruction's opcode and — for
+    custom calls — its ``custom_call_target`` (e.g. ``r"syevd|Eigh"`` counts
+    eigendecompositions on CPU/GPU backends).  Counts are folded through the
+    call graph with the same loop-aware accounting ``Totals`` uses for flops:
+    while bodies multiply by their ``known_trip_count``, conditionals count
+    their maximum branch, fusions/calls recurse into the called computation.
+    Used by tests/test_eigen_amortization.py to pin the number of ``eigh``
+    executions per compiled campaign to ⌈T/eigen_interval⌉.
+    """
+    a = Analyzer(hlo_text)
+    rx = re.compile(pattern)
+
+    def leaf(ins: Instr, _comp: Comp) -> float:
+        if rx.search(ins.opcode):
+            return 1.0
+        m = _TARGET_RE.search(ins.rest)
+        return 1.0 if (m and rx.search(m.group(1))) else 0.0
+
+    return a._fold_scalar(a.entry, leaf, {})
 
 
 def analyze(hlo_text: str) -> dict:

@@ -18,7 +18,6 @@ jax-traceable layer block (the scanned LM units slot in directly).
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Callable
 
 import jax

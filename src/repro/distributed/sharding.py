@@ -23,9 +23,8 @@ import re
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
+import numpy as np
 
 _CURRENT_MESH: Optional[jax.sharding.Mesh] = None
 

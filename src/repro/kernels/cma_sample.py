@@ -15,9 +15,10 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+import jax.numpy as jnp
 
 
 def _kernel(coef_ref, z_ref, d_ref, b_ref, m_ref, x_ref, acc_ref, *, n_k: int):

@@ -17,9 +17,10 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+import jax.numpy as jnp
 
 
 def _kernel(coef_ref, yi_ref, yj_ref, w_ref, c_ref, pci_ref, pcj_ref,

@@ -22,9 +22,10 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+import jax.numpy as jnp
 
 NEG_INF = -1e30
 

@@ -25,7 +25,6 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import ARCHS, get_config
 from repro.configs.base import SHAPES, cells_for
@@ -33,7 +32,6 @@ from repro.distributed import sharding
 from repro.distributed.hlo_analyzer import analyze
 from repro.launch import mesh as mesh_mod
 from repro.launch import specs as specs_mod
-from repro.models import lm
 from repro.serve import engine as serve_engine
 from repro.train import optimizer as opt_mod
 from repro.train import train_step as ts_mod

@@ -19,8 +19,7 @@ multi-pod  : (2, 16, 16)     → ("pod", "data", "model") — 512 chips, 2 pods
 """
 from __future__ import annotations
 
-import math
-from typing import Optional, Sequence
+from typing import Optional
 
 import jax
 import numpy as np

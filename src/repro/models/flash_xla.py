@@ -24,7 +24,6 @@ memory 38.6 s → see EXPERIMENTS §Perf; probs no longer saved.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -6,7 +6,6 @@ PartitionSpec per leaf from its path (MaxText-style logical rules).
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -24,7 +24,6 @@ img_embeds (B,N,d) [vlm stub] | labels (B,S) int32 (train only).
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

@@ -18,7 +18,7 @@ Decode is the O(1)-state recurrence — no KV cache, which is why the
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

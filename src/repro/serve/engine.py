@@ -16,7 +16,7 @@ token over the whole batch — the production idiom for TPU serving.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp

@@ -26,7 +26,6 @@ import numpy as np
 from repro.checkpoint import store
 from repro.configs.base import ModelConfig
 from repro.data.pipeline import SyntheticTokens
-from repro.distributed import sharding
 from repro.models import lm
 from repro.train import optimizer as opt_mod
 from repro.train import train_step as ts_mod

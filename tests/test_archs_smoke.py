@@ -10,8 +10,8 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCHS, get_config, smoke_config
-from repro.models import lm
 from repro.distributed import sharding
+from repro.models import lm
 
 pytestmark = pytest.mark.slow  # heavy model/train/serve tier — excluded from fast CI
 

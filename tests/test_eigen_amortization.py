@@ -1,0 +1,123 @@
+"""Amortized eigendecomposition in the scanned ladder (paper §3.1).
+
+The flat PR-1 scan guarded ``eigh`` with a per-descent ``lax.cond`` — which
+vmap lowers to a select that executes BOTH branches, so every vmapped
+campaign generation paid the full O(n³) factorization regardless of
+``eigen_interval``.  The nested scan (``ladder.scan_eigen_blocks``) makes
+the cadence structural; these tests pin the *executed* ``eigh`` count at
+the HLO level via trip-count-aware instruction accounting
+(``hlo_analyzer.count_ops``).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cmaes, ladder
+from repro.distributed import hlo_analyzer
+from repro.fitness import bbob
+
+EIGH_PATTERN = r"syevd|Eigh"   # LAPACK/cusolver custom-call targets
+
+
+def _campaign_hlo(eigen_schedule: str, total_gens: int, interval: int) -> str:
+    eng = ladder.LadderEngine(n=6, lam_start=8, kmax_exp=1,
+                              schedule="sequential", max_evals=10_000,
+                              eigen_interval=interval,
+                              eigen_schedule=eigen_schedule)
+    runner = eng.campaign_runner((1,), total_gens)
+    insts = bbob.stack_instances([bbob.make_instance(1, 6, 1)])
+    keys = jnp.stack([jax.random.PRNGKey(0)])
+    return runner.lower(keys, insts).compile().as_text()
+
+
+def test_nested_campaign_executes_ceil_T_over_interval_eighs():
+    T, interval = 100, 5
+    txt = _campaign_hlo("nested", T, interval)
+    n_eigh = hlo_analyzer.count_ops(txt, EIGH_PATTERN)
+    assert n_eigh == -(-T // interval)          # ⌈T/eigen_interval⌉ — not T
+
+
+def test_flat_campaign_pays_eigh_every_generation():
+    """Regression pin of the vmap-defeated cond: the PR-1 flat scan lowers
+    to one eigh per generation no matter what eigen_interval says."""
+    T, interval = 100, 5
+    txt = _campaign_hlo("flat", T, interval)
+    assert hlo_analyzer.count_ops(txt, EIGH_PATTERN) == T
+
+
+def test_nested_interval_not_dividing_T_rounds_up():
+    T, interval = 20, 3
+    txt = _campaign_hlo("nested", T, interval)
+    n_blocks = -(-T // interval)                # 7 blocks = 21 generations
+    assert hlo_analyzer.count_ops(txt, EIGH_PATTERN) == n_blocks
+
+
+def test_bucketed_segments_amortize_eigh_too():
+    from repro.core import bucketed
+    eng = bucketed.BucketedLadderEngine(n=6, lam_start=8, kmax_exp=1,
+                                        max_evals=10_000, eigen_interval=5)
+    seg_gens = eng.bucket_seg_gens(0, need_gens=100)
+    runner = eng.segment_runner(0, (1,), seg_gens)
+    insts = bbob.stack_instances([bbob.make_instance(1, 6, 1)])
+    keys = jnp.stack([jax.random.PRNGKey(0)])
+    carry = eng._init_runner(keys)
+    txt = runner.lower(keys, insts, carry).compile().as_text()
+    assert hlo_analyzer.count_ops(txt, EIGH_PATTERN) == seg_gens // 5
+
+
+def test_nested_equals_flat_when_interval_is_1():
+    """interval == 1: every generation refreshes in both schedules, so the
+    nested restructuring must not change the trajectory."""
+    kw = dict(n=4, lam_start=8, kmax_exp=2, schedule="sequential",
+              max_evals=4000)
+    eng_n = ladder.LadderEngine(**kw)
+    eng_f = ladder.LadderEngine(eigen_schedule="flat", **kw)
+    assert eng_n.cfg.eigen_interval == 1
+    r_n = ladder.run_campaign(eng_n, fids=(1, 8), instances=(1,), runs=1,
+                              seed=0)
+    r_f = ladder.run_campaign(eng_f, fids=(1, 8), instances=(1,), runs=1,
+                              seed=0)
+    np.testing.assert_array_equal(r_n.total_fevals, r_f.total_fevals)
+    np.testing.assert_allclose(r_n.best_f, r_f.best_f, rtol=1e-9)
+
+
+def test_update_from_moments_eigen_modes():
+    from repro.core.params import CMAConfig, make_params
+    cfg = CMAConfig(n=4, lam=8, eigen_interval=10)
+    p = make_params(cfg)
+    st = cmaes.init_state(cfg, jax.random.PRNGKey(0), jnp.ones(4), 0.5)
+    y, x = cmaes.sample_population(st, jax.random.PRNGKey(1), 8)
+    f = jnp.sum(x ** 2, axis=-1)
+    mom = cmaes.compute_moments(y, f, x, p, 8)
+
+    deferred = cmaes.update_from_moments(cfg, p, st, mom, eigen="defer")
+    np.testing.assert_array_equal(np.asarray(deferred.B), np.asarray(st.B))
+    np.testing.assert_array_equal(np.asarray(deferred.D), np.asarray(st.D))
+    assert int(deferred.last_eigen_gen) == int(st.last_eigen_gen)
+
+    always = cmaes.update_from_moments(cfg, p, st, mom, eigen="always")
+    assert int(always.last_eigen_gen) == int(st.gen) + 1
+    # B/D really factorize the new covariance
+    C_rec = np.asarray(always.B) @ np.diag(np.asarray(always.D) ** 2) \
+        @ np.asarray(always.B).T
+    np.testing.assert_allclose(C_rec, np.asarray(always.C), atol=1e-12)
+    # covariance itself advances identically in every mode
+    np.testing.assert_array_equal(np.asarray(deferred.C),
+                                  np.asarray(always.C))
+
+    with pytest.raises(ValueError, match="eigen"):
+        cmaes.update_from_moments(cfg, p, st, mom, eigen="sometimes")
+
+
+def test_row_keyed_sampling_is_prefix_stable():
+    """Row i's draw must not depend on how many rows the program pads to —
+    the property the bucketed engine's equivalence rests on."""
+    from repro.core.params import CMAConfig
+    cfg = CMAConfig(n=5, lam=8)
+    st = cmaes.init_state(cfg, jax.random.PRNGKey(0), jnp.zeros(5), 1.0)
+    k = jax.random.PRNGKey(42)
+    y8, x8 = cmaes.sample_population(st, k, 8)
+    y32, x32 = cmaes.sample_population(st, k, 32)
+    np.testing.assert_array_equal(np.asarray(y8), np.asarray(y32)[:8])
+    np.testing.assert_array_equal(np.asarray(x8), np.asarray(x32)[:8])

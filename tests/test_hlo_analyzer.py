@@ -5,14 +5,12 @@
    the roofline correction exists for);
 3. collective parsing matches hand-computed byte counts on a known program.
 """
-import dataclasses
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
-from repro.distributed.hlo_analyzer import Analyzer, analyze, shape_bytes
+from repro.distributed.hlo_analyzer import analyze, shape_bytes
 
 
 def _compile(fn, *args):

@@ -1,11 +1,9 @@
 """Pipeline parallelism: GPipe schedule correctness vs sequential layers."""
-import pytest
-
 import json
 import subprocess
 import sys
 
-import numpy as np
+import pytest
 
 from repro.distributed.pipeline import bubble_fraction
 

@@ -6,10 +6,8 @@ production path (same per-device code, same named-axis collectives).
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import cmaes, ipop, strategies
-from repro.core.params import CMAConfig, make_params
 from repro.fitness import bbob
 
 

@@ -2,7 +2,6 @@
 data determinism, checkpoint roundtrip + crash-restart + elastic re-shard,
 and a short end-to-end trainer run whose loss decreases."""
 import os
-import shutil
 
 import jax
 import jax.numpy as jnp
