@@ -51,7 +51,12 @@ def model_flops_for(meta: dict) -> float:
         pass
     shape = meta["shape"]
     dims = {"train_4k": (4096, 256), "prefill_32k": (32768, 32),
-            "decode_32k": (1, 128), "long_500k": (1, 1)}[shape]
+            "decode_32k": (1, 128), "long_500k": (1, 1)}.get(shape)
+    if dims is None:
+        # non-LM cells (CMA strategy steps / mesh-engine segments) have no
+        # token-based useful-FLOPs model; their roofline rows keep the
+        # compute/memory/collective split with useful% = 0
+        return 0.0
     tokens = dims[0] * dims[1]
     mult = 6.0 if meta["kind"] == "train" else 2.0
     return mult * n * tokens

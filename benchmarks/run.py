@@ -38,7 +38,7 @@ def main(argv=None):
     t0 = time.time()
 
     if args.smoke:
-        from benchmarks import bench_ladder
+        from benchmarks import bench_ladder, bench_mesh
         section("Smoke — host-loop IPOP vs device-resident ladder")
         bench_ladder.main(["--dim", "6", "--fids", "1,8", "--runs", "2",
                            "--lam-start", "8", "--kmax", "2",
@@ -50,6 +50,13 @@ def main(argv=None):
                                     "--kmax", "4", "--max-evals", "20000",
                                     "--eigen-interval", "5", "--out",
                                     "BENCH_bucketed.json"])
+        section("Smoke — mesh campaign engine, S1/S2 on 1→8 virtual devices")
+        # re-execs itself in a subprocess with the 8-device XLA flag, so this
+        # process keeps its single-device jax state
+        bench_mesh.main(["--devices", "8", "--dim", "8", "--fids", "1,8",
+                         "--runs", "4", "--lam-start", "8", "--kmax", "2",
+                         "--max-evals", "6000", "--eigen-interval", "3",
+                         "--out", "BENCH_mesh.json"])
         print(f"\n[benchmarks.run] total {time.time() - t0:.1f}s")
         return 0
 

@@ -219,49 +219,88 @@ def padding_report(trace: ladder.LadderTrace, lam_start: int, kmax_exp: int,
     }
 
 
+def pull_schedule(carry: ladder.LadderCarry):
+    """The driver's per-segment host sync: ONE batched transfer of the four
+    scheduling arrays — (B,) rung indices, active flags, budget counters and
+    member bests — instead of four separate blocking ``np.asarray`` pulls
+    (each of which paid its own device round-trip).  Returns 1-d np arrays.
+
+    The mesh engine substitutes a ``process_allgather``-based puller with the
+    same signature (distributed/mesh_engine.py), so the re-bucketing loop is
+    identical on one device and on a sharded campaign mesh.
+    """
+    k_idx, active, fevals, best_f = jax.device_get(
+        (carry.k_idx[..., 0], carry.active[..., 0],
+         carry.total_fevals, carry.best_f))
+    return (np.atleast_1d(k_idx), np.atleast_1d(active),
+            np.atleast_1d(fevals), np.atleast_1d(best_f))
+
+
+def next_bucket(engine: BucketedLadderEngine, k_idx: np.ndarray,
+                active: np.ndarray, fevals: np.ndarray,
+                seg_len: Dict[int, int]):
+    """One re-bucketing decision — THE scheduling invariant shared by
+    ``drive_segments`` and the mesh engine's per-island loops
+    (distributed/mesh_engine.py), so the two can never silently diverge.
+
+    Returns ``(live, k)`` with ``k is None`` when no member can pay for
+    another generation.  Policy ``"min"`` picks the narrowest occupied rung
+    (members only move up the ladder, so the lowest occupied bucket is
+    work-conserving — least padded rows); ``"cover"`` picks the widest LIVE
+    rung (every live member executes every step, fewest total scan steps —
+    best on host-dispatch-bound backends).  On a bucket's first open its
+    segment length is sized for what the cohort can still possibly run and
+    recorded in ``seg_len`` (in place) — ONE length per bucket keeps
+    ``compiles ≤ #buckets``.
+    """
+    lam_cur = engine.lam_start * (2 ** k_idx)
+    live = active & (fevals + lam_cur <= engine.max_evals)
+    if not live.any():
+        return live, None
+    if engine.policy == "min":
+        k = int(k_idx[live].min())
+    else:
+        k = int(k_idx[live].max())
+    if k not in seg_len:
+        cohort = live if engine.policy == "cover" else live & (k_idx == k)
+        need = int(np.max((engine.max_evals - fevals[cohort])
+                          // lam_cur[cohort]))
+        seg_len[k] = engine.bucket_seg_gens(k, need_gens=need)
+    return live, k
+
+
 def drive_segments(engine: BucketedLadderEngine, carry: ladder.LadderCarry,
                    dispatch: Callable, max_segments: int = 10_000,
-                   time_axis: int = 1):
+                   time_axis: int = 1, pull: Optional[Callable] = None):
     """The host-side re-bucketing loop shared by campaign and single runs.
 
     ``dispatch(k, seg_gens, carry) -> (carry, trace)`` runs one jitted
     segment of bucket ``k``.  Between segments only the (B,) rung indices,
-    active flags and budget counters cross the device boundary; per-segment
-    traces stay device-resident until the driver finishes.  Returns
-    ``(carry, trace, segments, bucket_wall)``; segment traces are
-    concatenated along ``time_axis`` (1 for vmapped campaigns whose leaves
-    are (B, T, ...), 0 for a single run's (T, ...)).
+    active flags, budget counters and member bests cross the device boundary
+    — one batched ``pull`` (default ``pull_schedule``; the mesh engine passes
+    a ``process_allgather`` variant); per-segment traces stay device-resident
+    until the driver finishes.  Returns ``(carry, trace, segments,
+    bucket_wall)``; segment traces are concatenated along ``time_axis`` (1
+    for vmapped campaigns whose leaves are (B, T, ...), 0 for a single run's
+    (T, ...)).
     """
-    lam_start = engine.lam_start
+    pull = pull_schedule if pull is None else pull
     seg_traces: List[ladder.LadderTrace] = []
     segments: List[dict] = []
     bucket_wall: Dict[int, float] = {}
     seg_len: Dict[int, int] = {}        # one segment length per bucket/campaign
 
     for _ in range(max_segments):
-        k_idx = np.atleast_1d(np.asarray(carry.k_idx)[..., 0])
-        active = np.atleast_1d(np.asarray(carry.active)[..., 0])
-        fevals = np.atleast_1d(np.asarray(carry.total_fevals))
-        lam_cur = lam_start * (2 ** k_idx)
-        live = active & (fevals + lam_cur <= engine.max_evals)
-        if not live.any():
+        k_idx, active, fevals, best_f = pull(carry)
+        if segments:
+            # the pull reflects the PREVIOUS segment's result — attach its
+            # post-segment best there (finite by then; None keeps the record
+            # strict-JSON-safe on the pathological all-inf fitness)
+            gb = float(best_f.min())
+            segments[-1]["global_best"] = gb if np.isfinite(gb) else None
+        _live, k = next_bucket(engine, k_idx, active, fevals, seg_len)
+        if k is None:
             break
-        if engine.policy == "min":
-            # narrowest program first: members only move up the ladder, so
-            # the lowest occupied rung is work-conserving (least padded rows)
-            k = int(k_idx[live].min())
-        else:
-            # covering program: every live member executes every step (no
-            # parked rows), padded only to the widest LIVE rung — fewest
-            # total scan steps (host-dispatch-bound backends)
-            k = int(k_idx[live].max())
-        if k not in seg_len:
-            # size this bucket's program for what its first cohort can still
-            # possibly run; ONE length per bucket keeps compiles ≤ #buckets
-            cohort = live if engine.policy == "cover" else live & (k_idx == k)
-            need = int(np.max((engine.max_evals - fevals[cohort])
-                              // lam_cur[cohort]))
-            seg_len[k] = engine.bucket_seg_gens(k, need_gens=need)
         t0 = time.perf_counter()
         carry, tr = dispatch(k, seg_len[k], carry)
         jax.block_until_ready(carry.total_fevals)

@@ -95,15 +95,20 @@ def run_ipop(fitness_fn: Callable, n: int, key: jax.Array,
              sigma0_frac: float = 0.25, chunk: int = 32,
              impl: str = "xla", dtype: str = "float64",
              total_gens: int | None = None,
-             backend: str = "ladder") -> IPOPResult:
+             backend: str = "ladder",
+             mesh_strategy: str = "ordered") -> IPOPResult:
     """Paper Alg. 2 with multiplicative factor 2 and K_max = 2^kmax_exp.
 
     ``backend="ladder"`` (default) runs the whole restart ladder as one
     device-resident scanned program; ``backend="bucketed"`` drives it through
     the rung-bucketed segment programs (core/bucketed.py — work proportional
-    to the live rung instead of λ_max); ``backend="hostloop"`` keeps the
-    legacy host-driven chunked loop (same keys, same padded arithmetic).
-    ``chunk`` only affects the host-loop backend.
+    to the live rung instead of λ_max); ``backend="mesh"`` runs those segment
+    programs through the mesh campaign engine
+    (distributed/mesh_engine.py) over all local devices with the paper's S1
+    (``mesh_strategy="ordered"``) or S2 (``"concurrent"``) deployment;
+    ``backend="hostloop"`` keeps the legacy host-driven chunked loop (same
+    keys, same padded arithmetic).  ``chunk`` only affects the host-loop
+    backend; ``mesh_strategy`` only the mesh backend.
     """
     if backend == "hostloop":
         if total_gens is not None:
@@ -124,6 +129,17 @@ def run_ipop(fitness_fn: Callable, n: int, key: jax.Array,
         carry, trace = bucketed_mod.run_bucketed_single(engine_b, key,
                                                         fitness_fn)
         return _result_from_ladder(engine_b.full, carry, trace)
+    if backend == "mesh":
+        from repro.distributed import mesh_engine as mesh_mod
+        if total_gens is not None:
+            raise ValueError("total_gens only applies to backend='ladder'; "
+                             "the segment driver sizes its own programs")
+        engine_m = mesh_mod.MeshCampaignEngine(
+            n=n, lam_start=lam_start, kmax_exp=kmax_exp, max_evals=max_evals,
+            domain=domain, sigma0_frac=sigma0_frac, impl=impl, dtype=dtype,
+            strategy=mesh_strategy)
+        carry, trace = mesh_mod.run_mesh_single(engine_m, key, fitness_fn)
+        return _result_from_ladder(engine_m.bucketed.full, carry, trace)
     if backend != "ladder":
         raise ValueError(f"unknown backend {backend!r}")
     engine = ladder_mod.LadderEngine(

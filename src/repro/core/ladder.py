@@ -233,7 +233,8 @@ def slots_gen_step(cfg: CMAConfig, sparams, carry: "LadderCarry",
         best_f=best_f, best_x=best_x), trace
 
 
-def scan_eigen_blocks(step_fn: Callable, carry, interval: int, n_blocks: int):
+def scan_eigen_blocks(step_fn: Callable, carry, interval: int, n_blocks: int,
+                      xs=None):
     """Nested generation scan that keeps the eigendecomposition amortized
     under jit+vmap (paper §3.1).
 
@@ -250,6 +251,10 @@ def scan_eigen_blocks(step_fn: Callable, carry, interval: int, n_blocks: int):
 
     ``step_fn(carry, eigen_mode) -> (carry, trace)``; returns the final carry
     and the per-generation trace with leading axis ``n_blocks·interval``.
+    With ``xs`` (a pytree whose leaves carry a leading ``n_blocks·interval``
+    axis — e.g. the strategies chunk scans' per-generation keys) the step
+    signature becomes ``step_fn(carry, x, eigen_mode)`` and each generation
+    consumes one slice, exactly like ``lax.scan`` xs.
 
     With ``interval == 1`` every generation refreshes — identical arithmetic
     to the lazy flat scan, so trajectory equivalence with the host-loop
@@ -259,20 +264,31 @@ def scan_eigen_blocks(step_fn: Callable, carry, interval: int, n_blocks: int):
     (tests/test_eigen_amortization.py).
     """
     interval, n_blocks = int(interval), int(n_blocks)
+    if xs is None:
+        fn = lambda c, _x, eigen: step_fn(c, eigen)
+        xs_blocks = None
+    else:
+        fn = step_fn
+        xs_blocks = jax.tree_util.tree_map(
+            lambda a: a.reshape((n_blocks, interval) + a.shape[1:]), xs)
 
-    def outer(c, _):
+    def outer(c, xb):
+        take = (lambda i: None) if xb is None else (
+            lambda i: jax.tree_util.tree_map(lambda a: a[i], xb))
         if interval > 1:
-            c, ys = jax.lax.scan(lambda c2, _x: step_fn(c2, "defer"),
-                                 c, None, length=interval - 1)
-            c, last = step_fn(c, "always")
+            head = None if xb is None else jax.tree_util.tree_map(
+                lambda a: a[:interval - 1], xb)
+            c, ys = jax.lax.scan(lambda c2, x: fn(c2, x, "defer"),
+                                 c, head, length=interval - 1)
+            c, last = fn(c, take(interval - 1), "always")
             tr = jax.tree_util.tree_map(
                 lambda a, b: jnp.concatenate([a, b[None]]), ys, last)
         else:
-            c, last = step_fn(c, "always")
+            c, last = fn(c, take(0), "always")
             tr = jax.tree_util.tree_map(lambda b: b[None], last)
         return c, tr
 
-    carry, tr = jax.lax.scan(outer, carry, None, length=n_blocks)
+    carry, tr = jax.lax.scan(outer, carry, xs_blocks, length=n_blocks)
     tr = jax.tree_util.tree_map(
         lambda a: a.reshape((n_blocks * interval,) + a.shape[2:]), tr)
     return carry, tr
@@ -488,10 +504,16 @@ def run_concurrent(n: int, n_devices: int, key: jax.Array,
                    lam_start: int = 12, kmax_exp: Optional[int] = None,
                    domain: Tuple[float, float] = (-5.0, 5.0),
                    sigma0_frac: float = 0.25, impl: str = "xla",
-                   dtype: str = "float64", drop_prob: float = 0.0):
+                   dtype: str = "float64", drop_prob: float = 0.0,
+                   eigen_interval: Optional[int] = None):
     """All rungs concurrently via KDistributed's per-device program, scanned
     over ALL generations inside one jit — the device-resident replacement for
     ``KDistributed.run_sim``'s host-side chunk loop.
+
+    The chunk scan is nested in eigen blocks whenever ``eigen_interval > 1``
+    divides ``total_gens`` (``KDistributed.chunk_fn`` — the vmapped lazy-eigh
+    ``lax.cond`` executed ``eigh`` every generation otherwise; HLO-pinned in
+    tests/test_eigen_amortization.py).
 
     Returns ``(kd, carry, trace_dict)`` with the same trace-dict layout
     ``run_sim`` produced, so the benchmarks swap in directly.
@@ -501,7 +523,7 @@ def run_concurrent(n: int, n_devices: int, key: jax.Array,
     kd = KDistributed(n=n, n_devices=n_devices, lam_start=lam_start,
                       lam_slots=lam_start, kmax_exp=kmax_exp, domain=domain,
                       sigma0_frac=sigma0_frac, impl=impl, dtype=dtype,
-                      drop_prob=drop_prob)
+                      drop_prob=drop_prob, eigen_interval=eigen_interval)
     axes = ("ev",)
     fn = jax.jit(jax.vmap(kd.chunk_fn(fitness_fn, axes, int(total_gens)),
                           in_axes=(None, None), out_axes=0,

@@ -113,6 +113,7 @@ class KDistributed:
     comm: str = "stacked"
     gram_dtype: str = ""          # e.g. "float32": psum the Gram at reduced
                                   # precision (halves collective bytes)
+    eigen_interval: Optional[int] = None  # None → c-cmaes default (CMAConfig)
 
     def __post_init__(self):
         if self.kmax_exp is None:
@@ -132,7 +133,8 @@ class KDistributed:
         width = self.domain[1] - self.domain[0]
         self.lam_max = (2 ** self.kmax_exp) * self.lam_start
         self.cfg = CMAConfig(n=self.n, lam=self.lam_max, lam_max=self.lam_max,
-                             sigma0=self.sigma0_frac * width, dtype=self.dtype)
+                             sigma0=self.sigma0_frac * width, dtype=self.dtype,
+                             eigen_interval=self.eigen_interval)
         self.sparams = stack_params([
             make_params(self.cfg, lam=(2 ** k) * self.lam_start)
             for k in range(self.n_descents)])
@@ -154,7 +156,8 @@ class KDistributed:
 
     # -- one generation, per-device view ---------------------------------------
     def device_step(self, carry: KDistCarry, gen_key: jax.Array,
-                    fitness_fn: Callable, axes: Tuple[str, ...]) -> Tuple[KDistCarry, KDistTrace]:
+                    fitness_fn: Callable, axes: Tuple[str, ...],
+                    eigen: str = "lazy") -> Tuple[KDistCarry, KDistTrace]:
         D, n, dt = self.n_descents, self.n, self.cfg.jdtype
         lam_slots, n_active = self.lam_slots, self.n_active
         P_sz = eval_dispatch.axis_size(axes)
@@ -246,7 +249,8 @@ class KDistributed:
                             x_best=x_best, n_evals=nval_st.astype(jnp.int32))
 
         upd = jax.vmap(lambda p, s, m: cmaes.masked_update(
-            self.cfg, p, s, m, impl=self.impl))(self.sparams, carry.states, mom)
+            self.cfg, p, s, m, impl=self.impl, eigen=eigen))(
+                self.sparams, carry.states, mom)
 
         # ---- global best (before any restart wipes descent state) -------------
         gen_best = f_sorted[:, 0]
@@ -281,9 +285,32 @@ class KDistributed:
 
     # -- chunked scan over generations ------------------------------------------
     def chunk_fn(self, fitness_fn, axes, chunk: int):
+        """Scan over a chunk of per-generation keys, nested in eigen blocks.
+
+        Whenever ``cfg.eigen_interval > 1`` divides the key count, the chunk
+        runs as ``ladder.scan_eigen_blocks`` (structural defer/always cadence
+        — one batched ``eigh`` per block) instead of the flat lazy scan whose
+        per-descent ``lax.cond`` vmap lowers to a both-branches select paying
+        the O(n³) factorization every generation (the leftover named in the
+        ROADMAP; HLO-pinned in tests/test_eigen_amortization.py).  Ragged key
+        counts (a final partial chunk) keep the flat scan — they recompile
+        for the new shape anyway and stay bit-compatible with PR-1 behavior.
+        """
+        from repro.core import ladder
+
+        interval = int(self.cfg.eigen_interval)
+
         def run_chunk(carry, keys):
+            T = int(keys.shape[0])
+            if interval > 1 and T % interval == 0:
+                def step(c, k, eigen):
+                    return self.device_step(c, k, fitness_fn, axes,
+                                            eigen=eigen)
+                return ladder.scan_eigen_blocks(step, carry, interval,
+                                                T // interval, xs=keys)
             return jax.lax.scan(
-                lambda c, k: self.device_step(c, k, fitness_fn, axes), carry, keys)
+                lambda c, k: self.device_step(c, k, fitness_fn, axes),
+                carry, keys)
         return run_chunk
 
     # -- drivers -------------------------------------------------------------
@@ -366,6 +393,7 @@ class KReplicated:
     impl: str = "xla"
     drop_prob: float = 0.0
     dtype: str = "float64"
+    eigen_interval: Optional[int] = None  # None → c-cmaes default (CMAConfig)
 
     def __post_init__(self):
         if self.lam_slots != self.lam_start:
@@ -381,7 +409,7 @@ class KReplicated:
         G = self.n_devices // g              # concurrent descents
         lam = g * self.lam_start
         cfg = CMAConfig(n=self.n, lam=lam, lam_max=lam, sigma0=self.sigma0,
-                        dtype=self.dtype)
+                        dtype=self.dtype, eigen_interval=self.eigen_interval)
         return cfg, make_params(cfg), G, g
 
     def init_phase_states(self, cfg: CMAConfig, G: int, key: jax.Array):
@@ -392,8 +420,8 @@ class KReplicated:
         return jax.vmap(lambda k, x: cmaes.init_state(cfg, k, x))(keys, x0)
 
     def device_step(self, cfg: CMAConfig, params: CMAParams, carry: KRepCarry,
-                    gen_key: jax.Array, fitness_fn: Callable
-                    ) -> Tuple[KRepCarry, KRepTrace]:
+                    gen_key: jax.Array, fitness_fn: Callable,
+                    eigen: str = "lazy") -> Tuple[KRepCarry, KRepTrace]:
         n, dt, lam_slots = self.n, cfg.jdtype, self.lam_slots
         g = eval_dispatch.axis_size(("mem",))
         mem = jax.lax.axis_index("mem")
@@ -428,7 +456,8 @@ class KReplicated:
 
         mom = cmaes.Moments(y_w=yw, gram=gram, f_sorted=f_sorted,
                             x_best=x_best, n_evals=nval.astype(jnp.int32))
-        new_state = cmaes.masked_update(cfg, params, state, mom, impl=self.impl)
+        new_state = cmaes.masked_update(cfg, params, state, mom,
+                                        impl=self.impl, eigen=eigen)
 
         # global best across groups (gather per-group candidates)
         gen_best = f_sorted[0]
@@ -456,7 +485,20 @@ class KReplicated:
         return new_carry, trace
 
     def phase_chunk_fn(self, cfg, params, fitness_fn, chunk: int):
+        """Phase chunk scan, nested in eigen blocks exactly as
+        ``KDistributed.chunk_fn`` (same vmapped-lazy-eigh rationale)."""
+        from repro.core import ladder
+
+        interval = int(cfg.eigen_interval)
+
         def run_chunk(carry, keys):
+            T = int(keys.shape[0])
+            if interval > 1 and T % interval == 0:
+                def step(c, k, eigen):
+                    return self.device_step(cfg, params, c, k, fitness_fn,
+                                            eigen=eigen)
+                return ladder.scan_eigen_blocks(step, carry, interval,
+                                                T // interval, xs=keys)
             return jax.lax.scan(
                 lambda c, k: self.device_step(cfg, params, c, k, fitness_fn),
                 carry, keys)

@@ -1,0 +1,522 @@
+"""Mesh campaign engine — the paper's two deployment strategies (§4–5).
+
+The rung-bucketed engine (core/bucketed.py) is mesh-ready in shape: a small
+family of fixed per-bucket programs, host syncs only between segments.  This
+module deploys it across a device mesh, implementing both of the paper's
+strategies for running many IPOP-CMA-ES searches on a large machine:
+
+* ``strategy="ordered"`` (S1 — sequential order): the campaign members
+  shard over a 1-d ``("camp",)`` mesh axis and EVERY segment runs as one
+  ``shard_map`` program over the whole mesh — all shards advance through the
+  same global segment schedule with a barrier per segment (the host pull
+  that re-buckets), preserving the bucketed driver's sequential rung
+  ordering exactly.  Inside the program each device vmaps
+  ``BucketedLadderEngine.segment_scan`` over its member slice; the budget
+  and best-f scalars are reduced with replicated ``psum``/``pmin`` so every
+  shard (and the host) sees the campaign-global values.
+* ``strategy="concurrent"`` (S2 — the paper's winner): each device is an
+  island owning a contiguous member slice and drives its OWN budget-adaptive
+  segment schedule — the host round-robins over islands, dispatching each
+  one's next bucket program asynchronously (dispatch returns before the
+  segment finishes, so islands genuinely overlap); between segments the
+  islands exchange only the global best/budget scalars.  No barrier: a
+  shard whose members finished stops paying for the stragglers' schedule,
+  which is exactly where the paper's S2 wins super-linearly.  With
+  ``stop_at`` set, the global-best exchange also retires every island as
+  soon as any island reaches the target (S2's early-sharing win; off by
+  default to keep strict equivalence with the single-device driver).
+
+Compilation stays bounded by the bucket family: segment lengths are fixed
+once per (campaign, bucket), so the ordered path holds ``compiles ≤
+#buckets`` at the jit-cache level, and the concurrent path traces at most
+one program per bucket (each island then holds its device's executable copy
+of that same traced program — copies, not new programs; ``compiles()``
+counts traced programs).
+
+Equivalence with ``backend="bucketed"`` (tests/mesh_check.py, run on 8
+virtual CPU devices): member trajectories depend only on their own
+(slot, incarnation, generation) key schedule and row-keyed sampling, never
+on which shard or segment executed them — so at ``eigen_interval == 1``
+both strategies are trajectory-equivalent to the single-device driver
+(modulo per-shape XLA fusion rounding, the tolerance every engine pair here
+carries), and at ``eigen_interval > 1`` (segment-local eigen cadence, and
+shard-local segment cuts under S2) they are ECDF-equivalent.
+
+Between segments the scheduling arrays ride ONE
+``multihost_utils.process_allgather`` call (``k_idx``, ``active``,
+``total_fevals``, ``best_f`` as a single tree) — multi-process ready, and on
+a single process exactly the batched ``device_get`` the bucketed driver
+uses.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+import numpy as np
+
+from repro.core import bucketed, ladder
+from repro.core.eval_dispatch import shard_map_compat
+from repro.distributed.sharding import campaign_shardings
+from repro.fitness import bbob
+from repro.launch.mesh import make_campaign_mesh
+
+
+def _finite_or_none(x: float):
+    """Strict-JSON-safe scalar for logged records (json.dump emits a bare
+    ``Infinity`` token otherwise): None until a best exists."""
+    x = float(x)
+    return x if np.isfinite(x) else None
+
+
+def pull_schedule_allgather(carry: ladder.LadderCarry):
+    """Mesh variant of ``bucketed.pull_schedule``: the four scheduling arrays
+    cross the device boundary as ONE ``process_allgather`` of a single tree
+    (global views of the sharded members), not four blocking per-array
+    ``np.asarray`` pulls.  Single-process this is the same batched
+    ``device_get``; multi-process it is the collective the ROADMAP named."""
+    from jax.experimental import multihost_utils
+
+    k_idx, active, fevals, best_f = multihost_utils.process_allgather(
+        (carry.k_idx[..., 0], carry.active[..., 0],
+         carry.total_fevals, carry.best_f), tiled=True)
+    return (np.atleast_1d(k_idx), np.atleast_1d(active),
+            np.atleast_1d(fevals), np.atleast_1d(best_f))
+
+
+@dataclasses.dataclass
+class MeshCampaignEngine:
+    """Bucketed-ladder campaigns sharded over a ``("camp",)`` device mesh.
+
+    Wraps a ``BucketedLadderEngine`` (which owns the bucket configs, segment
+    sizing and single-device semantics); this engine only decides WHERE each
+    segment program runs and how shards synchronize — per the two paper
+    strategies above.  ``mesh`` defaults to all local devices
+    (``launch.mesh.make_campaign_mesh``).
+    """
+
+    n: int
+    lam_start: int = 12
+    kmax_exp: int = 4
+    max_evals: int = 200_000
+    domain: Tuple[float, float] = (-5.0, 5.0)
+    sigma0_frac: float = 0.25
+    impl: str = "xla"
+    dtype: str = "float64"
+    eigen_interval: Optional[int] = None
+    seg_blocks: Optional[int] = None
+    policy: str = "cover"
+    strategy: str = "ordered"           # "ordered" (S1) | "concurrent" (S2)
+    mesh: Optional[object] = None       # jax.sharding.Mesh over axis "camp"
+    axis: str = "camp"
+    stop_at: Optional[float] = None     # S2 early-stop on the shared best
+
+    def __post_init__(self):
+        if self.strategy not in ("ordered", "concurrent"):
+            raise ValueError(f"unknown strategy {self.strategy!r}")
+        self.bucketed = bucketed.BucketedLadderEngine(
+            n=self.n, lam_start=self.lam_start, kmax_exp=self.kmax_exp,
+            max_evals=self.max_evals, domain=self.domain,
+            sigma0_frac=self.sigma0_frac, impl=self.impl, dtype=self.dtype,
+            eigen_interval=self.eigen_interval, seg_blocks=self.seg_blocks,
+            policy=self.policy)
+        if self.mesh is None:
+            self.mesh = make_campaign_mesh()
+        self.n_devices = int(self.mesh.devices.size)
+        self._runner_cache: dict = {}
+
+    # -- segment programs -----------------------------------------------------
+    def _seg_fn(self, k: int, seg_gens: int, branch_fids: Tuple[int, ...],
+                fitness_fn: Optional[Callable]):
+        """The vmapped local segment body shared by both strategies: one
+        device's member slice through ``segment_scan``.  With ``branch_fids``
+        the fitness is the stacked-instance BBOB dispatch (campaigns); with
+        ``fitness_fn`` it is a baked-in closure (generic single runs)."""
+        eng = self.bucketed
+        if fitness_fn is None:
+            def run_one(base_key, inst, c):
+                def fit(X):
+                    return bbob.evaluate_dynamic(inst, X, branch_fids)
+                return eng.segment_scan(k, base_key, fit, c, seg_gens)
+            return jax.vmap(run_one)
+
+        def run_one(base_key, c):
+            return eng.segment_scan(k, base_key, fitness_fn, c, seg_gens)
+        return jax.vmap(run_one)
+
+    def ordered_runner(self, k: int, seg_gens: int,
+                       branch_fids: Tuple[int, ...] = (),
+                       fitness_fn: Optional[Callable] = None,
+                       cache: Optional[dict] = None):
+        """One S1 segment as a ``shard_map`` program over the whole mesh:
+        member batch sharded over ``axis``, budget/best scalars psum/pmin-
+        reduced to replicated outputs.  Cached per (bucket, length, fids) —
+        jit-cache size 1 per entry, so ``compiles ≤ #buckets`` holds at the
+        executable level (asserted in tests/mesh_check.py)."""
+        cache = self._runner_cache if cache is None else cache
+        key = ("ordered", int(k), int(seg_gens), tuple(branch_fids))
+        if key not in cache:
+            axis = self.axis
+            vmapped = self._seg_fn(k, seg_gens, branch_fids, fitness_fn)
+            n_args = 2 if fitness_fn is not None else 3
+
+            def local_seg(*args):
+                c, tr = vmapped(*args)
+                g_fev = jax.lax.psum(jnp.sum(c.total_fevals), axis)
+                g_best = jax.lax.pmin(jnp.min(c.best_f), axis)
+                return c, tr, g_fev, g_best
+
+            fn = shard_map_compat(
+                local_seg, mesh=self.mesh,
+                in_specs=(P(axis),) * n_args,
+                out_specs=(P(axis), P(axis), P(), P()))
+            # explicit in/out shardings pin the jit cache key: without them a
+            # 1-device mesh canonicalizes P(axis) outputs to P(), and feeding
+            # a segment's carry back in recompiles the same bucket program
+            sh_c = jax.sharding.NamedSharding(self.mesh, P(axis))
+            sh_r = jax.sharding.NamedSharding(self.mesh, P())
+            cache[key] = jax.jit(fn, in_shardings=(sh_c,) * n_args,
+                                 out_shardings=(sh_c, sh_c, sh_r, sh_r))
+        return cache[key]
+
+    def island_runner(self, k: int, seg_gens: int,
+                      branch_fids: Tuple[int, ...] = (),
+                      fitness_fn: Optional[Callable] = None,
+                      cache: Optional[dict] = None):
+        """One S2 segment as a plain jitted program over one island's member
+        slice; dispatching it on inputs committed to island ``s``'s device
+        runs it there, asynchronously.  One traced program per (bucket,
+        length, fids); each island holds its device's executable copy."""
+        cache = self._runner_cache if cache is None else cache
+        key = ("island", int(k), int(seg_gens), tuple(branch_fids))
+        if key not in cache:
+            cache[key] = jax.jit(
+                self._seg_fn(k, seg_gens, branch_fids, fitness_fn))
+        return cache[key]
+
+    def compiles(self) -> int:
+        """Distinct segment programs: jit-cache entries for ordered runners
+        (always 1 each — same shardings every call), one traced program per
+        island runner (per-device executables are copies of it)."""
+        total = 0
+        for key, fn in self._runner_cache.items():
+            if key[0] == "ordered":
+                cs = getattr(fn, "_cache_size", None)
+                total += int(cs()) if callable(cs) else 1
+            else:
+                total += 1
+        return total
+
+    # -- member layout --------------------------------------------------------
+    def pad_batch(self, keys: jax.Array, carry: ladder.LadderCarry,
+                  insts=None):
+        """Pad the member batch to a multiple of the mesh size with inert
+        rows: ``active=False`` from the start, so they never run a
+        generation, spend budget, or win a pmin — results slice back to the
+        real members.  Returns (keys, carry, insts, B_real, B_pad)."""
+        B = int(keys.shape[0])
+        P_n = self.n_devices
+        B_pad = -(-B // P_n) * P_n
+        if B_pad != B:
+            pad = B_pad - B
+            pad_keys = jnp.stack([jax.random.fold_in(keys[-1], 1 + j)
+                                  for j in range(pad)])
+            keys = jnp.concatenate([keys, pad_keys])
+            carry = jax.tree_util.tree_map(
+                lambda a: jnp.concatenate(
+                    [a, jnp.repeat(a[-1:], pad, axis=0)]), carry)
+            if insts is not None:
+                insts = jax.tree_util.tree_map(
+                    lambda a: jnp.concatenate(
+                        [a, jnp.repeat(a[-1:], pad, axis=0)]), insts)
+        active = jnp.asarray(carry.active)
+        mask = (jnp.arange(B_pad) < B)[:, None]
+        carry = carry._replace(active=active & mask)
+        return keys, carry, insts, B, B_pad
+
+    # -- drivers --------------------------------------------------------------
+    def _drive_ordered(self, keys, insts, carry, branch_fids, fitness_fn,
+                       max_segments: int):
+        """S1: the bucketed re-bucketing loop verbatim (``drive_segments``),
+        with shard_map dispatch and the allgather pull — one barrier per
+        segment."""
+        shd = campaign_shardings(keys, self.mesh, self.axis)
+        keys = jax.device_put(keys, shd)
+        carry = jax.tree_util.tree_map(
+            lambda a: jax.device_put(a, shd), carry)
+        if insts is not None:
+            insts = jax.tree_util.tree_map(
+                lambda a: jax.device_put(a, shd), insts)
+        local_cache = None if fitness_fn is None else {}
+        exchange: List[dict] = []
+
+        def dispatch(k, seg_gens, c):
+            runner = self.ordered_runner(k, seg_gens, branch_fids,
+                                         fitness_fn, cache=local_cache)
+            args = (keys, c) if insts is None else (keys, insts, c)
+            c, tr, g_fev, g_best = runner(*args)
+            exchange.append({"bucket": int(k), "global_fevals": int(g_fev),
+                             "global_best": _finite_or_none(g_best)})
+            return c, tr
+
+        carry, trace, segments, bucket_wall = bucketed.drive_segments(
+            self.bucketed, carry, dispatch, max_segments,
+            time_axis=1, pull=pull_schedule_allgather)
+        return carry, trace, segments, bucket_wall, exchange, None
+
+    def _drive_concurrent(self, keys, insts, carry, branch_fids, fitness_fn,
+                          max_segments: int):
+        """S2: one island per device, each with its own re-bucketing loop;
+        the host round-robins dispatches (async — islands overlap) and folds
+        the per-island budget/best scalars into the shared campaign view."""
+        eng = self.bucketed
+        devs = list(self.mesh.devices.flat)
+        P_n = len(devs)
+        B_pad = int(keys.shape[0])
+        Bl = B_pad // P_n
+        local_cache = None if fitness_fn is None else {}
+
+        shards = []
+        for s, dev in enumerate(devs):
+            sl = slice(s * Bl, (s + 1) * Bl)
+
+            def put(a, _sl=sl, _dev=dev):
+                return jax.device_put(a[_sl], _dev)
+
+            shards.append({
+                "keys": put(keys),
+                "insts": None if insts is None
+                else jax.tree_util.tree_map(put, insts),
+                "carry": jax.tree_util.tree_map(put, carry),
+                "traces": [], "segments": [], "done": False,
+                "best": np.inf, "fevals": 0,
+            })
+
+        seg_len: Dict[int, int] = {}    # shared per bucket: compiles ≤ #buckets
+        bucket_wall: Dict[int, float] = {}
+        exchange: List[dict] = []
+        for rnd in range(max_segments):
+            dispatched = retired = finished = 0
+            for s, sh in enumerate(shards):
+                if sh["done"]:
+                    continue
+                k_idx, active, fevals, best_f = bucketed.pull_schedule(
+                    sh["carry"])                 # blocks on THIS island only
+                sh["best"] = float(best_f.min())
+                sh["fevals"] = int(fevals.sum())
+                if self.stop_at is not None and \
+                        min(x["best"] for x in shards) <= self.stop_at:
+                    # the shared best already meets the target: this island
+                    # (and, as their turns come, every other) retires instead
+                    # of dispatching another segment — S2's early sharing
+                    sh["done"] = True
+                    retired += 1
+                    continue
+                # shard-local re-bucketing: the same decision the
+                # single-device driver makes, over this island's slice only
+                _live, k = bucketed.next_bucket(eng, k_idx, active, fevals,
+                                                seg_len)
+                if k is None:
+                    sh["done"] = True
+                    finished += 1
+                    continue
+                runner = self.island_runner(k, seg_len[k], branch_fids,
+                                            fitness_fn, cache=local_cache)
+                args = (sh["keys"], sh["carry"]) if sh["insts"] is None \
+                    else (sh["keys"], sh["insts"], sh["carry"])
+                t0 = time.perf_counter()
+                sh["carry"], tr = runner(*args)   # async: no block here
+                wall = time.perf_counter() - t0
+                sh["traces"].append(tr)
+                sh["segments"].append({"shard": s, "bucket": k,
+                                       "gens": seg_len[k],
+                                       "dispatch_s": round(wall, 5)})
+                bucket_wall[k] = bucket_wall.get(k, 0.0) + wall
+                dispatched += 1
+            # -- the only cross-island traffic: two scalars ----------------
+            if dispatched or retired or finished:
+                entry = {"round": rnd,
+                         "global_best": _finite_or_none(
+                             min(sh["best"] for sh in shards)),
+                         "global_fevals": sum(sh["fevals"] for sh in shards)}
+                if retired:
+                    entry["stopped_early"] = True
+                exchange.append(entry)
+            if not dispatched and all(sh["done"] for sh in shards):
+                break
+        else:
+            raise RuntimeError("island driver did not converge "
+                               f"within {max_segments} rounds")
+
+        # -- assemble the global (B_pad, T_max, ...) trace --------------------
+        shard_traces = []
+        for sh in shards:
+            if sh["traces"]:
+                tr = jax.tree_util.tree_map(
+                    lambda *xs: np.concatenate(
+                        [np.asarray(x) for x in xs], axis=1), *sh["traces"])
+            else:
+                tr = bucketed._empty_trace(
+                    jax.tree_util.tree_map(np.asarray, sh["carry"]),
+                    time_axis=1)
+            shard_traces.append(tr)
+        T_max = max(tr.ran.shape[1] for tr in shard_traces)
+        trace = jax.tree_util.tree_map(
+            lambda *xs: np.concatenate(xs, axis=0),
+            *[_pad_time(tr, T_max) for tr in shard_traces])
+        carry = jax.tree_util.tree_map(
+            lambda *xs: np.concatenate([np.asarray(x) for x in xs], axis=0),
+            *[sh["carry"] for sh in shards])
+        segments = [seg for sh in shards for seg in sh["segments"]]
+        return carry, trace, segments, bucket_wall, exchange, \
+            [sh["segments"] for sh in shards]
+
+
+def _pad_time(tr: ladder.LadderTrace, T: int) -> ladder.LadderTrace:
+    """Pad a shard trace to ``T`` generations along axis 1 with inert rows:
+    ``ran=False`` steps (every consumer masks on ``ran``), edge-extended
+    budget/best accumulators so ``hit_evals`` stays monotone."""
+    t = tr.ran.shape[1]
+    if t == T:
+        return tr
+
+    def cpad(a, fill):
+        pw = [(0, 0)] * a.ndim
+        pw[1] = (0, T - t)
+        return np.pad(a, pw, constant_values=fill)
+
+    def epad(a, fill):
+        if t == 0:
+            return cpad(a, fill)
+        pw = [(0, 0)] * a.ndim
+        pw[1] = (0, T - t)
+        return np.pad(a, pw, mode="edge")
+
+    return ladder.LadderTrace(
+        ran=cpad(tr.ran, False), k_idx=cpad(tr.k_idx, 0),
+        gen=cpad(tr.gen, 0), fevals=cpad(tr.fevals, 0),
+        best_f=cpad(tr.best_f, np.inf), stop_reason=cpad(tr.stop_reason, 0),
+        stopped=cpad(tr.stopped, False),
+        total_fevals=epad(tr.total_fevals, 0),
+        global_best=epad(tr.global_best, np.inf))
+
+
+@dataclasses.dataclass
+class MeshCampaignResult(bucketed.BucketedCampaignResult):
+    """Bucketed campaign result plus the mesh deployment record."""
+
+    strategy: str = "ordered"
+    n_devices: int = 1
+    exchange: List[dict] = dataclasses.field(default_factory=list)
+    shard_segments: Optional[List[List[dict]]] = None
+
+
+def run_campaign_mesh(engine: MeshCampaignEngine, fids, instances=(1,),
+                      runs: int = 1, seed: int = 0,
+                      max_segments: int = 10_000) -> MeshCampaignResult:
+    """Run a whole BBOB campaign through the mesh engine — same member
+    layout, instance stacking and key schedule as ``run_campaign_bucketed``
+    (and therefore the λ_max-padded engine), with the batch padded to the
+    mesh with inert members and deployed per ``engine.strategy``."""
+    eng = engine.bucketed
+    fids = tuple(fids)
+    members = [(f, i, r) for f in fids for i in instances for r in range(runs)]
+    insts = [bbob.make_instance(f, engine.n, i, eng.full.cfg.jdtype)
+             for (f, i, _r) in members]
+    stacked = bbob.stack_instances(insts)
+    branch_fids = tuple(sorted(set(fids)))
+
+    base = jax.random.PRNGKey(seed)
+    keys = jnp.stack([jax.random.fold_in(base, j)
+                      for j in range(len(members))])
+    carry = eng._init_runner(keys)
+    keys, carry, stacked, B, _B_pad = engine.pad_batch(keys, carry, stacked)
+
+    drive = (engine._drive_ordered if engine.strategy == "ordered"
+             else engine._drive_concurrent)
+    carry, trace, segments, bucket_wall, exchange, shard_segments = drive(
+        keys, stacked, carry, branch_fids, None, max_segments)
+
+    sl = lambda a: np.asarray(a)[:B]
+    trace = jax.tree_util.tree_map(sl, trace)
+    useful = bucketed._useful_evals_per_rung(trace, eng.lam_start,
+                                             eng.kmax_exp)
+    rows = {"ordered": _B_pad, "concurrent": _B_pad // engine.n_devices}
+    padded = sum(rows[engine.strategy] * s["gens"]
+                 * (2 ** s["bucket"]) * eng.lam_start for s in segments)
+    return MeshCampaignResult(
+        members=members,
+        f_opt=np.asarray([i.f_opt for i in insts], np.float64),
+        best_f=sl(carry.best_f),
+        best_x=sl(carry.best_x),
+        total_fevals=sl(carry.total_fevals),
+        trace=trace,
+        compiles=engine.compiles(),
+        segments=segments,
+        bucket_wall_s={k: round(v, 5) for k, v in bucket_wall.items()},
+        useful_evals=int(sum(useful.values())),
+        padded_evals=int(padded),
+        strategy=engine.strategy,
+        n_devices=engine.n_devices,
+        exchange=exchange,
+        shard_segments=shard_segments)
+
+
+def run_mesh_single(engine: MeshCampaignEngine, base_key: jax.Array,
+                    fitness_fn: Callable, max_segments: int = 10_000):
+    """One (un-vmapped) problem through the mesh engine — the ``mesh``
+    backend behind ``ipop.run_ipop``.  The single member rides shard 0; the
+    other shards carry inert padding rows.  Returns ``(carry, trace)`` with
+    the single-run layout (trace leaves (T, S)) of ``run_bucketed_single``.
+
+    Runners are cached per call, not on the engine: the fitness closure is
+    baked in at trace time (same reasoning as ``run_bucketed_single``).
+    """
+    keys = base_key[None]
+    carry = engine.bucketed._init_runner(keys)
+    keys, carry, _, _B, _B_pad = engine.pad_batch(keys, carry, None)
+    drive = (engine._drive_ordered if engine.strategy == "ordered"
+             else engine._drive_concurrent)
+    carry, trace, _segs, _walls, _exch, _ss = drive(
+        keys, None, carry, (), fitness_fn, max_segments)
+    one = lambda a: np.asarray(a)[0]
+    return (jax.tree_util.tree_map(one, carry),
+            jax.tree_util.tree_map(one, trace))
+
+
+# ---------------------------------------------------------------------------
+# dry-run / roofline hook
+# ---------------------------------------------------------------------------
+
+def lower_ordered_segment(engine: MeshCampaignEngine, fid: int = 8,
+                          seg_blocks: int = 1):
+    """Lower (no execute, no real buffers) one S1 shard_map segment of the
+    widest bucket over ``engine.mesh`` with one member per device — the
+    mesh-engine cell of the dry-run/roofline harness (launch/dryrun.py).
+
+    Returns ``(lowered, meta)`` with the bucket/segment geometry; the caller
+    compiles and feeds the HLO to ``hlo_analyzer.analyze``.
+    """
+    eng = engine.bucketed
+    k = engine.kmax_exp
+    seg_gens = int(seg_blocks) * eng.interval
+    B = engine.n_devices
+    runner = engine.ordered_runner(k, seg_gens, (fid,), cache={})
+
+    inst = bbob.make_instance(fid, engine.n, 1, eng.full.cfg.jdtype)
+    stacked1 = bbob.stack_instances([inst])
+    insts_abs = jax.tree_util.tree_map(
+        lambda a: jax.ShapeDtypeStruct((B,) + a.shape[1:], a.dtype), stacked1)
+    keys_abs = jax.ShapeDtypeStruct((B, 2), jnp.uint32)
+    carry_abs = jax.eval_shape(
+        jax.vmap(eng.full.init_carry),
+        jax.ShapeDtypeStruct((B, 2), jnp.uint32))
+    lowered = runner.lower(keys_abs, insts_abs, carry_abs)
+    meta = {"bucket": k, "lam_bucket": (2 ** k) * engine.lam_start,
+            "seg_gens": seg_gens, "members": B,
+            "n_devices": engine.n_devices, "strategy": "ordered"}
+    return lowered, meta

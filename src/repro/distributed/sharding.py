@@ -55,6 +55,16 @@ def batch_spec(mesh, extra_dims: int = 2) -> P:
     return P(dp_axes(mesh), *([None] * extra_dims))
 
 
+def campaign_shardings(tree, mesh, axis: str = "camp"):
+    """NamedSharding tree placing every leaf's leading (campaign-batch) dim
+    on ``axis`` — the CMA-ES analogue of ``batch_spec``.  Every leaf of a
+    stacked campaign pytree (keys, stacked BBOB instances, ladder carries,
+    segment traces) carries the member batch as its leading dim, so one
+    leading-axis spec shards the whole tree (distributed/mesh_engine.py)."""
+    sh = NamedSharding(mesh, P(axis))
+    return jax.tree_util.tree_map(lambda _: sh, tree)
+
+
 # ---------------------------------------------------------------------------
 # rule table
 # ---------------------------------------------------------------------------

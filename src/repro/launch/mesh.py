@@ -61,6 +61,20 @@ def make_eval_mesh(n_devices: Optional[int] = None):
     return _mk((n,), ("ev",))
 
 
+def make_campaign_mesh(n_devices: Optional[int] = None, devices=None):
+    """1-D ("camp",) mesh — the campaign-batch axis of the mesh campaign
+    engine (distributed/mesh_engine.py): (fid, instance, run) members shard
+    over it, one slice per device/island.  ``devices`` carves the mesh out of
+    an explicit device list (scaling curves over prefixes of the virtual-CPU
+    fleet; re-viewing a production mesh's devices as one flat campaign axis).
+    """
+    if devices is not None:
+        devices = list(devices)
+        return _mk((len(devices),), ("camp",), devices=devices)
+    n = n_devices if n_devices is not None else len(jax.devices())
+    return _mk((n,), ("camp",))
+
+
 def make_group_mesh(n_groups: int, group_size: int):
     """(grp, mem) view for one K-Replicated phase."""
     return _mk((n_groups, group_size), ("grp", "mem"))

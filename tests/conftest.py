@@ -9,6 +9,18 @@ smoke tests and benches must see the real single CPU device.  Multi-device
 tests spawn subprocesses (see tests/test_strategies.py) or use
 ``jax.make_mesh`` on 1 device.
 """
+import os
+
 import jax
 
 jax.config.update("jax_enable_x64", True)
+
+
+def hermetic_subproc_env() -> dict:
+    """Minimal env for multi-device subprocess tests — but keep the platform
+    pin: on containers that ship an accelerator plugin (e.g. libtpu),
+    dropping JAX_PLATFORMS makes the child probe real hardware and hang
+    against the TPU metadata service."""
+    return {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
+            **({"JAX_PLATFORMS": os.environ["JAX_PLATFORMS"]}
+               if "JAX_PLATFORMS" in os.environ else {})}

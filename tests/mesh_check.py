@@ -1,0 +1,144 @@
+"""8-virtual-device equivalence checks for the mesh campaign engine.
+
+Executed as a SUBPROCESS by tests/test_mesh_engine.py (and directly by the
+CI mesh job): ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` must be
+set before jax's first import locks the device count, which a pytest
+process that already initialized jax on 1 CPU device cannot do in-process.
+
+Everything runs under one identical XLA environment, so the comparisons are
+exactly the single-device bucketed driver vs the mesh engine on a REAL
+8-device campaign mesh:
+
+* trajectory equivalence of ``strategy="ordered"`` and ``"concurrent"`` vs
+  ``backend="bucketed"`` on f1/f8 at ``eigen_interval == 1`` (per-member
+  generation structure exactly equal, floats to the usual per-shape XLA
+  fusion tolerance) — including a non-divisible batch (6 members on 8
+  devices) exercising the inert-padding rows;
+* ``compiles ≤ #buckets`` for the shard_map (ordered) runners at the
+  jit-cache level and for the concurrent path at the traced-program level;
+* ECDF equivalence at ``eigen_interval > 1`` (segment cuts are shard-local
+  under S2, so only the ECDF is preserved there);
+* S2 ``stop_at`` early sharing: every island retires once the exchanged
+  global best reaches the target.
+
+Prints ``MESH-CHECK-OK`` and exits 0 iff every assertion holds.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np  # noqa: E402
+
+from repro.core import bucketed  # noqa: E402
+from repro.distributed import mesh_engine  # noqa: E402
+
+KW = dict(n=4, lam_start=8, kmax_exp=2, max_evals=5000)
+
+
+def assert_trajectory_equal(res_b, res_m):
+    np.testing.assert_array_equal(res_b.total_fevals, res_m.total_fevals)
+    np.testing.assert_allclose(res_b.best_f, res_m.best_f,
+                               rtol=1e-5, atol=1e-7)
+    for b in range(len(res_b.members)):
+        rb = np.asarray(res_b.trace.ran)[b, :, 0]
+        rm = np.asarray(res_m.trace.ran)[b, :, 0]
+        for field in ("k_idx", "gen", "fevals", "stop_reason", "stopped"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(res_b.trace, field))[b, :, 0][rb],
+                np.asarray(getattr(res_m.trace, field))[b, :, 0][rm],
+                err_msg=field)
+        np.testing.assert_allclose(
+            np.asarray(res_b.trace.best_f)[b, :, 0][rb],
+            np.asarray(res_m.trace.best_f)[b, :, 0][rm],
+            rtol=1e-5, atol=1e-7)
+
+
+def main():
+    assert jax.device_count() == 8, jax.devices()
+    n_buckets = KW["kmax_exp"] + 1
+
+    # -- trajectory equivalence at eigen_interval == 1 (B=8 on 8 devices) ----
+    eng_b = bucketed.BucketedLadderEngine(**KW)
+    res_b = bucketed.run_campaign_bucketed(eng_b, fids=(1, 8), instances=(1,),
+                                           runs=4, seed=0)
+    assert eng_b.full.cfg.eigen_interval == 1
+    for strategy in ("ordered", "concurrent"):
+        eng_m = mesh_engine.MeshCampaignEngine(strategy=strategy, **KW)
+        assert eng_m.n_devices == 8
+        res_m = mesh_engine.run_campaign_mesh(eng_m, fids=(1, 8),
+                                              instances=(1,), runs=4, seed=0)
+        assert_trajectory_equal(res_b, res_m)
+        assert 1 <= res_m.compiles <= n_buckets, res_m.compiles
+        if strategy == "ordered":
+            # jit-cache-level: every shard_map runner compiled exactly once
+            # (guarded like MeshCampaignEngine.compiles() — _cache_size is a
+            # private jit attribute that an unpinned jax may drop)
+            for key, fn in eng_m._runner_cache.items():
+                cs = getattr(fn, "_cache_size", None)
+                if callable(cs):
+                    assert int(cs()) == 1, (key, cs())
+        else:
+            assert res_m.shard_segments is not None
+            islands_used = sum(1 for s in res_m.shard_segments if s)
+            assert islands_used == 8          # every island ran its slice
+        assert res_m.exchange and \
+            res_m.exchange[-1]["global_fevals"] == int(
+                np.sum(res_m.total_fevals))
+        print(f"trajectory[{strategy}] OK  compiles={res_m.compiles} "
+              f"segments={len(res_m.segments)}")
+
+    # -- inert padding: 6 members on 8 devices -------------------------------
+    res_b6 = bucketed.run_campaign_bucketed(eng_b, fids=(1, 8), instances=(1,),
+                                            runs=3, seed=2)
+    for strategy in ("ordered", "concurrent"):
+        eng_m = mesh_engine.MeshCampaignEngine(strategy=strategy, **KW)
+        res_m6 = mesh_engine.run_campaign_mesh(eng_m, fids=(1, 8),
+                                               instances=(1,), runs=3, seed=2)
+        assert len(res_m6.members) == 6
+        assert res_m6.trace.ran.shape[0] == 6     # pad rows sliced off
+        assert_trajectory_equal(res_b6, res_m6)
+        print(f"padding[{strategy}] OK")
+
+    # -- ECDF equivalence at eigen_interval > 1 ------------------------------
+    kw = dict(n=8, lam_start=8, kmax_exp=1, max_evals=4000, eigen_interval=4)
+    eng_b2 = bucketed.BucketedLadderEngine(**kw)
+    res_b2 = bucketed.run_campaign_bucketed(eng_b2, fids=(1, 8),
+                                            instances=(1,), runs=4, seed=0)
+    targets = np.array([1e2, 1e0, 1e-4])
+    hits_b = np.isfinite(res_b2.hit_evals(targets)).mean(axis=0)
+    B = len(res_b2.members)
+    for strategy in ("ordered", "concurrent"):
+        eng_m = mesh_engine.MeshCampaignEngine(strategy=strategy, **kw)
+        res_m2 = mesh_engine.run_campaign_mesh(eng_m, fids=(1, 8),
+                                               instances=(1,), runs=4, seed=0)
+        hits_m = np.isfinite(res_m2.hit_evals(targets)).mean(axis=0)
+        assert np.all(np.abs(hits_b - hits_m) <= 1.0 / B + 1e-9), \
+            (strategy, hits_b, hits_m)
+        for (fid, _i, _r), err in zip(res_m2.members,
+                                      res_m2.best_f - res_m2.f_opt):
+            if fid == 1:
+                assert err < 1e-6
+        assert (res_m2.total_fevals <= kw["max_evals"]).all()
+        print(f"ecdf[{strategy}] OK")
+
+    # -- S2 early sharing: stop_at retires every island ----------------------
+    eng_s = mesh_engine.MeshCampaignEngine(strategy="concurrent",
+                                           stop_at=1e30, **KW)
+    res_s = mesh_engine.run_campaign_mesh(eng_s, fids=(1, 8), instances=(1,),
+                                          runs=4, seed=0)
+    assert any(e.get("stopped_early") for e in res_s.exchange)
+    # one round of segments at most — the exchange stopped everything after it
+    assert len(res_s.exchange) <= 2
+    assert int(np.sum(res_s.total_fevals)) < int(np.sum(res_b.total_fevals))
+    print("stop_at OK")
+
+    print("MESH-CHECK-OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -66,6 +66,77 @@ def test_bucketed_segments_amortize_eigh_too():
     assert hlo_analyzer.count_ops(txt, EIGH_PATTERN) == seg_gens // 5
 
 
+def _sphere(X):
+    return jnp.sum(X ** 2, axis=-1)
+
+
+def test_kdistributed_chunk_amortizes_eigh():
+    """Satellite port of scan_eigen_blocks into the strategies chunk scan:
+    a whole-block chunk executes ⌈T/interval⌉ batched eighs, not T."""
+    from repro.core.strategies import KDistributed
+    T, interval = 20, 5
+    kd = KDistributed(n=6, n_devices=3, lam_start=8, lam_slots=8,
+                      kmax_exp=1, eigen_interval=interval)
+    fn = jax.jit(jax.vmap(kd.chunk_fn(_sphere, ("ev",), T),
+                          in_axes=(None, None), out_axes=0,
+                          axis_name="ev", axis_size=kd.n_devices))
+    carry = kd.init_carry(jax.random.PRNGKey(0))
+    keys = jax.random.split(jax.random.PRNGKey(1), T)
+    txt = fn.lower(carry, keys).compile().as_text()
+    assert hlo_analyzer.count_ops(txt, EIGH_PATTERN) == T // interval
+
+
+def test_kdistributed_ragged_chunk_keeps_flat_scan():
+    """Regression pin of the vmap-defeated lazy cond: a chunk that does not
+    divide into whole eigen blocks falls back to the flat scan, which pays
+    one eigh per generation regardless of eigen_interval."""
+    from repro.core.strategies import KDistributed
+    T, interval = 18, 5
+    kd = KDistributed(n=6, n_devices=3, lam_start=8, lam_slots=8,
+                      kmax_exp=1, eigen_interval=interval)
+    fn = jax.jit(jax.vmap(kd.chunk_fn(_sphere, ("ev",), T),
+                          in_axes=(None, None), out_axes=0,
+                          axis_name="ev", axis_size=kd.n_devices))
+    carry = kd.init_carry(jax.random.PRNGKey(0))
+    keys = jax.random.split(jax.random.PRNGKey(1), T)
+    txt = fn.lower(carry, keys).compile().as_text()
+    assert hlo_analyzer.count_ops(txt, EIGH_PATTERN) == T
+
+
+def test_kreplicated_phase_chunk_amortizes_eigh():
+    from repro.core import strategies
+    T, interval = 20, 5
+    kr = strategies.KReplicated(n=6, n_devices=2, lam_start=8, lam_slots=8,
+                                eigen_interval=interval)
+    cfg, params, G, g = kr.phase_cfg(1)          # one 2-device descent
+    run_chunk = kr.phase_chunk_fn(cfg, params, _sphere, T)
+    inner = jax.vmap(run_chunk, in_axes=0, out_axes=0, axis_name="grp")
+    outer = jax.jit(jax.vmap(inner, in_axes=0, out_axes=0, axis_name="mem"))
+    states = kr.init_phase_states(cfg, G, jax.random.PRNGKey(0))  # (G, ...)
+    st = jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[None], (g,) + a.shape), states)
+    rep = lambda a: jnp.broadcast_to(a[None, None], (g, G) + a.shape)
+    carry = strategies.KRepCarry(
+        state=st, best_f=rep(jnp.asarray(jnp.inf, cfg.jdtype)),
+        best_x=rep(jnp.zeros((kr.n,), cfg.jdtype)),
+        fevals=rep(jnp.asarray(0, jnp.int64)))
+    keys = jnp.broadcast_to(
+        jax.random.split(jax.random.PRNGKey(1), T)[None, None],
+        (g, G, T, 2))
+    txt = outer.lower(carry, keys).compile().as_text()
+    assert hlo_analyzer.count_ops(txt, EIGH_PATTERN) == T // interval
+
+
+def test_run_concurrent_with_eigen_interval_converges():
+    """End-to-end: the nested chunk inside run_concurrent still optimizes."""
+    kd, carry, trace = ladder.run_concurrent(
+        n=6, n_devices=3, key=jax.random.PRNGKey(0), fitness_fn=_sphere,
+        total_gens=100, lam_start=8, kmax_exp=1, eigen_interval=5)
+    assert int(kd.cfg.eigen_interval) == 5
+    assert float(carry.best_f) < 1e-5
+    assert np.all(np.diff(trace["best_f"]) <= 1e-15)
+
+
 def test_nested_equals_flat_when_interval_is_1():
     """interval == 1: every generation refreshes in both schedules, so the
     nested restructuring must not change the trajectory."""

@@ -3,11 +3,14 @@ import json
 import subprocess
 import sys
 
+from conftest import hermetic_subproc_env
 import pytest
 
 from repro.distributed.pipeline import bubble_fraction
 
 pytestmark = pytest.mark.slow  # heavy model/train/serve tier — excluded from fast CI
+
+SUBPROC_ENV = hermetic_subproc_env()
 
 
 def test_bubble_fraction_law():
@@ -48,8 +51,7 @@ print(json.dumps({"ok": ok,
 def test_gpipe_matches_sequential_4_stages():
     out = subprocess.run([sys.executable, "-c", PIPE_PROG],
                          capture_output=True, text=True, timeout=300,
-                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                              "HOME": "/root"})
+                         env=SUBPROC_ENV)
     assert out.returncode == 0, out.stderr[-2000:]
     res = json.loads(out.stdout.strip().splitlines()[-1])
     assert res["ok"], f"pipeline mismatch: max_err={res['max_err']}"
