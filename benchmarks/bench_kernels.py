@@ -1,0 +1,212 @@
+"""Kernel-level benchmark of the fused generation path (PR 4).
+
+Sweeps the problem dimension across the rung ladder's population sizes and
+measures, per (n, λ):
+
+* ``update_core`` — the O(n²) state-update ops alone, PR-3 unfused soup
+  (rank-μ gram dot + y_w GEMV + covariance combine + ``0.5·(C+Cᵀ)``
+  symmetrize + whitened-step GEMVs) vs the fused op
+  (``ref.fused_gen_update``: ONE gram-family dot, no symmetrize pass — C
+  stays symmetric by construction).  This is the λ-independent cost the
+  ROADMAP named as the remaining per-step lever at large n.
+* ``full_step`` — the whole masked generation update as the engines run it
+  (order statistics + heavy op + O(n) epilogue + stop-masking), same A/B.
+* ``sample`` — fused (Y, X)-in-one-pass sampling vs the separate
+  transform + axpy epilogue.
+
+Also lowers the fused XLA step and the slot-batched Pallas megakernel
+(interpret off-TPU) as roofline cells — flops / bytes per generation via
+the loop-aware HLO analyzer — so the dry-run artifact family covers the
+new kernels.
+
+  PYTHONPATH=src python -m benchmarks.bench_kernels [--dims 64,256,1024]
+
+Writes BENCH_kernels.json (CI artifact via the BENCH_*.json glob).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import cmaes  # noqa: E402
+from repro.core.params import CMAConfig, make_params  # noqa: E402
+from repro.distributed import hlo_analyzer  # noqa: E402
+from repro.kernels import ref  # noqa: E402
+
+
+def _time_scan(body, carry0, gens: int, reps: int) -> float:
+    """Best-of-reps seconds per generation for a jitted scanned body."""
+    fn = jax.jit(lambda c: jax.lax.scan(body, c, None, length=gens)[0])
+    out = fn(carry0)
+    jax.block_until_ready(out)
+    best = np.inf
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(carry0))
+        best = min(best, (time.perf_counter() - t0) / gens)
+    return best
+
+
+def _bench_cell(n: int, lam: int, gens: int, reps: int) -> dict:
+    cfg = CMAConfig(n=n, lam=lam, eigen_interval=10 ** 9)  # update ops only
+    p = make_params(cfg)
+    key = jax.random.PRNGKey(0)
+    st = cmaes.init_state(cfg, key, jnp.zeros(n), 1.0)
+    y0, x = cmaes.sample_population(st, key, lam)
+    f = jnp.sum(x ** 2, axis=-1)
+    w = cmaes.rank_weights(f, p)
+
+    def live(s, a):
+        # carry-dependent guard: stops XLA constant-folding the population
+        # dots out of the scan (s.stop is always False at runtime)
+        return jnp.where(s.stop, jnp.zeros_like(a), a)
+
+    # -- update core: the O(n²) ops this PR fuses -------------------------
+    def core_unfused(s, _):
+        y = live(s, y0)
+        y_w = w @ y
+        gram = ref.rank_mu_gram(y, w)
+        whiten = s.B @ ((s.B.T @ y_w) / jnp.maximum(s.D, 1e-300))
+        psn = 0.7 * s.p_sigma + 0.3 * whiten
+        pcn = 0.8 * s.p_c + 0.2 * y_w
+        cn = ref.covariance_combine(s.C, gram, pcn, 0.9, p.c_mu, p.c_1)
+        cn = 0.5 * (cn + cn.T)
+        return s._replace(C=cn, p_sigma=psn, p_c=pcn), 0
+
+    def core_fused(s, _):
+        cn, psn, pcn, _yw = ref.fused_gen_update(
+            s.C, s.B, s.D, s.p_sigma, s.p_c, live(s, y0), w, p.c_sigma,
+            p.mu_eff, p.c_c, p.c_1, p.c_mu, p.chi_n,
+            (s.gen + 1).astype(s.m.dtype))
+        return s._replace(C=cn, p_sigma=psn, p_c=pcn), 0
+
+    # -- full masked step as the engines run it ---------------------------
+    def full_unfused(s, _):
+        mom = cmaes.compute_moments(live(s, y0), f, x, p, lam)
+        return cmaes.masked_update(cfg, p, s, mom, impl="xla_unfused",
+                                   eigen="defer"), 0
+
+    def full_fused(s, _):
+        return cmaes.masked_update_fused(cfg, p, s, live(s, y0), f, x,
+                                         impl="xla", eigen="defer"), 0
+
+    # -- sampling: separate transform+axpy vs fused (Y, X) ----------------
+    z = cmaes.sample_z(st, key, lam)
+
+    def samp_unfused(s, _):
+        yy = ref.sample_transform(s.B, s.D, z)
+        xx = s.m[None, :] + s.sigma * yy
+        return s._replace(m=s.m + 0.0 * xx[0]), 0
+
+    def samp_fused(s, _):
+        yy, xx = ref.gen_sample(s.m, s.sigma, s.B, s.D, z)
+        return s._replace(m=s.m + 0.0 * xx[0]), 0
+
+    cell = {}
+    for name, unf, fus in (("update_core", core_unfused, core_fused),
+                           ("full_step", full_unfused, full_fused),
+                           ("sample", samp_unfused, samp_fused)):
+        tu = _time_scan(unf, st, gens, reps)
+        tf = _time_scan(fus, st, gens, reps)
+        cell[name] = {
+            "unfused_ms": round(tu * 1e3, 5), "fused_ms": round(tf * 1e3, 5),
+            "speedup": round(tu / max(tf, 1e-12), 3),
+        }
+    return cell
+
+
+def _roofline_cells(n: int, lam: int) -> dict:
+    """Lower the fused step (XLA ref) and the slot-batched Pallas megakernel
+    as first-class roofline cells: flops/bytes per generation."""
+    cfg = CMAConfig(n=n, lam=lam, eigen_interval=10 ** 9)
+    p = make_params(cfg)
+    st = cmaes.init_state(cfg, jax.random.PRNGKey(0), jnp.zeros(n), 1.0)
+    y, x = cmaes.sample_population(st, jax.random.PRNGKey(1), lam)
+    f = jnp.sum(x ** 2, axis=-1)
+
+    def fused_step(s):
+        return cmaes.masked_update_fused(cfg, p, s, y, f, x, impl="xla",
+                                         eigen="defer")
+
+    txt = jax.jit(fused_step).lower(st).compile().as_text()
+    stats = hlo_analyzer.analyze(txt)
+    out = {"xla_fused_step": {"flops": stats["flops"],
+                              "bytes": stats["bytes"]}}
+
+    # slot-batched megakernel (interpret lowering off-TPU): S=2 slots
+    from repro.kernels import ops as kops
+    S = 2
+    rep = lambda a: jnp.broadcast_to(a[None], (S,) + a.shape)
+    w = cmaes.rank_weights(f, p)
+    coef = {k: jnp.broadcast_to(v, (S,))
+            for k, v in cmaes.gen_coef(p, st).items()}
+
+    def mega(C, B, D, ps, pc, Y, W):
+        return kops.gen_update(C, B, D, ps, pc, Y, W, coef, impl="pallas")
+
+    txt_k = jax.jit(mega).lower(
+        rep(st.C), rep(st.B), rep(st.D), rep(st.p_sigma), rep(st.p_c),
+        rep(y), rep(w)).compile().as_text()
+    stats_k = hlo_analyzer.analyze(txt_k)
+    out["pallas_megakernel_2slots"] = {"flops": stats_k["flops"],
+                                       "bytes": stats_k["bytes"]}
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dims", default="64,256,1024")
+    ap.add_argument("--lam-start", type=int, default=8)
+    ap.add_argument("--kmax", type=int, default=4)
+    ap.add_argument("--gens", type=int, default=50)
+    ap.add_argument("--reps", type=int, default=5)
+    ap.add_argument("--out", default="BENCH_kernels.json")
+    args = ap.parse_args(argv)
+    dims = [int(d) for d in args.dims.split(",")]
+    rungs = [(2 ** k) * args.lam_start for k in range(args.kmax + 1)]
+
+    out = {"config": {
+        "dims": dims, "rung_lams": rungs, "gens": args.gens,
+        "reps": args.reps, "dtype": "float64",
+        "note": "update_core = the O(n²) per-generation state-update ops "
+                "(PR-3 unfused soup vs the fused one-dot/no-symmetrize "
+                "path); full_step adds order statistics, O(n) epilogue and "
+                "stop-masking (identical in both); times are best-of-reps "
+                "per generation on CPU",
+    }, "cells": {}, "ladder_speedup": {}, "roofline": {}}
+
+    for n in dims:
+        gens = max(10, min(args.gens, 8000 // n if n >= 512 else args.gens))
+        per_rung = {}
+        for lam in rungs:
+            per_rung[str(lam)] = _bench_cell(n, lam, gens, args.reps)
+            print(f"[bench_kernels] n={n} lam={lam}: "
+                  + ", ".join(f"{k} {v['speedup']}x"
+                              for k, v in per_rung[str(lam)].items()),
+                  flush=True)
+        out["cells"][str(n)] = per_rung
+        out["ladder_speedup"][str(n)] = {
+            sec: round(float(np.exp(np.mean(
+                [np.log(per_rung[str(lam)][sec]["speedup"])
+                 for lam in rungs]))), 3)
+            for sec in ("update_core", "full_step", "sample")
+        }
+        out["roofline"][str(n)] = _roofline_cells(n, min(rungs[-1], 64))
+
+    with open(args.out, "w") as fh:
+        json.dump(out, fh, indent=2)
+    print(json.dumps(out["ladder_speedup"], indent=2))
+    print(f"[bench_kernels] wrote {args.out}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

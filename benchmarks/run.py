@@ -4,8 +4,9 @@
 
 Default sizes are CI-scale (single CPU core); --full widens dims/functions
 to the paper's ranges (hours on this container, intended for real hardware).
---smoke runs only the ladder-engine benchmark (a couple of minutes) and
-writes BENCH_ladder.json for the CI artifact.
+--smoke runs the engine/kernel benchmarks only (a few minutes) and writes
+the BENCH_kernels/BENCH_ladder/BENCH_bucketed/BENCH_mesh JSON artifacts
+for CI.
 """
 from __future__ import annotations
 
@@ -38,7 +39,10 @@ def main(argv=None):
     t0 = time.time()
 
     if args.smoke:
-        from benchmarks import bench_ladder, bench_mesh
+        from benchmarks import bench_kernels, bench_ladder, bench_mesh
+        section("Smoke — fused generation kernels vs PR-3 unfused op soup")
+        bench_kernels.main(["--dims", "64,256,1024", "--gens", "40",
+                            "--reps", "5", "--out", "BENCH_kernels.json"])
         section("Smoke — host-loop IPOP vs device-resident ladder")
         bench_ladder.main(["--dim", "6", "--fids", "1,8", "--runs", "2",
                            "--lam-start", "8", "--kmax", "2",

@@ -68,7 +68,7 @@ class BucketedLadderEngine:
     max_evals: int = 200_000
     domain: Tuple[float, float] = (-5.0, 5.0)
     sigma0_frac: float = 0.25
-    impl: str = "xla"
+    impl: str = "auto"                  # kernel dispatch — see kernels/ops.py
     dtype: str = "float64"
     eigen_interval: Optional[int] = None
     seg_blocks: Optional[int] = None    # segment length cap in eigen blocks

@@ -78,12 +78,9 @@ def init_state(cfg: CMAConfig, key: jax.Array, x0: jnp.ndarray,
 # Sampling (paper eq. 1, batched GEMM form)
 # ---------------------------------------------------------------------------
 
-def sample_population(state: CMAState, key: jax.Array, lam_slots: int,
-                      impl: str = "xla",
-                      row_keys: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Sample ``lam_slots`` points.  Returns (Y, X): x_k = m + σ·y_k, y = B·(D∘z).
-
-    ``lam_slots`` is static — strategies call this with the per-device slot count.
+def sample_z(state: CMAState, key: jax.Array, lam_slots: int,
+             row_keys: bool = True) -> jnp.ndarray:
+    """The raw N(0, I) draw behind ``sample_population`` — (lam_slots, n).
 
     ``row_keys=True`` (the repo-wide key schema) keys each population member
     by ``fold_in(key, row)``, so row i's draw is independent of how many rows
@@ -99,9 +96,19 @@ def sample_population(state: CMAState, key: jax.Array, lam_slots: int,
     if row_keys:
         ks = jax.vmap(jax.random.fold_in, (None, 0))(
             key, jnp.arange(lam_slots, dtype=jnp.uint32))
-        z = jax.vmap(lambda k: jax.random.normal(k, (n,), state.m.dtype))(ks)
-    else:
-        z = jax.random.normal(key, (lam_slots, n), dtype=state.m.dtype)
+        return jax.vmap(lambda k: jax.random.normal(k, (n,), state.m.dtype))(ks)
+    return jax.random.normal(key, (lam_slots, n), dtype=state.m.dtype)
+
+
+def sample_population(state: CMAState, key: jax.Array, lam_slots: int,
+                      impl: str = "xla",
+                      row_keys: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sample ``lam_slots`` points.  Returns (Y, X): x_k = m + σ·y_k, y = B·(D∘z).
+
+    ``lam_slots`` is static — strategies call this with the per-device slot
+    count.  See ``sample_z`` for the row-keyed draw semantics.
+    """
+    z = sample_z(state, key, lam_slots, row_keys=row_keys)
     y = kops.sample_transform(state.B, state.D, z, impl=impl)   # (lam, n)
     x = state.m[None, :] + state.sigma * y
     return y, x
@@ -131,13 +138,13 @@ def rank_weights(fitness: jnp.ndarray, params: CMAParams) -> jnp.ndarray:
     return jnp.where(jnp.isfinite(fitness), w, 0.0)
 
 
-def compute_moments(y: jnp.ndarray, fitness: jnp.ndarray, x: jnp.ndarray,
-                    params: CMAParams, lam_max: int,
-                    impl: str = "xla") -> Moments:
-    """Dense (single-group) path: full population on one device."""
+def population_stats(fitness: jnp.ndarray, x: jnp.ndarray, params: CMAParams,
+                     lam_max: int):
+    """Order statistics shared by the moments and fused paths:
+    ``(w, f_sorted, x_best, n_evals)`` — rank weights, the λ_max-padded
+    ascending fitness vector, this generation's best point, and the count of
+    valid (finite-fitness) evaluations."""
     w = rank_weights(fitness, params)                 # (lam,)
-    y_w = w @ y                                       # (n,)
-    gram = kops.rank_mu_gram(y, w, impl=impl)         # (n, n) == yᵀ diag(w) y
     f_sorted_full = jnp.sort(fitness)
     lam = fitness.shape[0]
     if lam >= lam_max:
@@ -147,6 +154,16 @@ def compute_moments(y: jnp.ndarray, fitness: jnp.ndarray, x: jnp.ndarray,
             [f_sorted_full, jnp.full((lam_max - lam,), jnp.inf, fitness.dtype)])
     x_best = x[jnp.argmin(fitness)]
     n_evals = jnp.sum(jnp.isfinite(fitness)).astype(jnp.int32)
+    return w, f_sorted, x_best, n_evals
+
+
+def compute_moments(y: jnp.ndarray, fitness: jnp.ndarray, x: jnp.ndarray,
+                    params: CMAParams, lam_max: int,
+                    impl: str = "xla") -> Moments:
+    """Dense (single-group) path: full population on one device."""
+    w, f_sorted, x_best, n_evals = population_stats(fitness, x, params, lam_max)
+    y_w = w @ y                                       # (n,)
+    gram = kops.rank_mu_gram(y, w, impl=impl)         # (n, n) == yᵀ diag(w) y
     return Moments(y_w=y_w, gram=gram, f_sorted=f_sorted, x_best=x_best,
                    n_evals=n_evals)
 
@@ -183,16 +200,11 @@ def update_from_moments(cfg: CMAConfig, params: CMAParams, state: CMAState,
     """
     n = cfg.n
     dt = state.m.dtype
-    lam_f = params.lam.astype(dt)
 
     y_w, gram = mom.y_w, mom.gram
-    f_best_gen = mom.f_sorted[0]
-
-    # -- mean ---------------------------------------------------------------
-    m_new = state.m + state.sigma * y_w
 
     # -- step-size path:  p_σ ← (1−c_σ)p_σ + sqrt(c_σ(2−c_σ)μ_eff)·C^{-1/2}·y_w
-    c_sig, d_sig = params.c_sigma, params.d_sigma
+    c_sig = params.c_sigma
     inv_sqrt_C_yw = state.B @ ((state.B.T @ y_w) / jnp.maximum(state.D, 1e-300))
     p_sigma = (1.0 - c_sig) * state.p_sigma + jnp.sqrt(
         c_sig * (2.0 - c_sig) * params.mu_eff) * inv_sqrt_C_yw
@@ -214,12 +226,30 @@ def update_from_moments(cfg: CMAConfig, params: CMAParams, state: CMAState,
     C_new = kops.covariance_combine(state.C, gram, p_c, decay, c_mu, c_1, impl=impl)
     C_new = 0.5 * (C_new + C_new.T)
 
-    # -- step size -------------------------------------------------------------
+    return _finish_update(cfg, params, state, mom.f_sorted, mom.x_best,
+                          mom.n_evals, C_new, p_sigma, p_c, y_w, eigen)
+
+
+def _finish_update(cfg: CMAConfig, params: CMAParams, state: CMAState,
+                   f_sorted, x_best, n_evals, C_new, p_sigma_new, p_c_new,
+                   y_w, eigen: str) -> CMAState:
+    """The O(n)/O(1) generation epilogue shared by the unfused (moments) and
+    fused (kernels/cma_gen.py) update paths: mean and step-size updates, the
+    eigen refresh policy, bookkeeping, and the stopping check.  Everything
+    O(n²) already happened in the caller (gram/whiten/covariance)."""
+    f_best_gen = f_sorted[0]
+    c_sig, d_sig = params.c_sigma, params.d_sigma
+
+    # -- mean ---------------------------------------------------------------
+    m_new = state.m + state.sigma * y_w
+
+    # -- step size -----------------------------------------------------------
+    ps_norm = jnp.linalg.norm(p_sigma_new)
     sigma_new = state.sigma * jnp.exp((c_sig / d_sig) * (ps_norm / params.chi_n - 1.0))
     # flat-fitness guard (c-cmaes): bump sigma if best equals the ~λ/4-th value
     kth = jnp.clip((params.lam // 4 + 1).astype(jnp.int32), 0,
-                   mom.f_sorted.shape[0] - 1)
-    flat = mom.f_sorted[0] == mom.f_sorted[kth]
+                   f_sorted.shape[0] - 1)
+    flat = f_sorted[0] == f_sorted[kth]
     sigma_new = jnp.where(flat, sigma_new * jnp.exp(0.2 + c_sig / d_sig), sigma_new)
 
     # -- lazy eigendecomposition ------------------------------------------------
@@ -241,22 +271,54 @@ def update_from_moments(cfg: CMAConfig, params: CMAParams, state: CMAState,
     # -- bookkeeping -------------------------------------------------------------
     better = f_best_gen < state.best_f
     best_f = jnp.where(better, f_best_gen, state.best_f)
-    best_x = jnp.where(better, mom.x_best, state.best_x)
+    best_x = jnp.where(better, x_best, state.best_x)
     hist_idx = jnp.mod(state.hist_count, cfg.hist_len)
     f_hist = state.f_hist.at[hist_idx].set(f_best_gen)
 
     new = CMAState(
         m=m_new, sigma=sigma_new, C=C_new, B=B_new, D=D_new,
-        p_sigma=p_sigma, p_c=p_c,
+        p_sigma=p_sigma_new, p_c=p_c_new,
         gen=state.gen + 1, last_eigen_gen=last_eigen,
         best_f=best_f, best_x=best_x,
-        fevals=state.fevals + mom.n_evals,
+        fevals=state.fevals + n_evals,
         f_hist=f_hist, hist_count=state.hist_count + 1,
         stop=state.stop, stop_reason=state.stop_reason,
         restarts=state.restarts,
     )
-    reason = stopping.check_stop(cfg, params, new, mom.f_sorted)
+    reason = stopping.check_stop(cfg, params, new, f_sorted)
     return new._replace(stop=reason > 0, stop_reason=reason)
+
+
+def gen_coef(params: CMAParams, state: CMAState) -> dict:
+    """Per-slot scalar coefficients of the fused update op
+    (``kops.gen_update`` / kernels/cma_gen.py).  Works on per-slot params
+    and on stacked (S,)-leaved params alike."""
+    dt = state.m.dtype
+    return {
+        "c_sigma": params.c_sigma, "mu_eff": params.mu_eff,
+        "c_c": params.c_c, "c_1": params.c_1, "c_mu": params.c_mu,
+        "chi_n": params.chi_n, "gen1": (state.gen + 1).astype(dt),
+    }
+
+
+def update_from_population(cfg: CMAConfig, params: CMAParams, state: CMAState,
+                           y: jnp.ndarray, fitness: jnp.ndarray,
+                           x: jnp.ndarray, impl: str = "auto",
+                           eigen: str = "lazy") -> CMAState:
+    """One CMA-ES generation straight from the sampled population — the
+    FUSED path: the rank-μ gram, weighted mean, evolution paths, covariance
+    epilogue and whitened-step GEMV run as one op (``kops.gen_update`` —
+    the slot-batched Pallas megakernel on TPU, ``ref.fused_gen_update``'s
+    single gram-family dot elsewhere), so C/B/D are read once per
+    generation.  Tolerance-equivalent to ``compute_moments`` +
+    ``update_from_moments`` (identical arithmetic, different op grouping)."""
+    w, f_sorted, x_best, n_evals = population_stats(
+        fitness, x, params, fitness.shape[0])
+    C_new, p_sigma_new, p_c_new, y_w = kops.gen_update(
+        state.C, state.B, state.D, state.p_sigma, state.p_c, y, w,
+        gen_coef(params, state), impl=impl)
+    return _finish_update(cfg, params, state, f_sorted, x_best, n_evals,
+                          C_new, p_sigma_new, p_c_new, y_w, eigen)
 
 
 def masked_update(cfg: CMAConfig, params: CMAParams, state: CMAState,
@@ -268,6 +330,16 @@ def masked_update(cfg: CMAConfig, params: CMAParams, state: CMAState,
         lambda old, nw: jnp.where(state.stop, old, nw), state, new)
 
 
+def masked_update_fused(cfg: CMAConfig, params: CMAParams, state: CMAState,
+                        y: jnp.ndarray, fitness: jnp.ndarray, x: jnp.ndarray,
+                        impl: str = "auto", eigen: str = "lazy") -> CMAState:
+    """Fused-path sibling of ``masked_update`` (population in, state out)."""
+    new = update_from_population(cfg, params, state, y, fitness, x,
+                                 impl=impl, eigen=eigen)
+    return jax.tree_util.tree_map(
+        lambda old, nw: jnp.where(state.stop, old, nw), state, new)
+
+
 # ---------------------------------------------------------------------------
 # Dense single-descent step + run loop (paper Alg. 1)
 # ---------------------------------------------------------------------------
@@ -275,8 +347,18 @@ def masked_update(cfg: CMAConfig, params: CMAParams, state: CMAState,
 def step(cfg: CMAConfig, params: CMAParams, state: CMAState,
          fitness_fn: Callable[[jnp.ndarray], jnp.ndarray], key: jax.Array,
          impl: str = "xla") -> CMAState:
-    """One full CMA-ES generation on a single device (Alg. 1 lines 4–8)."""
+    """One full CMA-ES generation on a single device (Alg. 1 lines 4–8).
+
+    Dispatches to the fused update path unless ``impl`` pins the pre-PR-4
+    op soup (``"xla_unfused"``) — see kernels/ops.py for the semantics.
+    """
     lam = int(params.lam)  # static in the dense path
+    if kops.use_fused(impl):
+        z = sample_z(state, key, lam)
+        y, x = kops.gen_sample(state.m, state.sigma, state.B, state.D, z,
+                               impl=impl)
+        f = fitness_fn(x)
+        return masked_update_fused(cfg, params, state, y, f, x, impl=impl)
     y, x = sample_population(state, key, lam, impl=impl)
     f = fitness_fn(x)
     mom = compute_moments(y, f, x, params, cfg.lam_max, impl=impl)

@@ -93,7 +93,7 @@ def run_ipop(fitness_fn: Callable, n: int, key: jax.Array,
              lam_start: int = 12, kmax_exp: int = 8,
              max_evals: int = 200_000, domain=(-5.0, 5.0),
              sigma0_frac: float = 0.25, chunk: int = 32,
-             impl: str = "xla", dtype: str = "float64",
+             impl: str = "auto", dtype: str = "float64",
              total_gens: int | None = None,
              backend: str = "ladder",
              mesh_strategy: str = "ordered") -> IPOPResult:
@@ -109,7 +109,16 @@ def run_ipop(fitness_fn: Callable, n: int, key: jax.Array,
     ``backend="hostloop"`` keeps the legacy host-driven chunked loop (same
     keys, same padded arithmetic).  ``chunk`` only affects the host-loop
     backend; ``mesh_strategy`` only the mesh backend.
+
+    ``impl`` selects the kernel dispatch uniformly for EVERY backend —
+    ``"auto"`` (Pallas megakernels on TPU, fused jnp ref elsewhere),
+    ``"xla"``, ``"xla_unfused"`` (the pre-PR-4 op soup, kept as the
+    regression baseline) or ``"pallas"`` — and is validated here, at entry,
+    instead of failing deep inside a traced engine program
+    (kernels/ops.py documents the semantics).
     """
+    from repro.kernels import ops as kops
+    kops.validate_impl(impl)
     if backend == "hostloop":
         if total_gens is not None:
             raise ValueError("total_gens only applies to backend='ladder'; "
@@ -154,7 +163,7 @@ def run_ipop_hostloop(fitness_fn: Callable, n: int, key: jax.Array,
                       lam_start: int = 12, kmax_exp: int = 8,
                       max_evals: int = 200_000, domain=(-5.0, 5.0),
                       sigma0_frac: float = 0.25, chunk: int = 32,
-                      impl: str = "xla",
+                      impl: str = "auto",
                       dtype: str = "float64") -> IPOPResult:
     """Host-driven baseline: one jitted chunk-scan per descent, host-side
     early exit on the stop flag, Python-level restart between rungs."""

@@ -92,14 +92,26 @@ def padded_gen_step(cfg: CMAConfig, params, state: cmaes.CMAState,
                     impl: str = "xla", eigen: str = "lazy") -> cmaes.CMAState:
     """Sample ``cfg.lam_max`` points, mask slots ≥ λ to +inf, apply the update.
 
-    Sampling is row-keyed (``cmaes.sample_population``), so the points a
-    descent sees depend only on its (slot, incarnation, generation) key and
-    each row's index — bit-identical whether the program pads to the
-    campaign's λ_max or to a rung bucket's narrower width
-    (core/bucketed.py).  ``eigen`` picks the B/D refresh mode (see
-    ``cmaes.update_from_moments``).
+    Sampling is row-keyed (``cmaes.sample_z``), so the points a descent sees
+    depend only on its (slot, incarnation, generation) key and each row's
+    index — bit-identical whether the program pads to the campaign's λ_max
+    or to a rung bucket's narrower width (core/bucketed.py).  ``eigen``
+    picks the B/D refresh mode (see ``cmaes.update_from_moments``).
+
+    ``impl`` additionally selects the update structure: the fused
+    generation path (``cmaes.masked_update_fused`` — one gram-family op,
+    C/B/D read once) for every impl except ``"xla_unfused"``, which keeps
+    the pre-PR-4 moments op soup (kernels/ops.py has the full semantics).
     """
     lam_max = cfg.lam_max
+    if cmaes.kops.use_fused(impl):
+        z = cmaes.sample_z(state, k_gen, lam_max)
+        y, x = cmaes.kops.gen_sample(state.m, state.sigma, state.B, state.D,
+                                     z, impl=impl)
+        f = fitness_fn(x)
+        f = jnp.where(jnp.arange(lam_max) < params.lam, f, jnp.inf)
+        return cmaes.masked_update_fused(cfg, params, state, y, f, x,
+                                         impl=impl, eigen=eigen)
     y, x = cmaes.sample_population(state, k_gen, lam_max, impl=impl)
     f = fitness_fn(x)
     f = jnp.where(jnp.arange(lam_max) < params.lam, f, jnp.inf)
@@ -113,6 +125,43 @@ def _tree_select(mask: jnp.ndarray, a, b):
         m = mask.reshape(mask.shape + (1,) * (x.ndim - mask.ndim))
         return jnp.where(m, x, y)
     return jax.tree_util.tree_map(sel, a, b)
+
+
+def _slots_fused_update(cfg: CMAConfig, params_k, states: cmaes.CMAState,
+                        kgs: jax.Array, fitness_fn: Callable,
+                        impl: str, eigen: str) -> cmaes.CMAState:
+    """One fused generation over ALL slots at once — the slot-batched form
+    of ``padded_gen_step``.
+
+    The two heavy ops run ONCE on the stacked (S, ...) state with the slot
+    axis mapped onto the kernels' leading grid dimension (the Pallas
+    megakernels of kernels/cma_gen.py when ``impl`` resolves to pallas; the
+    batched fused jnp ref otherwise) — replacing the old vmap-of-per-slot-
+    kernel corner, which no engine ever exercised.  RNG, fitness and the
+    O(n) scalar epilogue stay vmapped per slot: they are cheap, and vmap of
+    the identical jnp keeps them bit-compatible with the per-slot step the
+    host-loop baseline runs.
+    """
+    lam_max = cfg.lam_max
+    Z = jax.vmap(lambda st, kg: cmaes.sample_z(st, kg, lam_max))(states, kgs)
+    Y, X = cmaes.kops.gen_sample(states.m, states.sigma, states.B, states.D,
+                                 Z, impl=impl)
+    F = jax.vmap(fitness_fn)(X)
+    F = jnp.where(jnp.arange(lam_max)[None, :] < params_k.lam[:, None],
+                  F, jnp.inf)
+    W, f_sorted, x_best, n_evals = jax.vmap(
+        lambda f, x, p: cmaes.population_stats(f, x, p, lam_max))(
+            F, X, params_k)
+    C_new, ps_new, pc_new, y_w = cmaes.kops.gen_update(
+        states.C, states.B, states.D, states.p_sigma, states.p_c, Y, W,
+        cmaes.gen_coef(params_k, states), impl=impl)
+    new = jax.vmap(
+        lambda p, st, fs, xb, ne, cn, ps, pc, yw: cmaes._finish_update(
+            cfg, p, st, fs, xb, ne, cn, ps, pc, yw, eigen))(
+                params_k, states, f_sorted, x_best, n_evals,
+                C_new, ps_new, pc_new, y_w)
+    # masked_update semantics: stopped slots keep their state frozen
+    return _tree_select(states.stop, states, new)
 
 
 # ---------------------------------------------------------------------------
@@ -185,9 +234,13 @@ def slots_gen_step(cfg: CMAConfig, sparams, carry: "LadderCarry",
         slot_ids, carry.incarnation)
     kgs = jax.vmap(gen_key)(kds, carry.states.gen)
 
-    upd = jax.vmap(lambda p, st, kg: padded_gen_step(
-        cfg, p, st, kg, fitness_fn, impl=impl, eigen=eigen))(
-            params_k, carry.states, kgs)
+    if cmaes.kops.use_fused(impl):
+        upd = _slots_fused_update(cfg, params_k, carry.states, kgs,
+                                  fitness_fn, impl, eigen)
+    else:
+        upd = jax.vmap(lambda p, st, kg: padded_gen_step(
+            cfg, p, st, kg, fitness_fn, impl=impl, eigen=eigen))(
+                params_k, carry.states, kgs)
     new_states = _tree_select(ran, upd, carry.states)
 
     evals_gen = jnp.sum(jnp.where(ran, lam_k, 0))
@@ -305,7 +358,7 @@ class LadderEngine:
     max_evals: int = 200_000
     domain: Tuple[float, float] = (-5.0, 5.0)
     sigma0_frac: float = 0.25
-    impl: str = "xla"
+    impl: str = "auto"                  # kernel dispatch — see kernels/ops.py
     dtype: str = "float64"
     restart_mode: str = "double"        # concurrent slots: "double" | "same_k"
     eigen_interval: Optional[int] = None  # None → c-cmaes default (CMAConfig)
@@ -316,6 +369,7 @@ class LadderEngine:
             raise ValueError(f"unknown schedule {self.schedule!r}")
         if self.restart_mode not in ("double", "same_k"):
             raise ValueError(f"unknown restart_mode {self.restart_mode!r}")
+        cmaes.kops.validate_impl(self.impl)
         if self.eigen_schedule not in ("nested", "flat"):
             raise ValueError(f"unknown eigen_schedule {self.eigen_schedule!r}")
         self.lam_max = (2 ** self.kmax_exp) * self.lam_start
@@ -503,7 +557,7 @@ def run_concurrent(n: int, n_devices: int, key: jax.Array,
                    fitness_fn: Callable, total_gens: int,
                    lam_start: int = 12, kmax_exp: Optional[int] = None,
                    domain: Tuple[float, float] = (-5.0, 5.0),
-                   sigma0_frac: float = 0.25, impl: str = "xla",
+                   sigma0_frac: float = 0.25, impl: str = "auto",
                    dtype: str = "float64", drop_prob: float = 0.0,
                    eigen_interval: Optional[int] = None):
     """All rungs concurrently via KDistributed's per-device program, scanned

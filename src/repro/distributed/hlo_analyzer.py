@@ -334,6 +334,28 @@ def count_ops(hlo_text: str, pattern: str) -> float:
     return a._fold_scalar(a.entry, leaf, {})
 
 
+def count_instrs(hlo_text: str, pattern: str) -> float:
+    """Shape-aware sibling of ``count_ops``: executed-instance count of
+    instructions whose ``"<shape> <opcode>"`` text matches ``pattern``.
+
+    Where ``count_ops`` matches opcodes (and custom-call targets) only, this
+    matches the instruction's result shape too — e.g.
+    ``r"f64\\[(?:1,)*6,7\\]\\S* dot\\b"`` counts the (n, n+1)-shaped
+    gram-family dot-generals of the fused CMA generation update (allowing
+    vmap-inserted unit batch dims), which tests/test_fused_gen.py pins to
+    exactly one per generation.  Same loop-aware fold as every other
+    counter here: while bodies multiply by ``known_trip_count``,
+    conditionals take their max branch, fusions/calls recurse.
+    """
+    a = Analyzer(hlo_text)
+    rx = re.compile(pattern)
+
+    def leaf(ins: Instr, _comp: Comp) -> float:
+        return 1.0 if rx.search(f"{ins.shape} {ins.opcode}") else 0.0
+
+    return a._fold_scalar(a.entry, leaf, {})
+
+
 def analyze(hlo_text: str) -> dict:
     """One-call summary used by the dry-run artifacts."""
     a = Analyzer(hlo_text)

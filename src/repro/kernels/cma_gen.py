@@ -1,0 +1,244 @@
+"""Pallas TPU megakernels: one fused CMA-ES generation, slot-batched.
+
+The paper's §3.1 rewrites the CMA-ES hot spots as Level-3 BLAS; PR 2/3
+made every λ-proportional cost work-proportional, leaving the
+λ-independent O(n²) per-generation state update as the dominant per-step
+cost at large n.  These kernels take that update Pallas-native END TO END:
+
+* ``cma_gen_sample`` — fused sampling emitting BOTH ``Y = Z·diag(D)·Bᵀ``
+  and ``X = m + σ·Y`` in one pass (the separate-op path writes Y to HBM,
+  reads it back, and writes X; here the epilogue reuses the accumulator
+  tile while it is still in VMEM).
+* ``cma_gen_update`` — the update megakernel: rank-μ gram, weighted-mean
+  GEMV, evolution-path recursions (including the h_σ stall test), the
+  ``decay·C + c_μ·G + c₁·p_c'p_c'ᵀ`` epilogue, and the whitened-step GEMV
+  ``C^{-1/2}·y_w = B·diag(1/D)·Bᵀ·y_w`` — so C, B and D are each read
+  from HBM exactly ONCE per generation instead of once per op.  The gram
+  accumulates as ``(√w·Y)ᵀ(√w·Y)``, which keeps C' symmetric by
+  construction — the unfused path's ``0.5·(C + Cᵀ)`` repair pass (the
+  memory-bound transpose-add that dominates the update at large n) has no
+  counterpart here at all (see ref.fused_gen_update).
+
+Both kernels are **slot-batched**: every input carries a leading slot (or
+member) axis that maps onto the leading grid dimension, so the stacked-slot
+ladder programs (core/ladder.py::slots_gen_step) invoke ONE kernel for all
+slots instead of vmapping a per-slot kernel (whose batching rule would
+re-trace and rely on vmap lowering — the dead corner PR 4 removes).
+Inactive/parked slots ride through with all-zero weights: the gram,
+``y_w`` and p_c/p_σ pulls they contribute are zero, and the engine's
+``ran``/``stop`` tree-select discards their outputs — the repo-wide
+zero-weight masking convention, now honored in-kernel.
+
+Geometry: grid ``(S, n_k)`` with λ chunked over ``n_k`` and whole-(n,n)
+C/B tiles per slot.  The λ-contraction accumulates in a VMEM scratch tile
+across the ``n_k`` steps; the epilogue (everything after the gram) runs on
+the last λ chunk.  Whole-matrix tiles bound the kernel to roughly
+n ≤ 768 in f32 on a 16 MB-VMEM core (4 n² tiles live: C, B, C', gram
+accumulator) — comfortably past the paper's n = 1000 BBOB ceiling in
+bf16/f16 state and past every config this repo ships in f32.  Off-TPU the
+kernels execute in interpret mode (correctness oracle only; the XLA ref
+``kernels/ref.py::fused_gen_update`` is the production CPU path).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+import jax.numpy as jnp
+
+# per-slot scalar coefficients of the update megakernel, in SMEM layout
+# order (see ops.gen_update for the packing)
+COEF_FIELDS = ("c_sigma", "mu_eff", "c_c", "c_1", "c_mu", "chi_n", "gen1")
+
+
+def _round_block(n: int, cap: int = 128) -> int:
+    """Block edge for an axis of size n: 8-aligned, capped at the MXU edge."""
+    return min(cap, -(-max(n, 1) // 8) * 8)
+
+
+# ---------------------------------------------------------------------------
+# fused sample kernel
+# ---------------------------------------------------------------------------
+
+def _sample_kernel(sigma_ref, z_ref, d_ref, b_ref, m_ref, y_ref, x_ref,
+                   acc_ref, *, n_k: int):
+    s, k = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    z = z_ref[0].astype(jnp.float32)            # (bl, bk)
+    d = d_ref[0].astype(jnp.float32)            # (bk,)
+    b = b_ref[0].astype(jnp.float32)            # (np, bk)
+    acc_ref[...] += jax.lax.dot_general(
+        z * d[None, :], b, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        sigma = sigma_ref[s]
+        m = m_ref[0].astype(jnp.float32)        # (np,)
+        y = acc_ref[...]
+        y_ref[0] = y.astype(y_ref.dtype)
+        x_ref[0] = (m[None, :] + sigma * y).astype(x_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bl", "bn", "interpret"))
+def cma_gen_sample(m: jnp.ndarray, sigma: jnp.ndarray, B: jnp.ndarray,
+                   D: jnp.ndarray, Z: jnp.ndarray, *, bl: int = 128,
+                   bn: int = 128, interpret: bool = False):
+    """Slot-batched fused sampling.  All inputs carry a leading slot axis:
+    m (S,n), sigma (S,), B (S,n,n), D (S,n), Z (S,lam,n).  Returns
+    (Y, X), each (S, lam, n)."""
+    S, lam, n = Z.shape
+    dt = Z.dtype
+    bl = _round_block(lam, bl)
+    bn = _round_block(n, bn)
+    lp = -(-lam // bl) * bl
+    np_ = -(-n // bn) * bn
+    Zp = jnp.zeros((S, lp, np_), dt).at[:, :lam, :n].set(Z)
+    Bp = jnp.zeros((S, np_, np_), dt).at[:, :n, :n].set(B)
+    Dp = jnp.zeros((S, np_), dt).at[:, :n].set(D)
+    Mp = jnp.zeros((S, np_), dt).at[:, :n].set(m)
+    sig = jnp.asarray(sigma, jnp.float32)
+
+    n_l, n_k = lp // bl, np_ // bn
+    out_spec = pl.BlockSpec((1, bl, np_), lambda s, l, k: (s, l, 0))
+    Y, X = pl.pallas_call(
+        functools.partial(_sample_kernel, n_k=n_k),
+        grid=(S, n_l, n_k),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),                   # sigma (S,)
+            pl.BlockSpec((1, bl, bn), lambda s, l, k: (s, l, k)),    # Z
+            pl.BlockSpec((1, bn), lambda s, l, k: (s, k)),           # D
+            pl.BlockSpec((1, np_, bn), lambda s, l, k: (s, 0, k)),   # B
+            pl.BlockSpec((1, np_), lambda s, l, k: (s, 0)),          # m
+        ],
+        out_specs=(out_spec, out_spec),
+        out_shape=(jax.ShapeDtypeStruct((S, lp, np_), dt),
+                   jax.ShapeDtypeStruct((S, lp, np_), dt)),
+        scratch_shapes=[pltpu.VMEM((bl, np_), jnp.float32)],
+        interpret=interpret,
+    )(sig, Zp, Dp, Bp, Mp)
+    return Y[:, :lam, :n], X[:, :lam, :n]
+
+
+# ---------------------------------------------------------------------------
+# update megakernel
+# ---------------------------------------------------------------------------
+
+def _update_kernel(coef_ref, y_ref, w_ref, c_ref, b_ref, d_ref, psig_ref,
+                   pc_ref, cn_ref, psn_ref, pcn_ref, yw_ref, acc_g, acc_yw,
+                   *, n_k: int, n_true: int):
+    s, k = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_g[...] = jnp.zeros_like(acc_g)
+        acc_yw[...] = jnp.zeros_like(acc_yw)
+
+    y = y_ref[0].astype(jnp.float32)            # (bk, np)
+    wv = w_ref[0].astype(jnp.float32)           # (bk,)
+    ys = jnp.sqrt(wv)[:, None] * y
+    # (np, np) += Y_sᵀ·Y_s — the rank-μ gram chunk on the MXU; the √w
+    # factoring keeps the accumulated gram (and C') symmetric by
+    # construction, so no 0.5·(C + Cᵀ) repair pass exists anywhere
+    acc_g[...] += jax.lax.dot_general(
+        ys, ys, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    acc_yw[...] += jnp.sum(wv[:, None] * y, axis=0, keepdims=True)  # (1, np)
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        c_sig, mu_eff = coef_ref[s, 0], coef_ref[s, 1]
+        c_c, c_1 = coef_ref[s, 2], coef_ref[s, 3]
+        c_mu, chi_n, gen1 = coef_ref[s, 4], coef_ref[s, 5], coef_ref[s, 6]
+
+        b = b_ref[0].astype(jnp.float32)        # (np, np)
+        d = d_ref[0].astype(jnp.float32)        # (np,)
+        psig = psig_ref[0].astype(jnp.float32)  # (np,)
+        pc = pc_ref[0].astype(jnp.float32)      # (np,)
+        yw = acc_yw[...]                        # (1, np)
+
+        # whitened step: (y_wᵀ·B / D) · Bᵀ, padded D rows guarded by the max
+        t = jax.lax.dot_general(yw, b, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        t = t / jnp.maximum(d, 1e-30)[None, :]
+        whiten = jax.lax.dot_general(t, b, (((1,), (1,)), ((), ())),
+                                     preferred_element_type=jnp.float32)
+
+        ps_new = (1.0 - c_sig) * psig[None, :] + jnp.sqrt(
+            c_sig * (2.0 - c_sig) * mu_eff) * whiten
+        ps_norm = jnp.sqrt(jnp.sum(ps_new * ps_new))
+        h_denom = jnp.sqrt(1.0 - (1.0 - c_sig) ** (2.0 * gen1))
+        h_sigma = (ps_norm / h_denom / chi_n
+                   < 1.4 + 2.0 / (n_true + 1.0)).astype(jnp.float32)
+        pc_new = (1.0 - c_c) * pc[None, :] + h_sigma * jnp.sqrt(
+            c_c * (2.0 - c_c) * mu_eff) * yw
+        decay = 1.0 - c_1 - c_mu + (1.0 - h_sigma) * c_1 * c_c * (2.0 - c_c)
+
+        c_old = c_ref[0].astype(jnp.float32)    # (np, np)
+        c_new = decay * c_old + c_mu * acc_g[...] \
+            + c_1 * pc_new[0][:, None] * pc_new[0][None, :]
+
+        cn_ref[0] = c_new.astype(cn_ref.dtype)
+        psn_ref[0] = ps_new[0].astype(psn_ref.dtype)
+        pcn_ref[0] = pc_new[0].astype(pcn_ref.dtype)
+        yw_ref[0] = yw[0].astype(yw_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "bn", "interpret"))
+def cma_gen_update(C: jnp.ndarray, B: jnp.ndarray, D: jnp.ndarray,
+                   p_sigma: jnp.ndarray, p_c: jnp.ndarray, Y: jnp.ndarray,
+                   w: jnp.ndarray, coef: jnp.ndarray, *, bk: int = 128,
+                   bn: int = 128, interpret: bool = False):
+    """Slot-batched fused generation update (oracle: ref.fused_gen_update).
+
+    Shapes (S = slots): C/B (S,n,n); D/p_sigma/p_c (S,n); Y (S,lam,n);
+    w (S,lam); coef (S, len(COEF_FIELDS)) f32 per-slot scalars.  Returns
+    ``(C_new, p_sigma_new, p_c_new, y_w)``.
+    """
+    S, lam, n = Y.shape
+    dt = C.dtype
+    bk = _round_block(lam, bk)
+    bn = _round_block(n, bn)
+    lp = -(-lam // bk) * bk
+    np_ = -(-n // bn) * bn
+    Yp = jnp.zeros((S, lp, np_), dt).at[:, :lam, :n].set(Y)
+    wp = jnp.zeros((S, lp), dt).at[:, :lam].set(w)      # zero weight ⇒ inert
+    Cp = jnp.zeros((S, np_, np_), dt).at[:, :n, :n].set(C)
+    Bp = jnp.zeros((S, np_, np_), dt).at[:, :n, :n].set(B)
+    Dp = jnp.zeros((S, np_), dt).at[:, :n].set(D)
+    psp = jnp.zeros((S, np_), dt).at[:, :n].set(p_sigma)
+    pcp = jnp.zeros((S, np_), dt).at[:, :n].set(p_c)
+    coef = jnp.asarray(coef, jnp.float32)
+
+    n_k = lp // bk
+    mat = pl.BlockSpec((1, np_, np_), lambda s, k: (s, 0, 0))
+    vec = pl.BlockSpec((1, np_), lambda s, k: (s, 0))
+    C_new, ps_new, pc_new, y_w = pl.pallas_call(
+        functools.partial(_update_kernel, n_k=n_k, n_true=n),
+        grid=(S, n_k),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),               # coef (S, 7)
+            pl.BlockSpec((1, bk, np_), lambda s, k: (s, k, 0)),  # Y
+            pl.BlockSpec((1, bk), lambda s, k: (s, k)),          # w
+            mat,                                                 # C
+            mat,                                                 # B
+            vec,                                                 # D
+            vec,                                                 # p_sigma
+            vec,                                                 # p_c
+        ],
+        out_specs=(mat, vec, vec, vec),
+        out_shape=(jax.ShapeDtypeStruct((S, np_, np_), dt),
+                   jax.ShapeDtypeStruct((S, np_), dt),
+                   jax.ShapeDtypeStruct((S, np_), dt),
+                   jax.ShapeDtypeStruct((S, np_), dt)),
+        scratch_shapes=[pltpu.VMEM((np_, np_), jnp.float32),
+                        pltpu.VMEM((1, np_), jnp.float32)],
+        interpret=interpret,
+    )(coef, Yp, wp, Cp, Bp, Dp, psp, pcp)
+    return (C_new[:, :n, :n], ps_new[:, :n], pc_new[:, :n], y_w[:, :n])

@@ -1,37 +1,82 @@
 """Jitted wrappers that route each hot-spot op to its Pallas kernel or jnp ref.
 
 ``impl`` semantics (used across core/ and models/):
-  * ``"xla"``     — pure-jnp reference path (ref.py).  Default on CPU: XLA
-                    already lowers these GEMMs well, and Mosaic kernels cannot
-                    compile for the CPU backend.
-  * ``"pallas"``  — the Pallas kernel, compiled by Mosaic (TPU) or executed in
-                    interpret mode elsewhere (correctness-equivalent, slow).
+  * ``"xla"``     — pure-jnp reference path (ref.py), with the generation
+                    step FUSED (ref.fused_gen_update / ref.gen_sample —
+                    one gram-family dot per generation).  Default on CPU:
+                    XLA already lowers these GEMMs well, and Mosaic kernels
+                    cannot compile for the CPU backend.
+  * ``"xla_unfused"`` — the pre-PR-4 jnp op soup (separate gram / combine /
+                    whiten calls).  Kept as the measured regression baseline
+                    (benchmarks/bench_kernels.py) and for trajectory A/B
+                    tests; at the per-op level it behaves exactly like
+                    ``"xla"``.
+  * ``"pallas"``  — the Pallas kernels, compiled by Mosaic (TPU) or executed
+                    in interpret mode elsewhere (correctness-equivalent,
+                    slow — the interpret path exists for the equivalence
+                    tests, not for production CPU runs).
   * ``"auto"``    — "pallas" on TPU backends, "xla" otherwise.
+
+``REPRO_KERNEL_IMPL`` (env) overrides the caller's choice globally — handy
+for A/B runs of a whole campaign without threading a flag through every
+engine config.  It is consulted at TRACE time, so export it before the
+first engine call of the process; already-compiled programs keep the impl
+they were traced with (tests/conftest.py scrubs it so the suite stays
+hermetic).  Unknown values, from either source, raise immediately.
 """
 from __future__ import annotations
+
+import functools
+import os
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.cma_gen import COEF_FIELDS, cma_gen_sample, cma_gen_update
 from repro.kernels.cma_sample import cma_sample
 from repro.kernels.cma_update import cma_rank_mu_update
 
+IMPL_CHOICES = ("auto", "xla", "xla_unfused", "pallas")
 
+
+@functools.lru_cache(maxsize=1)
 def _on_tpu() -> bool:
+    # cached: jax.default_backend() initializes the backend and takes a
+    # platform lock — re-querying it inside every traced op call added
+    # measurable per-trace overhead.  The backend cannot change after the
+    # first jax computation in a process, so one probe is authoritative.
     return jax.default_backend() == "tpu"
 
 
+def validate_impl(impl: str) -> str:
+    """Membership check without resolution — for config/entry validation."""
+    if impl not in IMPL_CHOICES:
+        raise ValueError(
+            f"unknown impl {impl!r}; expected one of {IMPL_CHOICES}")
+    return impl
+
+
 def resolve_impl(impl: str) -> str:
+    validate_impl(impl)             # caller typos raise even under override
+    env = os.environ.get("REPRO_KERNEL_IMPL", "").strip()
+    if env:
+        impl = validate_impl(env)
     if impl == "auto":
         return "pallas" if _on_tpu() else "xla"
     return impl
 
 
+def use_fused(impl: str) -> bool:
+    """Static dispatch for the generation step: fused path unless the caller
+    explicitly pinned the pre-PR-4 op soup."""
+    return resolve_impl(impl) != "xla_unfused"
+
+
 def sample_transform(B, D, Z, impl: str = "auto"):
     """Y = Z·diag(D)·Bᵀ (lam, n)."""
     impl = resolve_impl(impl)
-    if impl == "xla":
+    if impl != "pallas":
         return ref.sample_transform(B, D, Z)
     zero = jnp.zeros((B.shape[0],), Z.dtype)
     one = jnp.ones((), Z.dtype)
@@ -41,7 +86,7 @@ def sample_transform(B, D, Z, impl: str = "auto"):
 def sample_points(m, sigma, B, D, Z, impl: str = "auto"):
     """X = M + σ·B·diag(D)·Z (lam, n) — fused kernel when impl=pallas."""
     impl = resolve_impl(impl)
-    if impl == "xla":
+    if impl != "pallas":
         return ref.sample_points(m, sigma, B, D, Z)
     return cma_sample(m, sigma, B, D, Z, interpret=not _on_tpu())
 
@@ -49,13 +94,107 @@ def sample_points(m, sigma, B, D, Z, impl: str = "auto"):
 def rank_mu_gram(Y, w, impl: str = "auto"):
     """Σ wᵢ yᵢyᵢᵀ — the paper's rank-λ GEMM (eq. 3)."""
     impl = resolve_impl(impl)
-    if impl == "xla":
+    if impl != "pallas":
         return ref.rank_mu_gram(Y, w)
     n = Y.shape[1]
     zeros = jnp.zeros((n, n), Y.dtype)
     zvec = jnp.zeros((n,), Y.dtype)
     return cma_rank_mu_update(zeros, Y, w, zvec, 0.0, 1.0, 0.0,
                               interpret=not _on_tpu())
+
+
+# ---------------------------------------------------------------------------
+# fused generation step (kernels/cma_gen.py ↔ ref.gen_sample/fused_gen_update)
+# ---------------------------------------------------------------------------
+
+def _stacked(*arrays):
+    """Add a singleton slot axis to per-slot arrays (kernels are slot-batched)."""
+    return tuple(a[None] for a in arrays)
+
+
+def _megakernel_fits(n: int, dtype) -> bool:
+    """VMEM-fit check for the whole-(n,n)-tile update megakernel: ~4 f32
+    n² tiles (C, B, gram accumulator, C') plus the dtype-width C/B input
+    tiles must fit a 16 MB core."""
+    itemsize = jnp.dtype(dtype).itemsize
+    tile_bytes = n * n * (4 * 4 + 2 * itemsize)
+    return tile_bytes <= 12 * 1024 * 1024
+
+
+def _sample_fits(n: int, dtype) -> bool:
+    """The fused sample kernel only holds chunked tiles — a (np, bn) B
+    slab plus three (bl, np) row blocks — so its bound is far looser than
+    the update megakernel's whole-matrix one."""
+    itemsize = jnp.dtype(dtype).itemsize
+    bn = bl = 128
+    tile_bytes = n * bn * (4 + itemsize) + 3 * bl * n * (4 + itemsize)
+    return tile_bytes <= 12 * 1024 * 1024
+
+
+def _gen_impl(impl: str, n: int, dtype, fits=_megakernel_fits) -> str:
+    """Dispatch for the fused generation ops.  ``"auto"`` silently falls
+    back to the fused XLA ref when the kernel's tiles cannot fit VMEM
+    instead of failing in Mosaic; an EXPLICIT pallas request — from the
+    caller or from the ``REPRO_KERNEL_IMPL`` override — is honored (and
+    fails loudly) so kernel work at larger n stays drivable."""
+    resolved = resolve_impl(impl)
+    env = os.environ.get("REPRO_KERNEL_IMPL", "").strip()
+    requested = env if env else impl
+    if resolved == "pallas" and requested == "auto" and not fits(n, dtype):
+        return "xla"
+    return resolved
+
+
+def gen_sample(m, sigma, B, D, Z, impl: str = "auto"):
+    """Fused sampling: (Y, X) in one pass.
+
+    Slot-batched when ``Z`` carries a leading slot axis (ndim == 3) — the
+    stacked-slot ladder programs call this ONCE for all slots; per-slot
+    arrays are accepted too (a singleton slot axis is added for the kernel).
+    """
+    impl = _gen_impl(impl, Z.shape[-1], Z.dtype, fits=_sample_fits)
+    if impl != "pallas":
+        return ref.gen_sample(m, sigma, B, D, Z)
+    if Z.ndim == 3:
+        return cma_gen_sample(m, sigma, B, D, Z, interpret=not _on_tpu())
+    m1, B1, D1, Z1 = _stacked(m, B, D, Z)
+    Y, X = cma_gen_sample(m1, jnp.asarray(sigma)[None], B1, D1, Z1,
+                          interpret=not _on_tpu())
+    return Y[0], X[0]
+
+
+def gen_update(C, B, D, p_sigma, p_c, Y, w, coef, impl: str = "auto"):
+    """Fused O(n²) generation update — C/B/D read from HBM once.
+
+    ``coef`` is a dict-like of per-slot scalars with the fields named in
+    ``cma_gen.COEF_FIELDS`` (``gen1`` = 1-based generation counter as a
+    float).  Slot-batched when ``C`` carries a leading slot axis; returns
+    ``(C_new, p_sigma_new, p_c_new, y_w)`` with matching batching.
+
+    The megakernel computes in f32 regardless of the state dtype (the MXU
+    has no f64 path); f64 campaigns that need strict double-precision
+    trajectories should pin ``impl="xla"``.  Under ``impl="auto"``,
+    problems whose whole-matrix tiles exceed VMEM fall back to the fused
+    XLA ref (``_megakernel_fits``).
+    """
+    impl = _gen_impl(impl, C.shape[-1], C.dtype)
+    if impl != "pallas":
+        fn = ref.fused_gen_update
+        args = (coef["c_sigma"], coef["mu_eff"], coef["c_c"], coef["c_1"],
+                coef["c_mu"], coef["chi_n"], coef["gen1"])
+        if C.ndim == 3:
+            return jax.vmap(fn)(C, B, D, p_sigma, p_c, Y, w, *args)
+        return fn(C, B, D, p_sigma, p_c, Y, w, *args)
+    batched = C.ndim == 3
+    if not batched:
+        C, B, Y = (a[None] for a in (C, B, Y))
+        D, p_sigma, p_c, w = (a[None] for a in (D, p_sigma, p_c, w))
+    cs = jnp.stack([jnp.broadcast_to(
+        jnp.asarray(coef[f], jnp.float32), C.shape[:1])
+        for f in COEF_FIELDS], axis=1)
+    out = cma_gen_update(C, B, D, p_sigma, p_c, Y, w, cs,
+                         interpret=not _on_tpu())
+    return out if batched else tuple(o[0] for o in out)
 
 
 def covariance_combine(C, gram, p_c, decay, c_mu, c_1, impl: str = "auto"):

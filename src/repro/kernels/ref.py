@@ -46,6 +46,80 @@ def rank_mu_update(C: jnp.ndarray, Y: jnp.ndarray, w: jnp.ndarray,
 
 
 # ---------------------------------------------------------------------------
+# fused generation step (oracles for kernels/cma_gen.py)
+# ---------------------------------------------------------------------------
+
+def gen_sample(m: jnp.ndarray, sigma: jnp.ndarray, B: jnp.ndarray,
+               D: jnp.ndarray, Z: jnp.ndarray):
+    """Fused sampling: (Y, X) = (Z·diag(D)·Bᵀ, m + σ·Y) in one pass.
+
+    Accepts either per-slot arrays (m (n,), sigma (), B (n,n), Z (lam,n))
+    or slot-stacked arrays with one leading axis (m (S,n), sigma (S,), ...);
+    the Pallas form (kernels/cma_gen.py) maps that slot axis onto its
+    leading grid dimension.
+    """
+    sigma = jnp.asarray(sigma)
+    Y = (Z * D[..., None, :]) @ jnp.swapaxes(B, -1, -2)
+    X = m[..., None, :] + sigma[..., None, None] * Y
+    return Y, X
+
+
+def fused_gen_update(C: jnp.ndarray, B: jnp.ndarray, D: jnp.ndarray,
+                     p_sigma: jnp.ndarray, p_c: jnp.ndarray, Y: jnp.ndarray,
+                     w: jnp.ndarray, c_sigma, mu_eff, c_c, c_1, c_mu, chi_n,
+                     gen1):
+    """One CMA-ES generation's O(n²) state update, fused (paper §3.1 taken
+    end-to-end).  Per-slot oracle of the Pallas megakernel.
+
+    Collapses the former op soup — rank-μ gram, weighted-mean GEMV,
+    covariance combine, p_c outer product, and the whitened-step GEMV
+    ``C^{-1/2}·y_w = B·diag(1/D)·Bᵀ·y_w`` — into ONE gram-family
+    dot-general plus two B GEMVs:
+
+        [gram | y_w] = Y_sᵀ · [Y_s | √w],    Y_s = √w ⊙ Y         (n, n+1)
+
+    so the λ-contraction runs once (HLO-pinned in tests/test_fused_gen.py)
+    and C/B/D are each read once.  The √w factoring is the key perf move:
+    every product feeding cell (i, j) equals the product feeding (j, i)
+    (multiplication commutes), so the gram — and hence C' — is symmetric BY
+    CONSTRUCTION and the unfused path's ``0.5·(C + Cᵀ)`` repair pass is
+    dropped.  That transpose-add is memory-bound and dominated the whole
+    per-generation update at large n (~85% of wall time at n = 1024 on
+    CPU); the residual asymmetry here is ≤ machine-eps per generation at
+    ragged shapes (edge-block reduction order), shrinks under ``decay < 1``
+    instead of accumulating, and ``eigh`` reads a single triangle anyway.
+    Inactive padded population rows carry zero weight and contribute
+    nothing (the repo-wide masking convention; weights are non-negative by
+    construction, so the √ is total).
+
+    Returns ``(C_new, p_sigma_new, p_c_new, y_w)``; the caller finishes the
+    O(n) scalar updates (mean, σ, bookkeeping — cmaes._finish_update).
+    """
+    n = C.shape[-1]
+    dt = C.dtype
+    # -- the one gram-family dot: rank-μ gram AND y_w ---------------------
+    rw = jnp.sqrt(w)
+    Ys = rw[:, None] * Y
+    G = Ys.T @ jnp.concatenate([Ys, rw[:, None]], axis=1)  # (n, n+1)
+    gram, y_w = G[:, :n], G[:, n]
+    # -- whitened step (old factorization, as in update_from_moments) -----
+    whiten = B @ ((B.T @ y_w) / jnp.maximum(D, 1e-300))
+    p_sigma_new = (1.0 - c_sigma) * p_sigma + jnp.sqrt(
+        c_sigma * (2.0 - c_sigma) * mu_eff) * whiten
+    ps_norm = jnp.linalg.norm(p_sigma_new)
+    gen1 = jnp.asarray(gen1, dt)       # 1-based generation counter, as float
+    h_sig_denom = jnp.sqrt(1.0 - (1.0 - c_sigma) ** (2.0 * gen1))
+    h_sigma = (ps_norm / h_sig_denom / chi_n
+               < 1.4 + 2.0 / (n + 1.0)).astype(dt)
+    p_c_new = (1.0 - c_c) * p_c + h_sigma * jnp.sqrt(
+        c_c * (2.0 - c_c) * mu_eff) * y_w
+    decay = 1.0 - c_1 - c_mu + (1.0 - h_sigma) * c_1 * c_c * (2.0 - c_c)
+    # gram and outer are symmetric by construction — no 0.5·(C + Cᵀ) pass
+    C_new = decay * C + c_mu * gram + c_1 * p_c_new[:, None] * p_c_new[None, :]
+    return C_new, p_sigma_new, p_c_new, y_w
+
+
+# ---------------------------------------------------------------------------
 # LM kernels
 # ---------------------------------------------------------------------------
 

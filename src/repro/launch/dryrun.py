@@ -194,6 +194,52 @@ def run_cma_dryrun(mesh, multi_pod: bool):
     }
 
 
+def run_gen_kernel_dryrun(mesh, multi_pod: bool):
+    """Lower the slot-batched fused generation megakernels
+    (kernels/cma_gen.py — sample + update, one slot per ladder rung) at the
+    paper's n = 40 geometry as a first-class dry-run cell.  On TPU
+    toolchains this exercises the Mosaic lowering; elsewhere the interpret
+    lowering still yields the roofline flops/bytes of the fused path."""
+    import jax.numpy as jnp
+
+    from repro.core import cmaes, ladder
+
+    eng = ladder.LadderEngine(n=40, lam_start=12, kmax_exp=4,
+                              schedule="concurrent", impl="pallas",
+                              dtype="float64")
+    carry = eng.init_carry(jax.random.PRNGKey(0))
+    S, lam_max, n = eng.n_slots, eng.lam_max, eng.n
+    Z_abs = jax.ShapeDtypeStruct((S, lam_max, n), eng.cfg.jdtype)
+
+    def mega(states, Z):
+        Y, X = cmaes.kops.gen_sample(states.m, states.sigma, states.B,
+                                     states.D, Z, impl="pallas")
+        W = jnp.ones((S, lam_max), eng.cfg.jdtype) / lam_max
+        from repro.core.params import select_params
+        params_k = select_params(eng.sparams, jnp.arange(S))
+        coef = cmaes.gen_coef(params_k, states)
+        return cmaes.kops.gen_update(states.C, states.B, states.D,
+                                     states.p_sigma, states.p_c, Y, W, coef,
+                                     impl="pallas")
+
+    lowered = jax.jit(mega).lower(
+        jax.eval_shape(lambda c: c.states, carry), Z_abs)
+    t0 = time.time()
+    compiled = lowered.compile()
+    stats = analyze(compiled.as_text())
+    return {
+        "arch": "cma-genmegakernel-d40", "shape": "slots_gen_step",
+        "mesh": "1", "n_devices": 1, "kind": "cma",
+        "compile_seconds": round(time.time() - t0, 1),
+        "flops": stats["flops"],
+        "bytes_accessed": stats["bytes"],
+        "collective_bytes": stats["collective_bytes"],
+        "memory": {}, "model": {},
+        "engine": {"slots": S, "lam_max": lam_max, "n": n,
+                   "impl": "pallas"},
+    }
+
+
 def run_mesh_engine_dryrun(mesh, multi_pod: bool):
     """Lower one shard_map segment of the mesh campaign engine (S1 ordered,
     widest rung bucket, one member per device) with the production mesh's
@@ -289,7 +335,9 @@ def main(argv=None):
     if args.cma:
         for name, runner in ((f"cma__kdist__{tag}", run_cma_dryrun),
                              (f"cma__meshcampaign__{tag}",
-                              run_mesh_engine_dryrun)):
+                              run_mesh_engine_dryrun),
+                             (f"cma__genkernel__{tag}",
+                              run_gen_kernel_dryrun)):
             n_extra += 1
             try:
                 meta = runner(mesh, args.multi_pod)

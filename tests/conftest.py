@@ -15,6 +15,11 @@ import jax
 
 jax.config.update("jax_enable_x64", True)
 
+# a leaked global kernel-dispatch override would silently re-route every
+# impl= A/B test (e.g. the fused-vs-unfused HLO pins) to one path; the
+# suite must see the caller's impl verbatim
+os.environ.pop("REPRO_KERNEL_IMPL", None)
+
 
 def hermetic_subproc_env() -> dict:
     """Minimal env for multi-device subprocess tests — but keep the platform

@@ -1,0 +1,184 @@
+"""Fused generation path: HLO pins + engine-level equivalence (PR 4).
+
+The fused update (ref.fused_gen_update / kernels/cma_gen.py) must lower to
+exactly ONE gram-family dot-general per generation — the (n, n+1)-shaped
+``[gram | y_w] = Y_sᵀ·[Y_s | √w]`` contraction — with the pre-PR-4 op soup
+(separate (n, n) gram dot + y_w GEMV) gone.  Pinned at the HLO level with
+the same trip-count-aware accounting the eigen-amortization tests use
+(``hlo_analyzer.count_instrs``, the shape-aware sibling of ``count_ops``).
+
+Engine level: ``backend="bucketed"`` under the fused ``impl="xla"`` must be
+trajectory-equivalent to the PR-3 unfused path (``impl="xla_unfused"``) —
+identical generation structure, tolerance-bounded best-f — and the
+``compiles ≤ #buckets`` invariant must survive the new dispatch.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bucketed, cmaes, ladder
+from repro.core.ipop import run_ipop
+from repro.core.params import CMAConfig, make_params
+from repro.distributed import hlo_analyzer
+
+N, LAM, T = 6, 8, 40
+
+# vmap inserts unit batch dims in campaign programs — allow leading 1s
+DOT_N_NP1 = r"f64\[(?:1,)*6,7\]\S* dot\b"      # the fused gram-family dot
+DOT_N_N = r"f64\[(?:1,)*6,6\]\S* dot\b"        # the unfused separate gram
+
+
+def _scan_hlo(impl: str, T: int = T) -> str:
+    cfg = CMAConfig(n=N, lam=LAM, eigen_interval=1)
+    p = make_params(cfg)
+    sphere = lambda X: jnp.sum(X ** 2, axis=-1)
+
+    def body(st, k):
+        st = ladder.padded_gen_step(cfg, p, st, k, sphere, impl=impl)
+        return st, st.best_f
+
+    st = cmaes.init_state(cfg, jax.random.PRNGKey(0), jnp.zeros(N), 1.0)
+    ks = jax.random.split(jax.random.PRNGKey(1), T)
+    fn = jax.jit(lambda s, k: jax.lax.scan(body, s, k))
+    return fn.lower(st, ks).compile().as_text()
+
+
+def test_fused_path_one_gram_family_dot_per_generation():
+    txt = _scan_hlo("xla")
+    assert hlo_analyzer.count_instrs(txt, DOT_N_NP1) == T
+    # the separate (n, n) gram dot of the unfused soup must be GONE
+    assert hlo_analyzer.count_instrs(txt, DOT_N_N) == 0
+
+
+def test_unfused_path_keeps_separate_gram_dot():
+    """Regression pin of the baseline shape: the PR-3 op soup lowers the
+    gram as its own (n, n) dot and has no (n, n+1) fused dot."""
+    txt = _scan_hlo("xla_unfused")
+    assert hlo_analyzer.count_instrs(txt, DOT_N_N) == T
+    assert hlo_analyzer.count_instrs(txt, DOT_N_NP1) == 0
+
+
+def test_fused_path_drops_one_population_dot_per_generation():
+    """The y_w GEMV rides the fused dot: one fewer dot per generation."""
+    fused = hlo_analyzer.count_instrs(_scan_hlo("xla"), r" dot\b")
+    unfused = hlo_analyzer.count_instrs(_scan_hlo("xla_unfused"), r" dot\b")
+    assert unfused - fused == T
+
+
+def test_bucketed_campaign_hlo_pins_fused_dot():
+    """The pin holds inside the real (jit+vmap) bucketed segment programs,
+    not just a hand-rolled scan."""
+    from repro.fitness import bbob
+    eng = bucketed.BucketedLadderEngine(n=N, lam_start=8, kmax_exp=1,
+                                        max_evals=10_000, impl="xla")
+    seg_gens = eng.bucket_seg_gens(0, need_gens=30)
+    runner = eng.segment_runner(0, (1,), seg_gens)
+    insts = bbob.stack_instances([bbob.make_instance(1, N, 1)])
+    keys = jnp.stack([jax.random.PRNGKey(0)])
+    carry = eng._init_runner(keys)
+    txt = runner.lower(keys, insts, carry).compile().as_text()
+    assert hlo_analyzer.count_instrs(txt, DOT_N_NP1) == seg_gens
+    assert hlo_analyzer.count_instrs(txt, DOT_N_N) == 0
+
+
+# ---------------------------------------------------------------------------
+# engine-level equivalence: fused vs the PR-3 unfused path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fid", [1, 8])
+def test_bucketed_fused_matches_unfused_trajectory(fid):
+    """backend="bucketed" under impl="xla" (fused) vs impl="xla_unfused"
+    (PR-3): the fused path regroups identical arithmetic, so the two differ
+    by rounding only.  On the sphere that leaves the whole generation
+    structure intact; on Rosenbrock the eps-level seed noise is chaotically
+    amplified over hundreds of generations, so a data-dependent stopping
+    criterion may fire a couple of generations apart — the structure must
+    still match rung-for-rung with near-identical descent lengths, and the
+    early trajectory (before chaos decorrelates) must agree tightly."""
+    from repro.fitness import bbob
+    inst = bbob.make_instance(fid, 4, 1)
+    fit = lambda X: bbob.evaluate(fid, inst, X)
+    kw = dict(lam_start=8, kmax_exp=2, max_evals=4000, backend="bucketed")
+    r_f = run_ipop(fit, 4, jax.random.PRNGKey(3), impl="xla", **kw)
+    r_u = run_ipop(fit, 4, jax.random.PRNGKey(3), impl="xla_unfused", **kw)
+    assert len(r_f.descents) == len(r_u.descents)
+    assert abs(r_f.total_fevals - r_u.total_fevals) \
+        <= 0.02 * r_u.total_fevals + 2 * 32
+    for df, du in zip(r_f.descents, r_u.descents):
+        assert df.k_exp == du.k_exp and df.lam == du.lam
+        assert abs(len(df.fevals) - len(du.fevals)) \
+            <= max(3, 0.02 * len(du.fevals))
+        common = min(len(df.fevals), len(du.fevals))
+        np.testing.assert_array_equal(df.fevals[:common], du.fevals[:common])
+        # pre-chaos prefix: tight; the eps seed needs ~dozens of gens to grow
+        head = min(common, 30)
+        np.testing.assert_allclose(df.best_f[:head], du.best_f[:head],
+                                   rtol=1e-6, atol=1e-9)
+    if fid == 1:   # sphere: no chaotic amplification — full strictness
+        assert r_f.total_fevals == r_u.total_fevals
+        for df, du in zip(r_f.descents, r_u.descents):
+            np.testing.assert_array_equal(df.fevals, du.fevals)
+        np.testing.assert_allclose(r_f.best_f, r_u.best_f,
+                                   rtol=1e-5, atol=1e-7)
+
+
+def test_compiles_le_buckets_under_fused_dispatch():
+    """The new dispatch must not leak extra compilations: one program per
+    bucket, reused across campaigns, exactly as PR 2/3 pinned."""
+    eng = bucketed.BucketedLadderEngine(n=4, lam_start=8, kmax_exp=2,
+                                        max_evals=5000, impl="xla")
+    res = bucketed.run_campaign_bucketed(eng, fids=(1, 8), instances=(1,),
+                                         runs=2, seed=0)
+    assert 1 <= res.compiles <= 3
+    res2 = bucketed.run_campaign_bucketed(eng, fids=(1, 8), instances=(1,),
+                                          runs=2, seed=5)
+    assert res2.compiles <= 3
+
+
+def test_run_ipop_validates_impl_at_entry():
+    sphere = lambda X: jnp.sum(X ** 2, axis=-1)
+    for backend in ("ladder", "bucketed", "mesh", "hostloop"):
+        with pytest.raises(ValueError, match="unknown impl"):
+            run_ipop(sphere, 3, jax.random.PRNGKey(0), lam_start=4,
+                     kmax_exp=1, max_evals=100, backend=backend,
+                     impl="not-an-impl")
+
+
+def test_engine_configs_validate_impl():
+    with pytest.raises(ValueError, match="unknown impl"):
+        ladder.LadderEngine(n=3, lam_start=4, kmax_exp=1, impl="mosaic")
+    with pytest.raises(ValueError, match="unknown impl"):
+        bucketed.BucketedLadderEngine(n=3, lam_start=4, kmax_exp=1,
+                                      impl="mosaic")
+
+
+def test_ladder_campaign_runs_on_pallas_interpret():
+    """The slot-batched megakernels must survive the real engine context —
+    jit + campaign vmap on top of the slot grid axis (interpret mode off
+    TPU).  f32 in-kernel accumulation leaves ~1e-13 residual on the
+    sphere where the f64 ref reaches exact zero."""
+    eng = ladder.LadderEngine(n=4, lam_start=8, kmax_exp=1, max_evals=1200,
+                              schedule="sequential", impl="pallas")
+    res = ladder.run_campaign(eng, fids=(1,), instances=(1,), runs=2,
+                              seed=0)
+    assert (np.asarray(res.best_f) - np.asarray(res.f_opt) < 1e-8).all()
+    assert (np.asarray(res.total_fevals) <= 1200).all()
+
+
+def test_ladder_engine_fused_unfused_ecdf_equivalent():
+    """Whole-ladder sanity at the padded engine level: fused and unfused
+    campaigns hit the same targets on the sphere within one member."""
+    kw = dict(n=4, lam_start=8, kmax_exp=1, max_evals=3000,
+              schedule="sequential")
+    res_f = ladder.run_campaign(ladder.LadderEngine(impl="xla", **kw),
+                                fids=(1,), instances=(1,), runs=2, seed=0)
+    res_u = ladder.run_campaign(
+        ladder.LadderEngine(impl="xla_unfused", **kw),
+        fids=(1,), instances=(1,), runs=2, seed=0)
+    np.testing.assert_array_equal(res_f.total_fevals, res_u.total_fevals)
+    targets = np.array([1e2, 1e-1, 1e-6])
+    hits_f = np.isfinite(res_f.hit_evals(targets)).mean(axis=0)
+    hits_u = np.isfinite(res_u.hit_evals(targets)).mean(axis=0)
+    assert np.all(np.abs(hits_f - hits_u) <= 0.5 + 1e-9)
+    assert (res_f.best_f < 1e-8).all() and (res_u.best_f < 1e-8).all()

@@ -4,7 +4,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import ref
+from repro.kernels import ops, ref
+from repro.kernels.cma_gen import cma_gen_sample
 from repro.kernels.cma_sample import cma_sample
 from repro.kernels.cma_update import cma_rank_mu_update
 
@@ -84,3 +85,193 @@ def test_block_shape_sweep():
                                  bi=bi, bj=bj, bk=bk, interpret=True)
         np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                    rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# slot-batched fused generation kernels (kernels/cma_gen.py)
+# ---------------------------------------------------------------------------
+
+# (S, lam, n) — non-block-multiple on purpose: odd n, λ < 8, prime-ish dims
+GEN_SHAPES = [(1, 8, 4), (3, 12, 10), (2, 6, 7), (2, 24, 40), (1, 4, 13),
+              (2, 9, 130)]
+
+
+def _gen_inputs(S, lam, n, dtype, seed=0):
+    k = jax.random.split(jax.random.PRNGKey(seed), 9)
+    m = _rand(k[0], (S, n), dtype)
+    sigma = jnp.abs(_rand(k[1], (S,), dtype)) + 0.2
+    B = _rand(k[2], (S, n, n), dtype)
+    D = jnp.abs(_rand(k[3], (S, n), dtype)) + 0.1
+    Z = _rand(k[4], (S, lam, n), dtype)
+    C = _rand(k[5], (S, n, n), dtype)
+    C = C @ jnp.swapaxes(C, -1, -2) / n + jnp.eye(n, dtype=dtype)
+    p_sigma = _rand(k[6], (S, n), dtype)
+    p_c = _rand(k[7], (S, n), dtype)
+    w = jnp.abs(_rand(k[8], (S, lam), dtype))
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    coef = {"c_sigma": jnp.full((S,), 0.3, dtype),
+            "mu_eff": jnp.full((S,), 3.2, dtype),
+            "c_c": jnp.full((S,), 0.2, dtype),
+            "c_1": jnp.full((S,), 0.02, dtype),
+            "c_mu": jnp.full((S,), 0.08, dtype),
+            "chi_n": jnp.full((S,), float(np.sqrt(n)), dtype),
+            "gen1": jnp.full((S,), 5.0, dtype)}
+    return m, sigma, B, D, Z, C, p_sigma, p_c, w, coef
+
+
+@pytest.mark.parametrize("S,lam,n", GEN_SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_gen_sample_matches_ref(S, lam, n, dtype):
+    m, sigma, B, D, Z, *_ = _gen_inputs(S, lam, n, dtype)
+    Yk, Xk = cma_gen_sample(m, sigma, B, D, Z, interpret=True)
+    Yr, Xr = ref.gen_sample(m, sigma, B, D, Z)
+    tol = 1e-4 if n >= 100 else 1e-5       # kernel accumulates in f32
+    np.testing.assert_allclose(np.asarray(Yk), np.asarray(Yr),
+                               rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(Xk), np.asarray(Xr),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("S,lam,n", GEN_SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_gen_update_matches_ref(S, lam, n, dtype):
+    _, _, B, D, _, C, p_sigma, p_c, w, coef = _gen_inputs(S, lam, n, dtype)
+    Y = _rand(jax.random.PRNGKey(7), (S, lam, n), dtype)
+    got = ops.gen_update(C, B, D, p_sigma, p_c, Y, w, coef, impl="pallas")
+    want = ops.gen_update(C, B, D, p_sigma, p_c, Y, w, coef, impl="xla")
+    tol = 2e-4 if n >= 100 else 5e-5
+    for name, a, b in zip(("C", "p_sigma", "p_c", "y_w"), got, want):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=tol, atol=tol, err_msg=name)
+
+
+def test_gen_update_masked_inactive_slot():
+    """A fully inactive slot (all-zero weights — parked/stopped in the
+    ladder) must ride through the slot-batched kernel without contaminating
+    live slots, and its own gram/y_w/path pulls must be zero."""
+    S, lam, n = 3, 12, 10
+    _, _, B, D, _, C, p_sigma, p_c, w, coef = _gen_inputs(S, lam, n,
+                                                          jnp.float64)
+    w = w.at[1].set(0.0)                       # slot 1 fully masked
+    got = ops.gen_update(C, B, D, p_sigma, p_c,
+                         _rand(jax.random.PRNGKey(3), (S, lam, n),
+                               jnp.float64),
+                         w, coef, impl="pallas")
+    want = ops.gen_update(C, B, D, p_sigma, p_c,
+                          _rand(jax.random.PRNGKey(3), (S, lam, n),
+                                jnp.float64),
+                          w, coef, impl="xla")
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=5e-5, atol=5e-5)
+    # masked slot: y_w exactly zero, p_c shrinks by exactly (1 - c_c)
+    np.testing.assert_array_equal(np.asarray(got[3][1]), np.zeros(n))
+    np.testing.assert_allclose(np.asarray(got[2][1]),
+                               0.8 * np.asarray(p_c[1]), rtol=1e-6)
+
+
+def test_gen_update_zero_weight_rows_inert():
+    """Garbage Y rows with zero weight (λ < λ_pad padding) cannot change any
+    output — the in-kernel form of the repo-wide masking convention."""
+    S, lam, pad, n = 2, 8, 7, 12
+    _, _, B, D, _, C, p_sigma, p_c, w, coef = _gen_inputs(S, lam, n,
+                                                          jnp.float64)
+    Y = _rand(jax.random.PRNGKey(11), (S, lam, n), jnp.float64)
+    Ypad = jnp.concatenate([Y, 1e6 * jnp.ones((S, pad, n))], axis=1)
+    wpad = jnp.concatenate([w, jnp.zeros((S, pad))], axis=1)
+    a = ops.gen_update(C, B, D, p_sigma, p_c, Y, w, coef, impl="pallas")
+    b = ops.gen_update(C, B, D, p_sigma, p_c, Ypad, wpad, coef,
+                       impl="pallas")
+    for x, y in zip(a, b):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=1e-6,
+                                   atol=1e-6)
+
+
+def test_gen_kernels_slot_batch_consistent():
+    """Slot-batched invocation ≡ per-slot invocations (the leading grid
+    axis must not couple slots)."""
+    S, lam, n = 3, 10, 9
+    m, sigma, B, D, Z, C, p_sigma, p_c, w, coef = _gen_inputs(S, lam, n,
+                                                              jnp.float64)
+    Yb, Xb = cma_gen_sample(m, sigma, B, D, Z, interpret=True)
+    got = ops.gen_update(C, B, D, p_sigma, p_c, Yb, w, coef, impl="pallas")
+    for s in range(S):
+        Ys, Xs = cma_gen_sample(m[s:s + 1], sigma[s:s + 1], B[s:s + 1],
+                                D[s:s + 1], Z[s:s + 1], interpret=True)
+        np.testing.assert_allclose(np.asarray(Yb[s]), np.asarray(Ys[0]),
+                                   rtol=1e-6)
+        one = ops.gen_update(C[s], B[s], D[s], p_sigma[s], p_c[s], Yb[s],
+                             w[s], {k: v[s] for k, v in coef.items()},
+                             impl="pallas")
+        for a, b in zip(got, one):
+            np.testing.assert_allclose(np.asarray(a[s]), np.asarray(b),
+                                       rtol=1e-5, atol=1e-5)
+
+
+def test_fused_ref_C_symmetric_by_construction():
+    """The √w gram factoring must keep C' symmetric without a repair pass —
+    the fused path's core perf claim (no 0.5·(C + Cᵀ) transpose-add)."""
+    S, lam, n = 1, 16, 33
+    _, _, B, D, _, C, p_sigma, p_c, w, coef = _gen_inputs(S, lam, n,
+                                                          jnp.float64)
+    Y = _rand(jax.random.PRNGKey(5), (S, lam, n), jnp.float64)
+    C_new, *_ = ops.gen_update(C, B, D, p_sigma, p_c, Y, w, coef, impl="xla")
+    C_new = np.asarray(C_new[0])
+    assert np.abs(C_new - C_new.T).max() < 1e-15 * np.abs(C_new).max()
+
+
+# ---------------------------------------------------------------------------
+# dispatch satellites (ops.resolve_impl)
+# ---------------------------------------------------------------------------
+
+def test_resolve_impl_unknown_raises():
+    with pytest.raises(ValueError, match="unknown impl"):
+        ops.resolve_impl("cuda")
+    with pytest.raises(ValueError, match="unknown impl"):
+        ops.validate_impl("")
+
+
+def test_resolve_impl_env_override(monkeypatch):
+    monkeypatch.setenv("REPRO_KERNEL_IMPL", "xla_unfused")
+    assert ops.resolve_impl("auto") == "xla_unfused"
+    assert ops.resolve_impl("pallas") == "xla_unfused"
+    assert not ops.use_fused("xla")
+    monkeypatch.setenv("REPRO_KERNEL_IMPL", "bogus")
+    with pytest.raises(ValueError, match="unknown impl"):
+        ops.resolve_impl("xla")
+    monkeypatch.delenv("REPRO_KERNEL_IMPL")
+    assert ops.resolve_impl("auto") in ("xla", "pallas")
+    assert ops.use_fused("auto") and not ops.use_fused("xla_unfused")
+
+
+def test_auto_falls_back_when_megakernel_exceeds_vmem(monkeypatch):
+    """impl="auto" must not route onto whole-(n,n)-tile Pallas programs
+    that cannot fit a 16 MB-VMEM core; an explicit "pallas" — caller arg
+    or env override — is honored."""
+    assert ops._megakernel_fits(256, jnp.float64)
+    assert not ops._megakernel_fits(1024, jnp.float64)
+    assert ops._megakernel_fits(700, jnp.float32)
+    assert not ops._megakernel_fits(900, jnp.float32)
+    assert ops._gen_impl("auto", 2048, jnp.float64) == "xla"
+    assert ops._gen_impl("pallas", 2048, jnp.float64) == "pallas"
+    small = ops._gen_impl("auto", 16, jnp.float64)
+    assert small == ("pallas" if jax.default_backend() == "tpu" else "xla")
+    # the sample kernel's chunked tiles admit much larger n than the
+    # whole-matrix megakernel
+    assert ops._sample_fits(1024, jnp.float64)
+    assert ops._sample_fits(2048, jnp.float32)
+    # env-forced pallas counts as explicit: no silent downgrade
+    monkeypatch.setenv("REPRO_KERNEL_IMPL", "pallas")
+    assert ops._gen_impl("auto", 2048, jnp.float64) == "pallas"
+    # caller typos still raise even while the override is set
+    with pytest.raises(ValueError, match="unknown impl"):
+        ops.resolve_impl("pallsa")
+
+
+def test_backend_probe_cached():
+    """The TPU probe must be cached, not re-queried at every traced op."""
+    assert ops._on_tpu() == (jax.default_backend() == "tpu")
+    assert ops._on_tpu.cache_info().currsize == 1
+    before = ops._on_tpu.cache_info().hits
+    ops.resolve_impl("auto")
+    assert ops._on_tpu.cache_info().hits > before
