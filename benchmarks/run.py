@@ -5,8 +5,8 @@
 Default sizes are CI-scale (single CPU core); --full widens dims/functions
 to the paper's ranges (hours on this container, intended for real hardware).
 --smoke runs the engine/kernel benchmarks only (a few minutes) and writes
-the BENCH_kernels/BENCH_ladder/BENCH_bucketed/BENCH_mesh JSON artifacts
-for CI.
+the BENCH_kernels/BENCH_ladder/BENCH_bucketed/BENCH_mesh/BENCH_service
+JSON artifacts for CI.
 """
 from __future__ import annotations
 
@@ -39,7 +39,8 @@ def main(argv=None):
     t0 = time.time()
 
     if args.smoke:
-        from benchmarks import bench_kernels, bench_ladder, bench_mesh
+        from benchmarks import (bench_kernels, bench_ladder, bench_mesh,
+                                bench_service)
         section("Smoke — fused generation kernels vs PR-3 unfused op soup")
         bench_kernels.main(["--dims", "64,256,1024", "--gens", "40",
                             "--reps", "5", "--out", "BENCH_kernels.json"])
@@ -61,6 +62,10 @@ def main(argv=None):
                          "--runs", "4", "--lam-start", "8", "--kmax", "2",
                          "--max-evals", "6000", "--eigen-interval", "3",
                          "--out", "BENCH_mesh.json"])
+        section("Smoke — campaign service vs sequential per-job runs")
+        bench_service.main(["--jobs", "6", "--dims", "4,6", "--fids", "1,8",
+                            "--budget", "3000", "--lam-start", "8",
+                            "--kmax", "2", "--out", "BENCH_service.json"])
         print(f"\n[benchmarks.run] total {time.time() - t0:.1f}s")
         return 0
 

@@ -67,9 +67,16 @@ def _leaf_file(path: str) -> str:
     return path.replace("/", "__") + ".npy"
 
 
-def save(ckpt_dir: str, step: int, tree: Any, *, blocking: bool = True
-         ) -> Optional[threading.Thread]:
-    """Write a checkpoint; async (returns the writer thread) if not blocking."""
+def save(ckpt_dir: str, step: int, tree: Any, *, blocking: bool = True,
+         meta: Optional[dict] = None) -> Optional[threading.Thread]:
+    """Write a checkpoint; async (returns the writer thread) if not blocking.
+
+    ``meta`` (optional, JSON-serializable) is written as ``meta.json`` INSIDE
+    the step directory, so it commits atomically with the array leaves — the
+    campaign service stores its allocator map / job table here and can never
+    observe arrays without the bookkeeping that interprets them (or vice
+    versa) after a crash.
+    """
     flat = _flatten(tree)
     # snapshot to host memory synchronously (cheap; device→host copy),
     # so the async writer never races live training buffers
@@ -86,6 +93,9 @@ def save(ckpt_dir: str, step: int, tree: Any, *, blocking: bool = True
                                      "dtype": str(v.dtype)}
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
+        if meta is not None:
+            with open(os.path.join(tmp, "meta.json"), "w") as f:
+                json.dump(meta, f)
         if os.path.exists(final):
             shutil.rmtree(final)
         os.rename(tmp, final)                            # atomic commit
@@ -96,6 +106,15 @@ def save(ckpt_dir: str, step: int, tree: Any, *, blocking: bool = True
     th = threading.Thread(target=write, daemon=False)
     th.start()
     return th
+
+
+def load_meta(ckpt_dir: str, step: int) -> Optional[dict]:
+    """Read the ``meta.json`` committed with step (None if absent)."""
+    p = os.path.join(ckpt_dir, f"step_{step:08d}", "meta.json")
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        return json.load(f)
 
 
 def latest_step(ckpt_dir: str) -> Optional[int]:

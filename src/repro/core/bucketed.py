@@ -73,6 +73,7 @@ class BucketedLadderEngine:
     eigen_interval: Optional[int] = None
     seg_blocks: Optional[int] = None    # segment length cap in eigen blocks
     policy: str = "cover"               # "cover" | "min" (see run_campaign_bucketed)
+    overlap: bool = False               # double-buffered segment dispatch
 
     def __post_init__(self):
         if self.policy not in ("cover", "min"):
@@ -131,14 +132,20 @@ class BucketedLadderEngine:
     # -- one bucket segment as a pure scanned program --------------------------
     def segment_scan(self, k: int, base_key: jax.Array, fitness_fn: Callable,
                      carry: ladder.LadderCarry, seg_gens: int,
+                     max_evals=None,
                      ) -> Tuple[ladder.LadderCarry, ladder.LadderTrace]:
+        """``max_evals`` overrides the engine budget for this member — it may
+        be a *traced* scalar, which is how the campaign service runs
+        heterogeneous per-job budgets through one compiled bucket program
+        (service/server.py vmaps it as a per-row operand)."""
         cfg_k = self.bucket_cfgs[k]
         sparams_k = self.bucket_sparams[k]
+        budget = self.max_evals if max_evals is None else max_evals
 
         def step_fn(c, eigen):
             return ladder.slots_gen_step(
                 cfg_k, sparams_k, c, base_key, fitness_fn,
-                max_evals=self.max_evals, kmax_exp=self.kmax_exp,
+                max_evals=budget, kmax_exp=self.kmax_exp,
                 schedule="sequential", domain=self.domain, impl=self.impl,
                 eigen=eigen, bucket_cap=k)
 
@@ -238,10 +245,11 @@ def pull_schedule(carry: ladder.LadderCarry):
 
 def next_bucket(engine: BucketedLadderEngine, k_idx: np.ndarray,
                 active: np.ndarray, fevals: np.ndarray,
-                seg_len: Dict[int, int]):
+                seg_len: Dict[int, int], budgets=None):
     """One re-bucketing decision — THE scheduling invariant shared by
-    ``drive_segments`` and the mesh engine's per-island loops
-    (distributed/mesh_engine.py), so the two can never silently diverge.
+    ``drive_segments``, the mesh engine's per-island loops
+    (distributed/mesh_engine.py) and the campaign service's lane boundaries
+    (service/server.py), so the three can never silently diverge.
 
     Returns ``(live, k)`` with ``k is None`` when no member can pay for
     another generation.  Policy ``"min"`` picks the narrowest occupied rung
@@ -252,9 +260,15 @@ def next_bucket(engine: BucketedLadderEngine, k_idx: np.ndarray,
     segment length is sized for what the cohort can still possibly run and
     recorded in ``seg_len`` (in place) — ONE length per bucket keeps
     ``compiles ≤ #buckets``.
+
+    ``budgets`` (optional (B,) array) replaces the engine-wide ``max_evals``
+    with per-member budgets — the host mirror of the traced budget operand
+    the service threads through ``segment_scan``; the liveness rule here must
+    match the device-side gate in ``ladder.slots_gen_step`` exactly.
     """
+    cap = engine.max_evals if budgets is None else np.asarray(budgets)
     lam_cur = engine.lam_start * (2 ** k_idx)
-    live = active & (fevals + lam_cur <= engine.max_evals)
+    live = active & (fevals + lam_cur <= cap)
     if not live.any():
         return live, None
     if engine.policy == "min":
@@ -263,15 +277,15 @@ def next_bucket(engine: BucketedLadderEngine, k_idx: np.ndarray,
         k = int(k_idx[live].max())
     if k not in seg_len:
         cohort = live if engine.policy == "cover" else live & (k_idx == k)
-        need = int(np.max((engine.max_evals - fevals[cohort])
-                          // lam_cur[cohort]))
+        need = int(np.max((cap - fevals)[cohort] // lam_cur[cohort]))
         seg_len[k] = engine.bucket_seg_gens(k, need_gens=need)
     return live, k
 
 
 def drive_segments(engine: BucketedLadderEngine, carry: ladder.LadderCarry,
                    dispatch: Callable, max_segments: int = 10_000,
-                   time_axis: int = 1, pull: Optional[Callable] = None):
+                   time_axis: int = 1, pull: Optional[Callable] = None,
+                   budgets=None, overlap: Optional[bool] = None):
     """The host-side re-bucketing loop shared by campaign and single runs.
 
     ``dispatch(k, seg_gens, carry) -> (carry, trace)`` runs one jitted
@@ -283,32 +297,68 @@ def drive_segments(engine: BucketedLadderEngine, carry: ladder.LadderCarry,
     bucket_wall)``; segment traces are concatenated along ``time_axis`` (1
     for vmapped campaigns whose leaves are (B, T, ...), 0 for a single run's
     (T, ...)).
+
+    ``overlap`` (default ``engine.overlap``) double-buffers the carries: the
+    next segment is dispatched SPECULATIVELY with the previous bucket before
+    the blocking re-bucketing ``pull``, so jax's async dispatch chains it
+    behind the running segment and the host sync drops off the device's
+    critical path.  Members only move up the ladder and most boundaries keep
+    the bucket, so the speculation usually lands (``spec_hit`` per segment
+    record); when the bucket changes the speculative output is discarded —
+    it never touches the accepted carry, so trajectories are bit-identical
+    to the unoverlapped driver (the in-device budget/active gates make a
+    mispredicted segment run its members exactly as the right bucket would,
+    or park them).  ``dispatch`` must not block on its own outputs for
+    overlap to help (the mesh S1 driver forces its psum scalars, so it pins
+    ``overlap=False``).
     """
     pull = pull_schedule if pull is None else pull
+    overlap = bool(engine.overlap) if overlap is None else bool(overlap)
     seg_traces: List[ladder.LadderTrace] = []
     segments: List[dict] = []
     bucket_wall: Dict[int, float] = {}
     seg_len: Dict[int, int] = {}        # one segment length per bucket/campaign
+    k_prev: Optional[int] = None
 
     for _ in range(max_segments):
+        spec = None
+        if overlap and k_prev is not None:
+            # double-buffered carry: enqueue the likely next segment before
+            # the host blocks on the schedule pull
+            spec = dispatch(k_prev, seg_len[k_prev], carry)
+        t0 = time.perf_counter()
         k_idx, active, fevals, best_f = pull(carry)
+        sync_s = time.perf_counter() - t0
         if segments:
             # the pull reflects the PREVIOUS segment's result — attach its
             # post-segment best there (finite by then; None keeps the record
             # strict-JSON-safe on the pathological all-inf fitness)
             gb = float(best_f.min())
             segments[-1]["global_best"] = gb if np.isfinite(gb) else None
-        _live, k = next_bucket(engine, k_idx, active, fevals, seg_len)
+        _live, k = next_bucket(engine, k_idx, active, fevals, seg_len,
+                               budgets=budgets)
         if k is None:
             break
         t0 = time.perf_counter()
-        carry, tr = dispatch(k, seg_len[k], carry)
-        jax.block_until_ready(carry.total_fevals)
+        hit = spec is not None and k == k_prev
+        if hit:
+            carry, tr = spec
+        else:
+            carry, tr = dispatch(k, seg_len[k], carry)
+        if not overlap:
+            jax.block_until_ready(carry.total_fevals)
         wall = time.perf_counter() - t0
         seg_traces.append(tr)           # device-resident; transfer at the end
-        segments.append({"bucket": k, "gens": seg_len[k],
-                         "wall_s": round(wall, 5)})
-        bucket_wall[k] = bucket_wall.get(k, 0.0) + wall
+        seg = {"bucket": k, "gens": seg_len[k], "wall_s": round(wall, 5)}
+        if overlap:
+            # wall_s is dispatch-only here (no block); the host-blocked time
+            # rides the pull instead
+            seg["sync_s"] = round(sync_s, 5)
+            seg["spec_hit"] = hit
+        segments.append(seg)
+        bucket_wall[k] = bucket_wall.get(k, 0.0) + wall + \
+            (sync_s if overlap else 0.0)
+        k_prev = k
     else:
         raise RuntimeError("segment driver did not converge "
                            f"within {max_segments} segments")

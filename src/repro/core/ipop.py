@@ -106,9 +106,12 @@ def run_ipop(fitness_fn: Callable, n: int, key: jax.Array,
     programs through the mesh campaign engine
     (distributed/mesh_engine.py) over all local devices with the paper's S1
     (``mesh_strategy="ordered"``) or S2 (``"concurrent"``) deployment;
-    ``backend="hostloop"`` keeps the legacy host-driven chunked loop (same
-    keys, same padded arithmetic).  ``chunk`` only affects the host-loop
-    backend; ``mesh_strategy`` only the mesh backend.
+    ``backend="service"`` submits the problem as a single-tenant job to the
+    campaign service (service/server.py) and drains it — the one-shot parity
+    path of the streaming product; ``backend="hostloop"`` keeps the legacy
+    host-driven chunked loop (same keys, same padded arithmetic).  ``chunk``
+    only affects the host-loop backend; ``mesh_strategy`` only the mesh
+    backend.
 
     ``impl`` selects the kernel dispatch uniformly for EVERY backend —
     ``"auto"`` (Pallas megakernels on TPU, fused jnp ref elsewhere),
@@ -138,6 +141,15 @@ def run_ipop(fitness_fn: Callable, n: int, key: jax.Array,
         carry, trace = bucketed_mod.run_bucketed_single(engine_b, key,
                                                         fitness_fn)
         return _result_from_ladder(engine_b.full, carry, trace)
+    if backend == "service":
+        from repro.service import run_service_single
+        if total_gens is not None:
+            raise ValueError("total_gens only applies to backend='ladder'; "
+                             "the service sizes its own segment programs")
+        return run_service_single(
+            fitness_fn, n, key, lam_start=lam_start, kmax_exp=kmax_exp,
+            max_evals=max_evals, domain=domain, sigma0_frac=sigma0_frac,
+            impl=impl, dtype=dtype)
     if backend == "mesh":
         from repro.distributed import mesh_engine as mesh_mod
         if total_gens is not None:

@@ -73,6 +73,100 @@ def _finite_or_none(x: float):
     return x if np.isfinite(x) else None
 
 
+# ---------------------------------------------------------------------------
+# island program cache (S2)
+# ---------------------------------------------------------------------------
+# S2 island bring-up used to be O(buckets·P) *per driver call*: `island_runner`
+# cached its jitted programs on the engine instance (or, for baked-in fitness
+# closures, in a dict that died with the call), so every new campaign, every
+# `run_mesh_single`, and every round of a long-lived service re-traced the
+# same bucket programs.  Executables are now keyed here, at module level, by a
+# compilation-cache key — everything that determines the compiled program:
+# the bucket's full CMAConfig (shape + trajectory knobs), the engine's ladder
+# geometry/budget/impl, the segment length, the fitness identity (the static
+# BBOB fid set, or the closure OBJECT for generic runs — keying by object
+# removes the stale-closure hazard that forced the per-call caches), and the
+# mesh's device fingerprint.  Per-island dispatch therefore reuses ONE traced
+# program per bucket for the life of the process; the per-device executables
+# XLA still wants live inside that single callable's jit cache and fill
+# lazily, only for islands that actually run the bucket.  The campaign
+# service's segment programs ride the same class (service/server.py).
+
+
+def _contains_callable(x) -> bool:
+    return callable(x) or (isinstance(x, tuple)
+                           and any(_contains_callable(i) for i in x))
+
+
+class ProgramCache:
+    """Process-wide compiled-program cache with closure-aware eviction.
+
+    Entries whose key embeds a callable (a fitness closure, a service
+    registry) keep that closure — and everything its cells capture — alive;
+    unbounded, a long-lived process that builds a fresh closure per call
+    would leak one traced program per (closure, bucket) forever.  Those
+    entries are therefore capped at ``max_closure_entries`` with FIFO
+    eviction (evicting a live program only costs a re-trace on its next
+    use); purely-static keys (BBOB fid sets + config scalars) are bounded by
+    the configuration space and never evicted.
+    """
+
+    def __init__(self, max_closure_entries: int = 64):
+        self.max_closure_entries = int(max_closure_entries)
+        self._programs: Dict[tuple, Callable] = {}
+        self.stats = {"traces": 0, "hits": 0}
+
+    def get(self, key: tuple, build: Callable[[], Callable]) -> Callable:
+        fn = self._programs.get(key)
+        if fn is not None:
+            self.stats["hits"] += 1
+            return fn
+        fn = build()
+        self._programs[key] = fn
+        self.stats["traces"] += 1
+        if _contains_callable(key):
+            closure_keys = [k for k in self._programs
+                            if _contains_callable(k)]
+            for k in closure_keys[:max(0, len(closure_keys)
+                                       - self.max_closure_entries)]:
+                del self._programs[k]
+        return fn
+
+    def snapshot(self) -> dict:
+        return {"programs": len(self._programs), **self.stats}
+
+    def clear(self):
+        self._programs.clear()
+        self.stats.update(traces=0, hits=0)
+
+
+_ISLAND_CACHE = ProgramCache()
+
+
+def island_program_key(eng: bucketed.BucketedLadderEngine, k: int,
+                       seg_gens: int, branch_fids: Tuple[int, ...],
+                       fitness_fn: Optional[Callable], devices) -> tuple:
+    """Compilation-cache key of one island segment program (bucket shape +
+    mesh) — hashable because ``CMAConfig`` is a frozen dataclass of scalars."""
+    fit_id = tuple(branch_fids) if fitness_fn is None else fitness_fn
+    return (eng.bucket_cfgs[k], eng.lam_start, eng.kmax_exp, eng.max_evals,
+            tuple(eng.domain), eng.impl, int(k), int(seg_gens), fit_id,
+            tuple((d.platform, d.id) for d in devices))
+
+
+def island_cache_stats() -> dict:
+    """{"programs": live cached programs, "traces": total traced,
+    "hits": cache hits} — island bring-up is O(buckets) iff ``traces`` stops
+    growing across campaigns (asserted in tests/test_mesh_engine.py)."""
+    return _ISLAND_CACHE.snapshot()
+
+
+def clear_island_program_cache():
+    """Drop all cached island programs (tests; also frees the engines the
+    program closures keep alive)."""
+    _ISLAND_CACHE.clear()
+
+
 def pull_schedule_allgather(carry: ladder.LadderCarry):
     """Mesh variant of ``bucketed.pull_schedule``: the four scheduling arrays
     cross the device boundary as ONE ``process_allgather`` of a single tree
@@ -128,6 +222,7 @@ class MeshCampaignEngine:
             self.mesh = make_campaign_mesh()
         self.n_devices = int(self.mesh.devices.size)
         self._runner_cache: dict = {}
+        self._island_keys: set = set()
 
     # -- segment programs -----------------------------------------------------
     def _seg_fn(self, k: int, seg_gens: int, branch_fids: Tuple[int, ...],
@@ -185,30 +280,31 @@ class MeshCampaignEngine:
 
     def island_runner(self, k: int, seg_gens: int,
                       branch_fids: Tuple[int, ...] = (),
-                      fitness_fn: Optional[Callable] = None,
-                      cache: Optional[dict] = None):
+                      fitness_fn: Optional[Callable] = None):
         """One S2 segment as a plain jitted program over one island's member
         slice; dispatching it on inputs committed to island ``s``'s device
-        runs it there, asynchronously.  One traced program per (bucket,
-        length, fids); each island holds its device's executable copy."""
-        cache = self._runner_cache if cache is None else cache
-        key = ("island", int(k), int(seg_gens), tuple(branch_fids))
-        if key not in cache:
-            cache[key] = jax.jit(
-                self._seg_fn(k, seg_gens, branch_fids, fitness_fn))
-        return cache[key]
+        runs it there, asynchronously.  Programs come from the module-level
+        compilation-cache (``island_program_key``): one traced program per
+        (bucket shape, mesh) reused across islands, campaigns and engine
+        instances — island bring-up is O(buckets), not O(buckets·calls)."""
+        key = island_program_key(self.bucketed, k, seg_gens, branch_fids,
+                                 fitness_fn, self.mesh.devices.flat)
+        fn = _ISLAND_CACHE.get(key, lambda: jax.jit(
+            self._seg_fn(k, seg_gens, branch_fids, fitness_fn)))
+        self._island_keys.add(key)
+        return fn
 
     def compiles(self) -> int:
-        """Distinct segment programs: jit-cache entries for ordered runners
-        (always 1 each — same shardings every call), one traced program per
-        island runner (per-device executables are copies of it)."""
-        total = 0
+        """Distinct segment programs this engine used: jit-cache entries for
+        ordered runners (always 1 each — same shardings every call), one per
+        island program key (counted as used even on a module-cache hit, so
+        the ``compiles ≤ #buckets`` bound stays meaningful per campaign;
+        process-wide reuse shows up in ``island_cache_stats`` instead)."""
+        total = len(self._island_keys)
         for key, fn in self._runner_cache.items():
             if key[0] == "ordered":
                 cs = getattr(fn, "_cache_size", None)
                 total += int(cs()) if callable(cs) else 1
-            else:
-                total += 1
         return total
 
     # -- member layout --------------------------------------------------------
@@ -263,9 +359,12 @@ class MeshCampaignEngine:
                              "global_best": _finite_or_none(g_best)})
             return c, tr
 
+        # overlap=False pinned: this dispatch forces the psum'd exchange
+        # scalars (int(g_fev)), so a speculative dispatch would block on its
+        # own output and serialize instead of overlapping
         carry, trace, segments, bucket_wall = bucketed.drive_segments(
             self.bucketed, carry, dispatch, max_segments,
-            time_axis=1, pull=pull_schedule_allgather)
+            time_axis=1, pull=pull_schedule_allgather, overlap=False)
         return carry, trace, segments, bucket_wall, exchange, None
 
     def _drive_concurrent(self, keys, insts, carry, branch_fids, fitness_fn,
@@ -278,7 +377,6 @@ class MeshCampaignEngine:
         P_n = len(devs)
         B_pad = int(keys.shape[0])
         Bl = B_pad // P_n
-        local_cache = None if fitness_fn is None else {}
 
         shards = []
         for s, dev in enumerate(devs):
@@ -325,7 +423,7 @@ class MeshCampaignEngine:
                     finished += 1
                     continue
                 runner = self.island_runner(k, seg_len[k], branch_fids,
-                                            fitness_fn, cache=local_cache)
+                                            fitness_fn)
                 args = (sh["keys"], sh["carry"]) if sh["insts"] is None \
                     else (sh["keys"], sh["insts"], sh["carry"])
                 t0 = time.perf_counter()
@@ -473,8 +571,10 @@ def run_mesh_single(engine: MeshCampaignEngine, base_key: jax.Array,
     other shards carry inert padding rows.  Returns ``(carry, trace)`` with
     the single-run layout (trace leaves (T, S)) of ``run_bucketed_single``.
 
-    Runners are cached per call, not on the engine: the fitness closure is
-    baked in at trace time (same reasoning as ``run_bucketed_single``).
+    Ordered runners are cached per call (the fitness closure is baked in at
+    trace time — same reasoning as ``run_bucketed_single``); island runners
+    ride the module-level program cache, which keys by the closure OBJECT and
+    therefore can never replay a previous call's fitness.
     """
     keys = base_key[None]
     carry = engine.bucketed._init_runner(keys)

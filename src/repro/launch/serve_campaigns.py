@@ -1,0 +1,181 @@
+"""Campaign-service CLI: serve a stream of optimization requests.
+
+  PYTHONPATH=src python -m repro.launch.serve_campaigns \
+      [--requests reqs.json | --synthetic 8] [--devices 4] \
+      [--snapshot-dir ckpt --snapshot-every 4] [--resume] [--out results.json]
+
+``--requests`` takes a JSON list of CampaignRequest dicts, each optionally
+carrying an ``arrival_s`` wall-clock offset; ``--synthetic N`` generates a
+mixed-dim BBOB trace instead.  Requests are fed to the server as their
+arrival time passes while the service loop runs — admission happens at the
+next segment boundary, exactly the streaming deployment the service exists
+for.  With ``--devices > 1`` the process re-execs itself under
+``--xla_force_host_platform_device_count`` (the bench_mesh pattern: the flag
+must precede jax's first import) and every lane runs one island per virtual
+device.  ``--resume`` restores the newest committed snapshot from
+``--snapshot-dir`` instead of starting fresh (custom fitness callables
+cannot ride a snapshot — the CLI serves BBOB requests only).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+_INNER_ENV = "_SERVE_CAMPAIGNS_INNER"
+
+
+def _parser():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", default=None,
+                    help="JSON file with a list of request dicts")
+    ap.add_argument("--synthetic", type=int, default=0,
+                    help="generate N synthetic BBOB requests instead")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--devices", type=int, default=1)
+    ap.add_argument("--dims", default="4,8",
+                    help="dim menu for --synthetic")
+    ap.add_argument("--fids", default="1,8",
+                    help="compiled-in BBOB menu (and --synthetic draw set)")
+    ap.add_argument("--budget", type=int, default=4000)
+    ap.add_argument("--lam-start", type=int, default=8)
+    ap.add_argument("--kmax", type=int, default=2)
+    ap.add_argument("--rows-per-island", type=int, default=4)
+    ap.add_argument("--arrival-gap-s", type=float, default=0.0,
+                    help="synthetic inter-arrival gap (0 = all at t=0)")
+    ap.add_argument("--snapshot-dir", default=None)
+    ap.add_argument("--snapshot-every", type=int, default=0,
+                    help="snapshot cadence in service rounds")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--max-steps", type=int, default=10_000)
+    ap.add_argument("--out", default=None, help="write results JSON here")
+    return ap
+
+
+def main(argv=None):
+    args = _parser().parse_args(argv)
+    if args.devices > 1 and os.environ.get(_INNER_ENV) != "1":
+        env = dict(os.environ)
+        env[_INNER_ENV] = "1"
+        env["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices} "
+            + env.get("XLA_FLAGS", ""))
+        cmd = [sys.executable, "-m", "repro.launch.serve_campaigns"]
+        cmd += list(argv) if argv is not None else sys.argv[1:]
+        return subprocess.run(cmd, check=True, env=env).returncode
+    return _serve(args)
+
+
+def _synthetic_requests(args):
+    import numpy as np
+    rng = np.random.default_rng(args.seed)
+    dims = [int(d) for d in args.dims.split(",")]
+    fids = [int(f) for f in args.fids.split(",")]
+    reqs = []
+    for j in range(args.synthetic):
+        reqs.append({
+            "dim": int(rng.choice(dims)),
+            "fid": int(rng.choice(fids)),
+            "instance": 1,
+            "budget": int(args.budget * rng.uniform(0.5, 1.5)),
+            "seed": int(rng.integers(0, 2 ** 31)),
+            "priority": int(rng.integers(0, 3)),
+            "arrival_s": round(j * args.arrival_gap_s, 4),
+            "tag": f"synthetic-{j}",
+        })
+    return reqs
+
+
+def _serve(args):
+    import time
+
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+
+    from repro.service import CampaignRequest, CampaignServer, QueueFull
+
+    if args.requests:
+        with open(args.requests) as fh:
+            raw = json.load(fh)
+    elif args.synthetic:
+        raw = _synthetic_requests(args)
+    elif args.resume:
+        raw = []                        # serve only the snapshot's jobs
+    else:
+        raise SystemExit("pass --requests FILE or --synthetic N")
+    raw = sorted(raw, key=lambda r: r.get("arrival_s", 0.0))
+
+    fids = tuple(int(f) for f in args.fids.split(","))
+    if args.resume:
+        if not args.snapshot_dir:
+            raise SystemExit("--resume requires --snapshot-dir")
+        srv = CampaignServer.restore(args.snapshot_dir,
+                                     snapshot_every=args.snapshot_every)
+        print(f"[serve] resumed: {srv.stats()}", flush=True)
+        raw = []                    # resumed queue/jobs come from the snapshot
+    else:
+        srv = CampaignServer(bbob_fids=fids, lam_start=args.lam_start,
+                             kmax_exp=args.kmax,
+                             max_budget=max((r["budget"] for r in raw),
+                                            default=args.budget),
+                             rows_per_island=args.rows_per_island,
+                             devices=jax.devices(),
+                             snapshot_dir=args.snapshot_dir,
+                             snapshot_every=args.snapshot_every)
+
+    t0 = time.monotonic()
+    tickets = []
+    for step_i in range(args.max_steps):
+        now = time.monotonic() - t0
+        while raw and raw[0].get("arrival_s", 0.0) <= now:
+            spec = dict(raw.pop(0))
+            spec.pop("arrival_s", None)
+            try:
+                t = srv.submit(CampaignRequest(**spec))
+                tickets.append(t)
+                print(f"[serve] +job {t.job_id} dim={t.request.dim} "
+                      f"fid={t.request.fid} budget={t.request.budget} "
+                      f"prio={t.request.priority}", flush=True)
+            except QueueFull:
+                raw.insert(0, spec)             # backpressure: retry later
+                break
+        stats = srv.step()
+        for t in srv.tickets.values():
+            if t.done and not getattr(t, "_printed", False):
+                t._printed = True
+                lat = t.latency_s()
+                lat_s = f"{lat:.3f}s" if lat is not None else "n/a (resumed)"
+                print(f"[serve] -job {t.job_id} done best_f={t.best_f:.6g} "
+                      f"fevals={t.fevals} latency={lat_s}", flush=True)
+        if (not stats.progressed() and not raw and not len(srv.queue)
+                and not srv._resident_jobs()):
+            break
+    wall = time.monotonic() - t0
+
+    done = [t for t in srv.tickets.values() if t.done]
+    summary = {
+        "wall_s": round(wall, 3),
+        "jobs": len(srv.tickets),
+        "done": len(done),
+        "useful_evals": int(sum(t.fevals for t in done)),
+        "stats": srv.stats(),
+        "results": [{"job_id": t.job_id, "tag": t.request.tag,
+                     "dim": t.request.dim, "fid": t.request.fid,
+                     "best_f": t.best_f, "fevals": t.fevals,
+                     "latency_s": t.latency_s()} for t in sorted(
+                         done, key=lambda t: t.job_id)],
+    }
+    print(json.dumps({k: v for k, v in summary.items() if k != "results"},
+                     indent=2))
+    if args.out:
+        with open(args.out, "w") as fh:
+            json.dump(summary, fh, indent=2)
+        print(f"[serve] wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

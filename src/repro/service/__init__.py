@@ -1,0 +1,13 @@
+"""Campaign service — multi-tenant streaming optimization-as-a-service.
+
+The mesh engines run one batch-mode campaign fixed at trace time; this
+package turns them into a *service*: independent optimization jobs are
+admitted as they arrive, join a running bucketed program at segment
+boundaries without recompilation, retire early, stream results, and survive
+crashes through periodic snapshots (README "Campaign service").
+"""
+from repro.service.allocator import SlotAllocator, lane_key          # noqa: F401
+from repro.service.queue import (AdmissionQueue, CampaignRequest,    # noqa: F401
+                                 CampaignTicket, QueueFull)
+from repro.service.server import (CampaignServer, FitnessRegistry,   # noqa: F401
+                                  run_service_single)

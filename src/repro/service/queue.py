@@ -1,0 +1,183 @@
+"""Campaign request spec, streaming tickets, and the admission queue.
+
+A ``CampaignRequest`` is one tenant's optimization job: a BBOB (fid,
+instance) pair or a registered fitness callable, a problem dimension, an
+evaluation budget, an optional absolute fitness target (early retirement),
+and a priority.  Submitting one to the server yields a ``CampaignTicket``
+immediately — the job's streaming handle: per-boundary progress updates
+while it runs, and the full ``IPOPResult`` once it completes.
+
+The ``AdmissionQueue`` is the service's front door: priority-ordered pending
+requests with *backpressure* — beyond ``max_pending`` the queue refuses new
+work (``QueueFull``) instead of growing without bound, so a drowning service
+degrades by rejecting rather than by dying.  Admission itself (taking a
+request out of the queue and packing it into a running lane) only ever
+happens at segment boundaries (service/server.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Any, Callable, List, Optional, Tuple
+
+JOB_QUEUED = "queued"
+JOB_RUNNING = "running"
+JOB_DONE = "done"
+JOB_REJECTED = "rejected"
+
+
+class QueueFull(RuntimeError):
+    """Admission backpressure: the pending queue is at capacity."""
+
+
+@dataclasses.dataclass
+class CampaignRequest:
+    """One optimization job.
+
+    Exactly one of ``fid`` (BBOB, with ``instance``) or ``fitness`` (the name
+    of a callable registered in the server's ``FitnessRegistry``) selects the
+    objective.  ``budget`` is the evaluation budget (the ``max_evals`` a
+    standalone ``run_ipop`` would get); ``target`` an optional absolute
+    fitness value that retires the job early once reached (checked at segment
+    boundaries).  ``key`` optionally overrides the PRNG key derived from
+    ``seed`` — ``run_ipop(backend="service")`` uses it for bit-parity with
+    the other backends.  ``lam_start``/``kmax_exp``/``dtype`` default to the
+    server's configuration; together with ``dim`` they form the dim-class
+    routing key (service/allocator.py) — requests in the same class share one
+    compiled program family.
+    """
+
+    dim: int
+    budget: int
+    seed: int = 0
+    fid: Optional[int] = None
+    instance: int = 1
+    fitness: Optional[str] = None
+    target: Optional[float] = None
+    priority: int = 0
+    lam_start: Optional[int] = None
+    kmax_exp: Optional[int] = None
+    dtype: Optional[str] = None
+    tag: str = ""
+    key: Any = None                     # explicit jax PRNG key (overrides seed)
+
+    def validate(self):
+        if (self.fid is None) == (self.fitness is None):
+            raise ValueError("exactly one of fid / fitness must be set")
+        if self.dim < 1:
+            raise ValueError(f"dim must be >= 1, got {self.dim}")
+        if self.budget < 0:
+            raise ValueError(f"budget must be >= 0, got {self.budget}")
+
+    def to_meta(self) -> dict:
+        """JSON-able form for snapshots (the explicit key is host-encoded)."""
+        d = {f.name: getattr(self, f.name)
+             for f in dataclasses.fields(self) if f.name != "key"}
+        if self.key is not None:
+            import numpy as np
+            d["_key"] = [int(x) for x in np.asarray(self.key).ravel()]
+        return d
+
+    @classmethod
+    def from_meta(cls, d: dict) -> "CampaignRequest":
+        d = dict(d)
+        raw = d.pop("_key", None)
+        req = cls(**d)
+        if raw is not None:
+            import jax.numpy as jnp
+            req.key = jnp.asarray(raw, jnp.uint32)
+        return req
+
+
+@dataclasses.dataclass
+class CampaignTicket:
+    """Streaming handle of one submitted job (updated in place by the server).
+
+    ``updates`` is the trajectory tail: one record per segment boundary while
+    the job is resident ({boundary, fevals, best_f, k}), capped at
+    ``TAIL_CAP`` most-recent entries.  ``result`` (an ``ipop.IPOPResult``
+    with the full per-descent trajectory) lands when status turns "done".
+    """
+
+    TAIL_CAP = 512
+
+    job_id: int
+    request: CampaignRequest
+    status: str = JOB_QUEUED
+    best_f: float = float("inf")
+    fevals: int = 0
+    updates: List[dict] = dataclasses.field(default_factory=list)
+    result: Any = None
+    lane: Optional[tuple] = None
+    island: Optional[int] = None
+    row: Optional[int] = None
+    # host wall-clock timestamps; None on tickets rebuilt from a snapshot
+    # (timestamps are not persisted, so a resumed job has no latency)
+    submit_s: Optional[float] = None
+    admit_s: Optional[float] = None
+    done_s: Optional[float] = None
+    admit_boundary: Optional[int] = None
+
+    def push(self, rec: dict):
+        self.updates.append(rec)
+        if len(self.updates) > self.TAIL_CAP:
+            del self.updates[:len(self.updates) - self.TAIL_CAP]
+
+    @property
+    def done(self) -> bool:
+        return self.status == JOB_DONE
+
+    def latency_s(self) -> Optional[float]:
+        if self.done_s is None or self.submit_s is None:
+            return None
+        return self.done_s - self.submit_s
+
+
+class AdmissionQueue:
+    """Priority-ordered pending requests with backpressure.
+
+    ``submit`` is O(log n); ``take`` pops the highest-priority request (ties
+    broken FIFO) matching a predicate — the server's admission pass calls it
+    with "fits a lane with a free row" so a blocked wide job never starves
+    narrower ones behind it.
+    """
+
+    def __init__(self, max_pending: int = 256):
+        self.max_pending = int(max_pending)
+        self._heap: List[Tuple[int, int, CampaignRequest, CampaignTicket]] = []
+        self._seq = itertools.count()
+        self._ids = itertools.count()
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def submit(self, req: CampaignRequest, *,
+               now_s: float = 0.0) -> CampaignTicket:
+        req.validate()
+        if len(self._heap) >= self.max_pending:
+            raise QueueFull(
+                f"admission queue at capacity ({self.max_pending} pending)")
+        ticket = CampaignTicket(job_id=next(self._ids), request=req,
+                                submit_s=now_s)
+        heapq.heappush(self._heap,
+                       (-req.priority, next(self._seq), req, ticket))
+        return ticket
+
+    def take(self, match: Optional[Callable[[CampaignRequest], bool]] = None,
+             ) -> Optional[Tuple[CampaignRequest, CampaignTicket]]:
+        """Remove and return the best-priority (request, ticket) for which
+        ``match`` holds (None matches everything); None if nothing matches."""
+        kept, out = [], None
+        while self._heap:
+            item = heapq.heappop(self._heap)
+            if out is None and (match is None or match(item[2])):
+                out = (item[2], item[3])
+            else:
+                kept.append(item)
+        for item in kept:
+            heapq.heappush(self._heap, item)
+        return out
+
+    def pending(self) -> List[CampaignTicket]:
+        return [t for (_p, _s, _r, t) in sorted(self._heap)]

@@ -1,0 +1,737 @@
+"""The campaign server: streaming optimization-as-a-service over the engines.
+
+Architecture
+------------
+The server owns a set of *lanes*, one per dim-class (``allocator.lane_key``).
+A lane is a ``BucketedLadderEngine`` plus a fixed grid of member rows split
+into *islands* — one island per device of the campaign mesh, each driving
+its OWN budget-adaptive segment schedule exactly like the mesh engine's S2
+strategy (shard-local ``bucketed.next_bucket``, async dispatch, host syncs
+only at segment boundaries).  On a single device the lane degenerates to one
+island and the loop is the bucketed segment driver with service hooks.
+
+Everything per-job is a row-indexed *operand* of the lane's segment
+programs — base key, per-row budget (``segment_scan(max_evals=...)``, traced),
+fitness branch index, stacked BBOB instance — never a compile key.  Admission
+therefore writes a row (one ``dynamic_update_index_in_dim`` program per lane)
+at a segment boundary and the next segment just runs it: compiles stay
+≤ #buckets × #dim-classes for the whole service lifetime, no per-request
+recompilation (asserted in tests/test_service.py).  Segment programs ride a
+module-level compilation cache keyed like the mesh engine's island cache
+(bucket shape + fitness identity + mesh), so successive rounds — and
+successive *servers*, e.g. across a crash-resume — reuse one traced program
+per bucket.
+
+Per boundary the server: pulls the island's scheduling arrays (ONE batched
+transfer, ``bucketed.pull_schedule``), streams ticket updates, retires rows
+whose job finished its budget / ladder / target (early, ``stop_at``-style),
+frees their slots, admits queued requests into free rows, and dispatches the
+island's next bucket segment asynchronously.  Traces stay device-resident
+until a row's job completes, then exactly that row is pulled and sliced into
+the job's ``IPOPResult``.
+
+Durability: ``snapshot()`` writes the stacked ``CMAState`` carries, per-row
+operands, device-resident traces and the allocator/job map through
+``checkpoint/store.py`` (arrays + atomically-committed ``meta.json``);
+``CampaignServer.restore`` rebuilds a server from the latest committed step —
+onto a *different* device count if asked: rows are relocatable (trajectories
+depend only on their base key and state, never the row/island), so the
+allocator just re-packs them across the new islands (elastic re-shard).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import store
+from repro.core import bucketed, ipop as ipop_mod, ladder
+from repro.distributed.mesh_engine import ProgramCache
+from repro.fitness import bbob
+from repro.service import queue as qmod
+from repro.service.allocator import SlotAllocator, lane_key
+from repro.service.queue import (JOB_DONE, JOB_QUEUED, JOB_REJECTED,
+                                 JOB_RUNNING, CampaignRequest, CampaignTicket)
+
+
+class FitnessRegistry:
+    """Named fitness callables compiled into every lane's dispatch switch.
+
+    Branch 0 of a lane program is always the BBOB traced-fid dispatch over
+    the server's configured ``bbob_fids``; custom callables occupy branches
+    1..N in registration order.  The registry is FROZEN once a server starts
+    (the branches are part of the compiled programs); register everything up
+    front.  Callables must be pure jnp batch evaluators ``f(X: (lam, n)) ->
+    (lam,)`` and total (under vmap the switch evaluates every branch and
+    selects, exactly like the campaign engines' fid dispatch).
+    """
+
+    def __init__(self):
+        self._names: List[str] = []
+        self._fns: List[Callable] = []
+        self._frozen = False
+
+    def register(self, name: str, fn: Callable):
+        if self._frozen:
+            raise RuntimeError("registry is frozen once a server starts")
+        if name in self._names:
+            raise ValueError(f"fitness {name!r} already registered")
+        self._names.append(name)
+        self._fns.append(fn)
+        return fn
+
+    def freeze(self):
+        self._frozen = True
+
+    def index(self, name: str) -> int:
+        return self._names.index(name)
+
+    @property
+    def names(self) -> Tuple[str, ...]:
+        return tuple(self._names)
+
+    @property
+    def fns(self) -> Tuple[Callable, ...]:
+        return tuple(self._fns)
+
+
+# ---------------------------------------------------------------------------
+# lane program cache — shares the mesh engine's ProgramCache discipline
+# (closure-capped FIFO eviction: a retired server generation's registry tuple
+# stops pinning its programs once newer closure-keyed entries push it out)
+# ---------------------------------------------------------------------------
+
+_SEGMENT_CACHE = ProgramCache()
+
+
+def program_cache_stats() -> dict:
+    return _SEGMENT_CACHE.snapshot()
+
+
+def clear_program_cache():
+    _SEGMENT_CACHE.clear()
+
+
+class _Island:
+    """One device's slice of a lane: per-row operands + carry + traces."""
+
+    __slots__ = ("device", "arrays", "traces")
+
+    def __init__(self, device, arrays):
+        self.device = device
+        self.arrays = arrays            # {"keys","fn_idx","budgets","insts","carry"}
+        # [(LadderTrace (Bl, g, S) device-resident, own (Bl, g) np job ids)]
+        self.traces: List[tuple] = []
+
+
+class _Lane:
+    """One dim-class: engine + islands + allocator + program bookkeeping."""
+
+    def __init__(self, key: tuple, server: "CampaignServer"):
+        dim, lam_start, kmax_exp, dtype = key
+        self.key = key
+        self.server = server
+        self.engine = bucketed.BucketedLadderEngine(
+            n=dim, lam_start=lam_start, kmax_exp=kmax_exp,
+            max_evals=server.max_budget, domain=server.domain,
+            sigma0_frac=server.sigma0_frac, impl=server.impl, dtype=dtype,
+            eigen_interval=server.eigen_interval,
+            seg_blocks=server.seg_blocks, policy=server.policy)
+        self.bbob_fids = tuple(server.bbob_fids)
+        self.custom_fns = server.registry.fns
+        self.m_peaks = (101 if 21 in self.bbob_fids
+                        else 21 if 22 in self.bbob_fids else 1)
+        fill_fid = self.bbob_fids[0] if self.bbob_fids else 1
+        self.filler_inst = bbob.pad_instance(
+            bbob.make_instance(fill_fid, dim, 0, self.engine.full.cfg.jdtype),
+            self.m_peaks)
+        self.seg_len: Dict[int, int] = {}
+        self.used_programs: set = set()
+        self.allocator = SlotAllocator(len(server.devices),
+                                       server.rows_per_island)
+        self.fev_dt = jax.dtypes.canonicalize_dtype(jnp.int64)
+        self._row_init = jax.jit(self.engine.full.init_carry)
+        self._write_row = jax.jit(self._write_row_fn)
+        self._deactivate = jax.jit(self._deactivate_fn)
+        self.islands = [
+            _Island(dev, jax.device_put(self._blank_arrays(), dev))
+            for dev in server.devices]
+
+    # -- array plumbing -------------------------------------------------------
+    @staticmethod
+    def _write_row_fn(arrays, vals, row):
+        return jax.tree_util.tree_map(
+            lambda a, v: jax.lax.dynamic_update_index_in_dim(
+                a, jnp.asarray(v, a.dtype), row, 0), arrays, vals)
+
+    @staticmethod
+    def _deactivate_fn(carry, mask):
+        return carry._replace(active=carry.active & ~mask[:, None])
+
+    def _blank_arrays(self, Bl: Optional[int] = None) -> dict:
+        """One island's inert initial arrays (host; caller device_puts)."""
+        Bl = self.allocator.rows_per_island if Bl is None else int(Bl)
+        keys = jnp.stack([jax.random.fold_in(jax.random.PRNGKey(0), j)
+                          for j in range(Bl)])
+        carry = jax.vmap(self.engine.full.init_carry)(keys)
+        carry = carry._replace(active=jnp.zeros_like(carry.active))
+        insts = jax.tree_util.tree_map(
+            lambda a: jnp.repeat(a[None], Bl, axis=0), self.filler_inst)
+        return {"keys": keys,
+                "fn_idx": jnp.zeros((Bl,), jnp.int32),
+                "budgets": jnp.zeros((Bl,), self.fev_dt),
+                "insts": insts,
+                "carry": carry}
+
+    # -- segment programs -----------------------------------------------------
+    def program_key(self, k: int, seg_gens: int) -> tuple:
+        eng = self.engine
+        return ("service", eng.bucket_cfgs[k], self.key, eng.max_evals,
+                tuple(self.server.domain), self.server.sigma0_frac,
+                self.server.impl, self.bbob_fids, self.custom_fns,
+                self.m_peaks, int(k), int(seg_gens),
+                tuple((d.platform, d.id) for d in self.server.devices))
+
+    def runner(self, k: int, seg_gens: int) -> Callable:
+        key = self.program_key(k, seg_gens)
+        fn = _SEGMENT_CACHE.get(key,
+                                lambda: self._build_runner(k, seg_gens))
+        self.used_programs.add(key)
+        return fn
+
+    def _build_runner(self, k: int, seg_gens: int) -> Callable:
+        eng, bbob_fids, custom = self.engine, self.bbob_fids, self.custom_fns
+
+        def run_one(base_key, fn_idx, budget, inst, carry):
+            def fit(X):
+                if bbob_fids:
+                    branches = [lambda x: bbob.evaluate_dynamic(
+                        inst, x, bbob_fids)]
+                else:       # no BBOB menu configured: branch 0 is poison
+                    branches = [lambda x: jnp.full(x.shape[:-1], jnp.inf,
+                                                   x.dtype)]
+                branches += [lambda x, f=f: jnp.asarray(f(x), x.dtype)
+                             for f in custom]
+                idx = jnp.clip(fn_idx, 0, len(branches) - 1)
+                return jax.lax.switch(idx, branches, X)
+            return eng.segment_scan(k, base_key, fit, carry, seg_gens,
+                                    max_evals=budget)
+
+        return jax.jit(jax.vmap(run_one))
+
+
+@dataclasses.dataclass
+class StepStats:
+    dispatched: int = 0
+    admitted: int = 0
+    finalized: int = 0
+    rejected: int = 0
+
+    def progressed(self) -> bool:
+        return bool(self.dispatched or self.admitted or self.finalized
+                    or self.rejected)
+
+
+class CampaignServer:
+    """Multi-tenant streaming campaign service (see module docstring).
+
+    ``devices`` / ``mesh`` pick the fleet (default: all local devices — one
+    S2-style island per device per lane).  ``bbob_fids`` is the compiled-in
+    BBOB menu: requests may use any of these fids without recompilation;
+    custom callables come from ``registry`` and must be registered before the
+    first submit.  ``max_budget`` bounds every job's budget (it is baked into
+    the bucket programs' segment sizing).
+    """
+
+    def __init__(self, registry: Optional[FitnessRegistry] = None,
+                 mesh=None, devices: Optional[Sequence] = None,
+                 bbob_fids: Tuple[int, ...] = (1, 8),
+                 lam_start: int = 12, kmax_exp: int = 4,
+                 dtype: str = "float64", impl: str = "auto",
+                 policy: str = "cover", eigen_interval: Optional[int] = None,
+                 seg_blocks: Optional[int] = None,
+                 domain: Tuple[float, float] = (-5.0, 5.0),
+                 sigma0_frac: float = 0.25, max_budget: int = 200_000,
+                 rows_per_island: int = 4, max_pending: int = 256,
+                 max_lanes: int = 16, snapshot_dir: Optional[str] = None,
+                 snapshot_every: int = 0):
+        if devices is not None:
+            self.devices = list(devices)
+        elif mesh is not None:
+            self.devices = list(mesh.devices.flat)
+        else:
+            self.devices = [jax.devices()[0]]
+        self.registry = registry if registry is not None else FitnessRegistry()
+        self.registry.freeze()
+        self.bbob_fids = tuple(bbob_fids)
+        self.lam_start, self.kmax_exp = int(lam_start), int(kmax_exp)
+        self.dtype, self.impl, self.policy = dtype, impl, policy
+        self.eigen_interval, self.seg_blocks = eigen_interval, seg_blocks
+        self.domain, self.sigma0_frac = tuple(domain), float(sigma0_frac)
+        self.max_budget = int(max_budget)
+        self.rows_per_island = int(rows_per_island)
+        self.max_lanes = int(max_lanes)
+        self.snapshot_dir, self.snapshot_every = snapshot_dir, snapshot_every
+        self.queue = qmod.AdmissionQueue(max_pending=max_pending)
+        self.tickets: Dict[int, CampaignTicket] = {}
+        self.lanes: Dict[tuple, _Lane] = {}
+        self._completed: set = set()
+        self._boundary_n = 0
+
+    # -- config round-trip (snapshots) ----------------------------------------
+    _CONFIG_FIELDS = ("bbob_fids", "lam_start", "kmax_exp", "dtype", "impl",
+                      "policy", "eigen_interval", "seg_blocks", "domain",
+                      "sigma0_frac", "max_budget", "rows_per_island",
+                      "max_lanes")
+
+    def config_meta(self) -> dict:
+        out = {f: getattr(self, f) for f in self._CONFIG_FIELDS}
+        out["bbob_fids"] = list(out["bbob_fids"])
+        out["domain"] = list(out["domain"])
+        return out
+
+    # -- submission -----------------------------------------------------------
+    def submit(self, req: CampaignRequest,
+               now_s: Optional[float] = None) -> CampaignTicket:
+        req.validate()
+        if req.budget > self.max_budget:
+            raise ValueError(f"budget {req.budget} exceeds the service "
+                             f"max_budget {self.max_budget}")
+        if req.fid is not None and req.fid not in self.bbob_fids:
+            raise ValueError(f"fid {req.fid} is not in the compiled-in BBOB "
+                             f"menu {self.bbob_fids}")
+        if req.fitness is not None and req.fitness not in self.registry.names:
+            raise ValueError(f"unknown fitness {req.fitness!r}; registered: "
+                             f"{self.registry.names}")
+        t = self.queue.submit(
+            req, now_s=time.monotonic() if now_s is None else now_s)
+        self.tickets[t.job_id] = t
+        return t
+
+    # -- lanes ----------------------------------------------------------------
+    def _lane_key(self, req: CampaignRequest) -> tuple:
+        return lane_key(req, lam_start=self.lam_start,
+                        kmax_exp=self.kmax_exp, dtype=self.dtype)
+
+    def _get_lane(self, key: tuple, create: bool = True) -> Optional[_Lane]:
+        lane = self.lanes.get(key)
+        if lane is None and create:
+            if len(self.lanes) >= self.max_lanes:
+                return None
+            lane = _Lane(key, self)
+            self.lanes[key] = lane
+        return lane
+
+    def _create_lanes(self):
+        for t in self.queue.pending():
+            self._get_lane(self._lane_key(t.request))
+
+    # -- the service loop -----------------------------------------------------
+    def step(self) -> StepStats:
+        """One service round: every island gets a segment boundary —
+        pull, stream, retire, admit, dispatch (async)."""
+        stats = StepStats()
+        self._create_lanes()
+        for lane in self.lanes.values():
+            for i, isl in enumerate(lane.islands):
+                self._island_boundary(lane, i, isl, stats)
+        self._boundary_n += 1
+        if (self.snapshot_dir and self.snapshot_every
+                and self._boundary_n % self.snapshot_every == 0):
+            self.snapshot()
+        return stats
+
+    def drain(self, max_steps: int = 10_000) -> List[CampaignTicket]:
+        """Run until every submitted job completed (or was rejected)."""
+        for _ in range(max_steps):
+            stats = self.step()
+            if not stats.progressed() and not self._resident_jobs():
+                break                   # idle: everything placeable finished
+        else:
+            raise RuntimeError(f"service did not drain in {max_steps} steps")
+        # anything still queued at idle can never be placed (lane cap): reject
+        while len(self.queue):
+            item = self.queue.take()
+            if item is None:
+                break
+            _req, t = item
+            t.status = JOB_REJECTED
+            t.done_s = time.monotonic()
+        return [t for t in self.tickets.values() if t.done]
+
+    def _resident_jobs(self) -> int:
+        return sum(len(lane.allocator.occupied())
+                   for lane in self.lanes.values())
+
+    def _island_boundary(self, lane: _Lane, i: int, isl: _Island,
+                         stats: StepStats):
+        al = lane.allocator
+        k_idx, active, fevals, best_f = bucketed.pull_schedule(
+            isl.arrays["carry"])
+        k_idx, active, fevals = k_idx.copy(), active.copy(), fevals.copy()
+        lam_cur = lane.engine.lam_start * (2 ** k_idx)
+
+        # -- stream + collect finished rows -------------------------------
+        finish: List[Tuple[int, int]] = []          # (row, job_id)
+        deact = np.zeros(len(k_idx), bool)
+        for row in np.nonzero(al.row_jobs[i] >= 0)[0]:
+            job = int(al.row_jobs[i][row])
+            t = self.tickets[job]
+            t.best_f = float(best_f[row])
+            t.fevals = int(fevals[row])
+            t.push({"boundary": self._boundary_n, "fevals": t.fevals,
+                    "best_f": t.best_f, "k": int(k_idx[row])})
+            target = t.request.target
+            hit = target is not None and best_f[row] <= target
+            done = (not active[row]
+                    or fevals[row] + lam_cur[row] > al.budgets[i][row])
+            if hit and not done:
+                deact[row] = True                   # early retirement
+                active[row] = False
+                done = True
+            if done:
+                finish.append((int(row), job))
+        if deact.any():
+            isl.arrays["carry"] = lane._deactivate(
+                isl.arrays["carry"], jax.device_put(deact, isl.device))
+        for row, job in finish:
+            self._finalize(lane, i, isl, row, job)
+            stats.finalized += 1
+        self._prune_traces(isl)
+
+        # -- admission (highest priority first, this island's free rows) --
+        while al.free_rows(i) > 0:
+            item = self.queue.take(
+                lambda r: self._lane_key(r) == lane.key)
+            if item is None:
+                break
+            req, t = item
+            row = self._admit(lane, i, isl, req, t)
+            k_idx[row], active[row], fevals[row] = 0, True, 0
+            stats.admitted += 1
+
+        # -- dispatch the island's next segment (async) -------------------
+        _live, k = bucketed.next_bucket(lane.engine, k_idx, active, fevals,
+                                        lane.seg_len, budgets=al.budgets[i])
+        if k is None:
+            return
+        runner = lane.runner(k, lane.seg_len[k])
+        a = isl.arrays
+        carry, tr = runner(a["keys"], a["fn_idx"], a["budgets"], a["insts"],
+                           a["carry"])
+        isl.arrays["carry"] = carry
+        own = np.repeat(al.row_jobs[i].copy()[:, None], lane.seg_len[k],
+                        axis=1)
+        isl.traces.append((tr, own))
+        stats.dispatched += 1
+
+    def _admit(self, lane: _Lane, i: int, isl: _Island,
+               req: CampaignRequest, t: CampaignTicket) -> int:
+        al = lane.allocator
+        placed = al.alloc(t.job_id, req.budget, island=i)
+        assert placed is not None, "admission called without a free row"
+        _i, row = placed
+        base_key = (jnp.asarray(req.key, jnp.uint32) if req.key is not None
+                    else jax.random.PRNGKey(req.seed))
+        if req.fid is not None:
+            fn_idx = 0
+            inst = bbob.pad_instance(
+                bbob.make_instance(req.fid, req.dim, req.instance,
+                                   lane.engine.full.cfg.jdtype),
+                lane.m_peaks)
+        else:
+            fn_idx = 1 + self.registry.index(req.fitness)
+            inst = lane.filler_inst
+        vals = {"keys": base_key, "fn_idx": fn_idx, "budgets": req.budget,
+                "insts": inst, "carry": lane._row_init(base_key)}
+        isl.arrays = lane._write_row(isl.arrays, vals, row)
+        t.status = JOB_RUNNING
+        t.lane, t.island, t.row = lane.key, i, row
+        t.admit_s = time.monotonic()
+        t.admit_boundary = self._boundary_n
+        return row
+
+    def _finalize(self, lane: _Lane, i: int, isl: _Island, row: int,
+                  job: int):
+        carry_row = jax.tree_util.tree_map(
+            lambda a: np.asarray(a[row]), isl.arrays["carry"])
+        pieces = []
+        for tr, own in isl.traces:
+            mask = own[row] == job
+            if mask.any():
+                pieces.append(jax.tree_util.tree_map(
+                    lambda a: np.asarray(a[row])[mask], tr))
+        if pieces:
+            trace = jax.tree_util.tree_map(
+                lambda *xs: np.concatenate(xs, axis=0), *pieces)
+        else:
+            trace = bucketed._empty_trace(carry_row, time_axis=0)
+        t = self.tickets[job]
+        t.result = ipop_mod._result_from_ladder(lane.engine.full, carry_row,
+                                                trace)
+        t.status = JOB_DONE
+        t.best_f = t.result.best_f
+        t.fevals = t.result.total_fevals
+        t.done_s = time.monotonic()
+        lane.allocator.release(i, row)
+        self._completed.add(job)
+
+    def _prune_traces(self, isl: _Island):
+        def live(own):
+            jobs = np.unique(own)
+            jobs = jobs[jobs >= 0]
+            return any(int(j) not in self._completed for j in jobs)
+        isl.traces = [(tr, own) for tr, own in isl.traces if live(own)]
+
+    # -- accounting -----------------------------------------------------------
+    def segment_compiles(self) -> int:
+        """Distinct segment programs used — the acceptance bound is
+        ≤ #buckets × #dim-classes (#lanes)."""
+        return sum(len(lane.used_programs) for lane in self.lanes.values())
+
+    def stats(self) -> dict:
+        return {
+            "lanes": len(self.lanes),
+            "boundaries": self._boundary_n,
+            "queued": len(self.queue),
+            "resident": self._resident_jobs(),
+            "done": len(self._completed),
+            "segment_compiles": self.segment_compiles(),
+            "program_cache": program_cache_stats(),
+        }
+
+    # -- durability -----------------------------------------------------------
+    def snapshot(self) -> int:
+        """Write a crash-resume snapshot; returns the committed step id."""
+        if not self.snapshot_dir:
+            raise ValueError("server has no snapshot_dir")
+        step = self._boundary_n
+        tree: dict = {"lanes": {}}
+        lanes_meta = []
+        for li, (key, lane) in enumerate(self.lanes.items()):
+            ltree: dict = {"islands": {}}
+            trace_T = {}
+            for i, isl in enumerate(lane.islands):
+                entry = dict(isl.arrays)
+                if isl.traces:
+                    tr = jax.tree_util.tree_map(
+                        lambda *xs: np.concatenate(
+                            [np.asarray(x) for x in xs], axis=1),
+                        *[t for t, _o in isl.traces])
+                    own = np.concatenate([o for _t, o in isl.traces], axis=1)
+                    entry["trace"] = tr
+                    entry["own"] = own
+                    trace_T[str(i)] = int(own.shape[1])
+                else:
+                    trace_T[str(i)] = 0
+                ltree["islands"][str(i)] = entry
+            tree["lanes"][str(li)] = ltree
+            lanes_meta.append({
+                "key": list(key),
+                "seg_len": {str(k): int(v) for k, v in lane.seg_len.items()},
+                "alloc": lane.allocator.to_meta(),
+                "trace_T": trace_T,
+            })
+        jobs_meta = {}
+        for jid, t in self.tickets.items():
+            jobs_meta[str(jid)] = {
+                "status": t.status, "request": t.request.to_meta(),
+                "best_f": None if not np.isfinite(t.best_f) else t.best_f,
+                "fevals": t.fevals, "island": t.island, "row": t.row,
+                "lane": None if t.lane is None else list(t.lane),
+                "admit_boundary": t.admit_boundary,
+            }
+        meta = {"config": self.config_meta(), "boundary": self._boundary_n,
+                "lanes": lanes_meta, "jobs": jobs_meta,
+                "next_job_id": max(self.tickets, default=-1) + 1}
+        store.save(self.snapshot_dir, step, tree, meta=meta)
+        return step
+
+    @classmethod
+    def restore(cls, ckpt_dir: str,
+                registry: Optional[FitnessRegistry] = None,
+                mesh=None, devices: Optional[Sequence] = None,
+                step: Optional[int] = None,
+                snapshot_every: Optional[int] = None) -> "CampaignServer":
+        """Rebuild a server from the newest committed snapshot.
+
+        ``registry`` must re-register the same custom fitness names the
+        killed server had (callables cannot be persisted).  ``mesh`` /
+        ``devices`` may differ from the writing run — the allocator re-packs
+        resident rows across the new islands (elastic re-shard); state is
+        restored exactly, so the remaining trajectory reproduces the
+        uninterrupted run bit-for-bit on the same shapes.
+        """
+        if step is None:
+            step = store.latest_step(ckpt_dir)
+            if step is None:
+                raise FileNotFoundError(f"no committed snapshot in {ckpt_dir}")
+        meta = store.load_meta(ckpt_dir, step)
+        if meta is None:
+            raise ValueError(f"snapshot step {step} has no meta.json")
+        cfg = dict(meta["config"])
+        cfg["bbob_fids"] = tuple(cfg["bbob_fids"])
+        cfg["domain"] = tuple(cfg["domain"])
+        srv = cls(registry=registry, mesh=mesh, devices=devices,
+                  snapshot_dir=ckpt_dir,
+                  snapshot_every=(snapshot_every if snapshot_every is not None
+                                  else 0), **cfg)
+        srv._boundary_n = int(meta["boundary"])
+        # fast-forward BOTH queue counters: re-queued pending entries reuse
+        # their job id in the heap's sequence slot, so fresh submissions must
+        # draw sequence numbers beyond every restored id (a collision would
+        # make heap ordering fall through to CampaignRequest comparison)
+        srv.queue._ids = itertools.count(int(meta["next_job_id"]))
+        srv.queue._seq = itertools.count(int(meta["next_job_id"]))
+
+        # tickets (completed jobs keep their summary; traces not persisted)
+        for jid_s, jm in meta["jobs"].items():
+            req = CampaignRequest.from_meta(jm["request"])
+            t = CampaignTicket(job_id=int(jid_s), request=req,
+                               status=jm["status"],
+                               best_f=(float("inf") if jm["best_f"] is None
+                                       else jm["best_f"]),
+                               fevals=jm["fevals"],
+                               admit_boundary=jm["admit_boundary"])
+            srv.tickets[t.job_id] = t
+            if t.status == JOB_DONE:
+                srv._completed.add(t.job_id)
+
+        template_tree = {"lanes": {}}
+        for li, lmeta in enumerate(meta["lanes"]):
+            key = tuple(lmeta["key"])
+            lane = srv._get_lane(key)
+            lane.seg_len = {int(k): v for k, v in lmeta["seg_len"].items()}
+            template_tree["lanes"][str(li)] = _lane_template(lane, lmeta)
+        restored = store.restore(ckpt_dir, step, template_tree)
+        restored = jax.tree_util.tree_map(np.asarray, restored)
+
+        for li, lmeta in enumerate(meta["lanes"]):
+            lane = srv.lanes[tuple(lmeta["key"])]
+            _repack_lane(srv, lane, lmeta, restored["lanes"][str(li)])
+
+        # re-queue pending jobs (preserving ids and priority order)
+        for jid, t in sorted(srv.tickets.items()):
+            if t.status == JOB_QUEUED:
+                heapq.heappush(srv.queue._heap,
+                               (-t.request.priority, jid, t.request, t))
+        return srv
+
+
+def _lane_template(lane: _Lane, lmeta: dict) -> dict:
+    """Shape/dtype template matching one lane's snapshot subtree (built for
+    the WRITING run's island grid, which may differ from ``lane``'s)."""
+    sds = jax.ShapeDtypeStruct
+    al = lmeta["alloc"]
+    Bl = int(al["rows_per_island"])
+    carry_t = jax.eval_shape(jax.vmap(lane.engine.full.init_carry),
+                             sds((Bl, 2), jnp.uint32))
+    insts_t = jax.tree_util.tree_map(
+        lambda a: sds((Bl,) + a.shape, a.dtype), lane.filler_inst)
+    out = {"islands": {}}
+    for i in range(int(al["n_islands"])):
+        entry = {"keys": sds((Bl, 2), jnp.uint32),
+                 "fn_idx": sds((Bl,), jnp.int32),
+                 "budgets": sds((Bl,), lane.fev_dt),
+                 "insts": insts_t,
+                 "carry": carry_t}
+        T = int(lmeta["trace_T"][str(i)])
+        if T:
+            st = carry_t.states
+            entry["trace"] = ladder.LadderTrace(
+                ran=sds((Bl, T, 1), jnp.bool_),
+                k_idx=sds((Bl, T, 1), jnp.int32),
+                gen=sds((Bl, T, 1), st.gen.dtype),
+                fevals=sds((Bl, T, 1), st.fevals.dtype),
+                best_f=sds((Bl, T, 1), st.best_f.dtype),
+                stop_reason=sds((Bl, T, 1), st.stop_reason.dtype),
+                stopped=sds((Bl, T, 1), jnp.bool_),
+                total_fevals=sds((Bl, T), carry_t.total_fevals.dtype),
+                global_best=sds((Bl, T), carry_t.best_f.dtype))
+            entry["own"] = sds((Bl, T), jnp.int64)
+        out["islands"][str(i)] = entry
+    return out
+
+
+def _repack_lane(srv: CampaignServer, lane: _Lane, lmeta: dict,
+                 ltree: dict):
+    """Lay a restored lane's rows out on the (possibly different) new island
+    grid and device_put each island to its device — the elastic re-shard.
+
+    Rows carry everything trajectory-relevant (base key, budget, fitness
+    index, instance, state), so moving a row between islands is a pure
+    copy; restored traces keep their per-generation ownership columns
+    (padding columns own -1 → never sliced into any job's result).
+    """
+    old_al = SlotAllocator.from_meta(lmeta["alloc"])
+    new_al, moves, layout = old_al.repack(len(srv.devices),
+                                          srv.rows_per_island)
+    lane.allocator = new_al
+    Bl = new_al.rows_per_island
+    old = [ltree["islands"][str(i)] for i in range(old_al.n_islands)]
+    operand_keys = ("keys", "fn_idx", "budgets", "insts", "carry")
+    blank = jax.tree_util.tree_map(np.asarray, lane._blank_arrays(Bl))
+
+    lane.islands = []
+    for ni, dev in enumerate(srv.devices):
+        arrays = jax.tree_util.tree_map(np.copy, blank)
+        srcs = [(nr, layout[ni][nr]) for nr in range(Bl)
+                if layout[ni][nr] is not None]
+        for nr, (oi, orow) in srcs:
+            for kk in operand_keys:
+                for d, s in zip(jax.tree_util.tree_leaves(arrays[kk]),
+                                jax.tree_util.tree_leaves(old[oi][kk])):
+                    d[nr] = s[orow]
+        isl = _Island(dev, jax.device_put(arrays, dev))
+        traced = [(nr, oi, orow) for nr, (oi, orow) in srcs
+                  if "own" in old[oi]]
+        if traced:
+            T = max(old[oi]["own"].shape[1] for _nr, oi, _r in traced)
+            ref = old[traced[0][1]]["trace"]
+            tr = jax.tree_util.tree_map(
+                lambda a: np.zeros((Bl, T) + a.shape[2:], a.dtype), ref)
+            own = np.full((Bl, T), -1, np.int64)
+            for nr, oi, orow in traced:
+                t_src = old[oi]["own"].shape[1]
+                own[nr, :t_src] = old[oi]["own"][orow]
+                for d, s in zip(jax.tree_util.tree_leaves(tr),
+                                jax.tree_util.tree_leaves(old[oi]["trace"])):
+                    d[nr, :t_src] = s[orow]
+            isl.traces = [(tr, own)]
+        lane.islands.append(isl)
+
+    # reconcile resident tickets with their new placement
+    for job, (ni, nr) in moves.items():
+        t = srv.tickets.get(job)
+        if t is not None:
+            t.lane, t.island, t.row = lane.key, ni, nr
+
+
+# ---------------------------------------------------------------------------
+# one-shot parity wrapper — the `service` backend of ipop.run_ipop
+# ---------------------------------------------------------------------------
+
+def run_service_single(fitness_fn: Callable, n: int, key,
+                       lam_start: int = 12, kmax_exp: int = 8,
+                       max_evals: int = 200_000, domain=(-5.0, 5.0),
+                       sigma0_frac: float = 0.25, impl: str = "auto",
+                       dtype: str = "float64"):
+    """One problem through a single-row campaign service — trajectory parity
+    with ``backend="bucketed"`` on the same key (tests/test_service.py)."""
+    reg = FitnessRegistry()
+    reg.register("job", fitness_fn)
+    srv = CampaignServer(registry=reg, bbob_fids=(), lam_start=lam_start,
+                         kmax_exp=kmax_exp, dtype=dtype, impl=impl,
+                         domain=domain, sigma0_frac=sigma0_frac,
+                         max_budget=max_evals, rows_per_island=1,
+                         devices=[jax.devices()[0]])
+    ticket = srv.submit(CampaignRequest(dim=n, budget=max_evals,
+                                        fitness="job", key=key))
+    srv.drain()
+    return ticket.result

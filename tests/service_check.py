@@ -1,0 +1,190 @@
+"""8-virtual-device checks for the campaign service (service/server.py).
+
+Executed as a SUBPROCESS by tests/test_service.py (and directly by the CI
+``mesh-8dev`` job): the virtual-device flag must precede jax's first import —
+same pattern as tests/mesh_check.py.
+
+Asserts, all under one 8-device XLA environment:
+
+* a service whose lanes run S2-style islands over a 4-device fleet serves a
+  heterogeneous streaming trace (mixed fids/dims/budgets/priorities + one
+  custom callable, admitted mid-flight) with per-job results equal to the
+  same trace on a single-device server — island placement is
+  trajectory-neutral;
+* the elastic re-shard path end-to-end: snapshot the 4-device server
+  mid-flight, kill it, restore onto ALL 8 devices (the allocator re-packs
+  resident rows across the doubled island grid), drain, and reproduce the
+  uninterrupted reference per job to float64 checkpoint exactness;
+* ``checkpoint/store.restore(shardings=...)`` re-places a stacked campaign
+  carry written from a 4-device mesh onto an 8-device mesh (the store-level
+  elastic re-shard the service layers on);
+* compiles stay ≤ #buckets × #dim-classes throughout;
+* the mesh engine's island-program cache serves repeat campaigns without
+  new traces (satellite: O(buckets) island bring-up).
+
+Prints ``SERVICE-CHECK-OK`` and exits 0 iff every assertion holds.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", True)
+
+import tempfile  # noqa: E402
+
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.checkpoint import store  # noqa: E402
+from repro.core import bucketed  # noqa: E402
+from repro.distributed import mesh_engine  # noqa: E402
+from repro.distributed.sharding import campaign_shardings  # noqa: E402
+from repro.launch.mesh import make_campaign_mesh  # noqa: E402
+from repro.service import (CampaignRequest, CampaignServer,  # noqa: E402
+                           FitnessRegistry)
+
+KW = dict(lam_start=8, kmax_exp=2)
+
+
+def shifted_sphere(X):
+    return jnp.sum((X - 1.2) ** 2, axis=-1)
+
+
+def make_registry():
+    reg = FitnessRegistry()
+    reg.register("shifted_sphere", shifted_sphere)
+    return reg
+
+
+def make_server(devices, **extra):
+    kw = dict(registry=make_registry(), bbob_fids=(1, 8), max_budget=5000,
+              rows_per_island=2, devices=devices, **KW)
+    kw.update(extra)
+    return CampaignServer(**kw)
+
+
+def run_trace(srv):
+    """The shared submission schedule: 4 jobs up front, 2 mid-flight."""
+    ts = [srv.submit(CampaignRequest(dim=4, fid=8, budget=3000, seed=7)),
+          srv.submit(CampaignRequest(dim=4, fid=1, budget=2200, seed=3,
+                                     priority=2)),
+          srv.submit(CampaignRequest(dim=6, fid=8, budget=2500, seed=11)),
+          srv.submit(CampaignRequest(dim=4, fitness="shifted_sphere",
+                                     budget=1500, seed=5))]
+    for _ in range(2):
+        srv.step()
+    ts += [srv.submit(CampaignRequest(dim=4, fid=1, budget=1800, seed=13)),
+           srv.submit(CampaignRequest(dim=6, fid=1, budget=1200, seed=17))]
+    return ts
+
+
+def assert_jobs_equal(ts_ref, srv, rtol=1e-12):
+    for tr in ts_ref:
+        tb = srv.tickets[tr.job_id]
+        assert tb.done, (tr.job_id, tb.status)
+        assert tr.fevals == tb.fevals, (tr.job_id, tr.fevals, tb.fevals)
+        np.testing.assert_allclose(tr.best_f, tb.best_f, rtol=rtol, atol=rtol)
+        assert len(tr.result.descents) == len(tb.result.descents)
+        for d1, d2 in zip(tr.result.descents, tb.result.descents):
+            assert d1.k_exp == d2.k_exp
+            np.testing.assert_array_equal(d1.fevals, d2.fevals)
+            np.testing.assert_allclose(d1.best_f, d2.best_f,
+                                       rtol=rtol, atol=rtol)
+
+
+def main():
+    assert jax.device_count() == 8, jax.devices()
+    devs = jax.devices()
+    n_buckets = KW["kmax_exp"] + 1
+
+    # -- single-device reference for the whole trace -------------------------
+    srv_1 = make_server([devs[0]], rows_per_island=8)
+    ts_1 = run_trace(srv_1)
+    srv_1.drain()
+
+    # -- 4-device islands serve the identical trace --------------------------
+    srv_4 = make_server(devs[:4])
+    ts_4 = run_trace(srv_4)
+    srv_4.drain()
+    for t1, t4 in zip(ts_1, ts_4):
+        assert t1.fevals == t4.fevals
+        np.testing.assert_allclose(t1.best_f, t4.best_f,
+                                   rtol=1e-5, atol=1e-7)
+        assert len(t1.result.descents) == len(t4.result.descents)
+        for d1, d4 in zip(t1.result.descents, t4.result.descents):
+            np.testing.assert_array_equal(d1.fevals, d4.fevals)
+    assert srv_4.segment_compiles() <= n_buckets * len(srv_4.lanes)
+    for lane in srv_4.lanes.values():
+        assert len(lane.islands) == 4
+    print(f"islands[4dev] OK  compiles={srv_4.segment_compiles()} "
+          f"lanes={len(srv_4.lanes)}")
+
+    # -- elastic kill-and-resume: snapshot on 4 devices, restore on 8 --------
+    ckpt = tempfile.mkdtemp(prefix="svc_ckpt_")
+    srv_a = make_server(devs[:4], snapshot_dir=ckpt)
+    ts_a = run_trace(srv_a)
+    for _ in range(2):
+        srv_a.step()
+    step = srv_a.snapshot()
+    resident_at_kill = srv_a._resident_jobs()
+    assert resident_at_kill > 0
+    del srv_a                                         # the kill
+
+    srv_8 = CampaignServer.restore(ckpt, registry=make_registry(),
+                                   devices=devs)
+    for lane in srv_8.lanes.values():
+        assert lane.allocator.n_islands == 8          # re-packed onto 8
+        assert len(lane.islands) == 8
+    assert srv_8._resident_jobs() == resident_at_kill
+    srv_8.drain()
+    assert_jobs_equal(ts_4, srv_8)                    # vs uninterrupted run
+    print(f"elastic-resume[4→8] OK  step={step} "
+          f"resident_at_kill={resident_at_kill}")
+
+    # -- store-level elastic re-shard of a stacked campaign carry ------------
+    eng = bucketed.BucketedLadderEngine(n=4, max_evals=4000, **KW)
+    keys = jnp.stack([jax.random.fold_in(jax.random.PRNGKey(0), j)
+                      for j in range(16)])
+    mesh4 = make_campaign_mesh(devices=devs[:4])
+    carry = eng._init_runner(keys)
+    carry = jax.tree_util.tree_map(
+        lambda a: jax.device_put(a, NamedSharding(mesh4, P("camp"))), carry)
+    d2 = tempfile.mkdtemp(prefix="svc_store_")
+    store.save(d2, 1, {"carry": carry}, meta={"devices": 4})
+    mesh8 = make_campaign_mesh(devices=devs)
+    template = jax.eval_shape(eng._init_runner, keys)
+    back = store.restore(d2, 1, {"carry": template},
+                         shardings={"carry": campaign_shardings(
+                             template, mesh8)})["carry"]
+    for a, b in zip(jax.tree_util.tree_leaves(carry),
+                    jax.tree_util.tree_leaves(back)):
+        assert len(b.sharding.device_set) == 8        # re-placed on 8 devices
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert store.load_meta(d2, 1) == {"devices": 4}
+    print("store-reshard[4→8] OK")
+
+    # -- mesh-engine island cache: repeat campaigns trace nothing new --------
+    mesh_engine.clear_island_program_cache()
+    kwm = dict(n=4, lam_start=8, kmax_exp=2, max_evals=5000)
+    eng1 = mesh_engine.MeshCampaignEngine(strategy="concurrent", **kwm)
+    mesh_engine.run_campaign_mesh(eng1, fids=(1, 8), instances=(1,), runs=4,
+                                  seed=0)
+    s1 = mesh_engine.island_cache_stats()
+    eng2 = mesh_engine.MeshCampaignEngine(strategy="concurrent", **kwm)
+    res2 = mesh_engine.run_campaign_mesh(eng2, fids=(1, 8), instances=(1,),
+                                         runs=4, seed=1)
+    s2 = mesh_engine.island_cache_stats()
+    assert s2["traces"] == s1["traces"], (s1, s2)     # O(buckets) bring-up
+    assert s2["hits"] > s1["hits"]
+    assert 1 <= res2.compiles <= n_buckets
+    print(f"island-cache OK  {s2}")
+
+    print("SERVICE-CHECK-OK")
+
+
+if __name__ == "__main__":
+    main()

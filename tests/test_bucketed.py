@@ -144,6 +144,35 @@ def test_run_ipop_bucketed_backend_matches_ladder():
     np.testing.assert_allclose(r_l.best_f, r_b.best_f, rtol=1e-5, atol=1e-7)
 
 
+def test_overlap_driver_is_trajectory_identical():
+    """Double-buffered dispatch (satellite): the speculative next-segment
+    dispatch either lands (same bucket — its output IS what the unoverlapped
+    driver would compute) or is discarded, so the two drivers must agree on
+    every trace field; the host sync is recorded per segment and most
+    boundaries keep the bucket (spec hits)."""
+    eng = bucketed.BucketedLadderEngine(**KW)
+    res = bucketed.run_campaign_bucketed(eng, fids=(1, 8), instances=(1,),
+                                         runs=2, seed=0)
+    eng_o = bucketed.BucketedLadderEngine(overlap=True, **KW)
+    res_o = bucketed.run_campaign_bucketed(eng_o, fids=(1, 8), instances=(1,),
+                                           runs=2, seed=0)
+    np.testing.assert_array_equal(res.total_fevals, res_o.total_fevals)
+    for field in ("ran", "k_idx", "gen", "fevals", "stop_reason", "stopped"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(res.trace, field)),
+            np.asarray(getattr(res_o.trace, field)), err_msg=field)
+    np.testing.assert_allclose(res.trace.best_f, res_o.trace.best_f,
+                               rtol=1e-12, atol=1e-12)
+    # same bucket schedule, spec bookkeeping present, hits happen
+    assert [s["bucket"] for s in res.segments] == \
+        [s["bucket"] for s in res_o.segments]
+    assert all("spec_hit" in s and "sync_s" in s for s in res_o.segments)
+    if len(res_o.segments) > 1:
+        assert any(s["spec_hit"] for s in res_o.segments)
+    assert not any("spec_hit" in s for s in res.segments)
+    assert res_o.compiles <= KW["kmax_exp"] + 1
+
+
 # ---------------------------------------------------------------------------
 # bucket configs (params.bucket_config)
 # ---------------------------------------------------------------------------

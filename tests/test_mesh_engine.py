@@ -99,6 +99,38 @@ def test_unknown_strategy_rejected():
         mesh_engine.MeshCampaignEngine(n=3, strategy="barrier-free")
 
 
+def test_island_program_cache_reuses_across_engines():
+    """Satellite: island bring-up is O(buckets) — a second campaign (new
+    engine instance, same bucket shapes + mesh) reuses every island program
+    from the module-level compilation cache instead of re-tracing."""
+    mesh_engine.clear_island_program_cache()
+    eng1, res1 = _mesh_campaign("concurrent")
+    s1 = mesh_engine.island_cache_stats()
+    assert s1["traces"] >= 1 and s1["programs"] == s1["traces"]
+    eng2, res2 = _mesh_campaign("concurrent", seed=1)
+    s2 = mesh_engine.island_cache_stats()
+    assert s2["traces"] == s1["traces"], (s1, s2)   # zero new traces
+    assert s2["hits"] > s1["hits"]
+    # per-engine accounting still bounds per-campaign compiles
+    assert 1 <= res2.compiles <= KW["kmax_exp"] + 1
+    assert eng1._island_keys == eng2._island_keys
+    # a generic-fitness single run keys by the closure object: two calls with
+    # distinct closures never share a program (no stale-fitness replay)
+    from repro.fitness import bbob
+    inst = bbob.make_instance(1, 4, 1)
+    eng3 = mesh_engine.MeshCampaignEngine(strategy="concurrent", **KW)
+    before = mesh_engine.island_cache_stats()["programs"]
+    mesh_engine.run_mesh_single(eng3, jax.random.PRNGKey(0),
+                                lambda X: bbob.evaluate(1, inst, X))
+    mid = mesh_engine.island_cache_stats()["programs"]
+    assert mid > before
+    eng4 = mesh_engine.MeshCampaignEngine(strategy="concurrent", **KW)
+    mesh_engine.run_mesh_single(eng4, jax.random.PRNGKey(0),
+                                lambda X: bbob.evaluate(1, inst, X))
+    after = mesh_engine.island_cache_stats()["programs"]
+    assert after > mid
+
+
 @pytest.mark.timeout(540)
 def test_mesh_equivalence_on_8_virtual_devices():
     """The acceptance suite: trajectory/ECDF equivalence of both strategies

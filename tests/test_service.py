@@ -1,0 +1,364 @@
+"""Campaign service (src/repro/service/).
+
+Covers the PR's acceptance bar in the fast tier:
+
+* end-to-end: heterogeneous requests (mixed dims, budgets, arrival times,
+  a non-BBOB callable) admitted MID-FLIGHT into running lanes all complete,
+  each with a per-job trajectory equivalent to a standalone
+  ``run_ipop(backend="bucketed")`` on the shared key schedule;
+* no per-request recompilation: segment compiles stay ≤ #buckets ×
+  #dim-classes, and an extra same-class request adds zero programs;
+* kill-and-resume: a snapshot (stacked ``CMAState`` + allocator map through
+  checkpoint/store.py) restores into a fresh server that reproduces the
+  uninterrupted run's remaining trajectory;
+* admission-queue backpressure/priority, slot-allocator bitmap/repack,
+  early target retirement, and the ``run_ipop(backend="service")`` wiring.
+
+The REAL multi-device suite (S2-style islands on an 8-virtual-device fleet,
+elastic 4→8 re-shard restore) runs as a subprocess — tests/service_check.py,
+same pattern as tests/mesh_check.py — and in-process in the CI
+``mesh-8dev`` job.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import store
+from repro.core.ipop import run_ipop
+from repro.fitness import bbob
+from repro.service import (AdmissionQueue, CampaignRequest, CampaignServer,
+                           FitnessRegistry, QueueFull, SlotAllocator)
+
+KW = dict(lam_start=8, kmax_exp=2)
+
+
+def shifted_sphere(X):
+    return jnp.sum((X - 1.2) ** 2, axis=-1)
+
+
+def make_registry():
+    reg = FitnessRegistry()
+    reg.register("shifted_sphere", shifted_sphere)
+    return reg
+
+
+def make_server(**extra):
+    kw = dict(registry=make_registry(), bbob_fids=(1, 8), max_budget=5000,
+              rows_per_island=2, **KW)
+    kw.update(extra)
+    return CampaignServer(**kw)
+
+
+def assert_matches_standalone(ticket, fitness_fn, dim, seed):
+    """Per-job trajectory equivalence with run_ipop(backend='bucketed')."""
+    ref = run_ipop(fitness_fn, dim, jax.random.PRNGKey(seed),
+                   backend="bucketed", max_evals=ticket.request.budget, **KW)
+    res = ticket.result
+    assert res is not None and ticket.done
+    assert ref.total_fevals == res.total_fevals
+    assert len(ref.descents) == len(res.descents)
+    for dr, ds in zip(ref.descents, res.descents):
+        assert dr.k_exp == ds.k_exp and dr.lam == ds.lam
+        np.testing.assert_array_equal(dr.fevals, ds.fevals)
+        np.testing.assert_array_equal(dr.gens, ds.gens)
+        assert dr.stop_reason == ds.stop_reason
+        np.testing.assert_allclose(dr.best_f, ds.best_f,
+                                   rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(ref.best_f, res.best_f, rtol=1e-5, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# the acceptance test: heterogeneous streaming admission
+# ---------------------------------------------------------------------------
+
+def test_end_to_end_heterogeneous_mid_flight_admission():
+    srv = make_server()
+    # two jobs up front (dim-4 lane fills both rows of its island)
+    t_a = srv.submit(CampaignRequest(dim=4, fid=8, budget=3000, seed=7))
+    t_b = srv.submit(CampaignRequest(dim=4, fid=1, budget=2000, seed=3))
+    for _ in range(2):
+        srv.step()                      # lane is mid-flight now
+    # mid-flight arrivals: a custom callable, a new dim-class, and a third
+    # dim-4 job that must WAIT for a freed row (slot reuse)
+    t_c = srv.submit(CampaignRequest(dim=4, fitness="shifted_sphere",
+                                     budget=1500, seed=5))
+    t_d = srv.submit(CampaignRequest(dim=6, fid=8, budget=2500, seed=11))
+    t_e = srv.submit(CampaignRequest(dim=4, fid=1, budget=1200, seed=13))
+    srv.drain()
+
+    for t in (t_a, t_b, t_c, t_d, t_e):
+        assert t.done, t.status
+        assert t.updates, "ticket never streamed progress"
+        assert t.fevals <= t.request.budget
+
+    # per-job trajectory equivalence with standalone runs on the same keys
+    inst8_4 = bbob.make_instance(8, 4, 1)
+    inst1_4 = bbob.make_instance(1, 4, 1)
+    inst8_6 = bbob.make_instance(8, 6, 1)
+    assert_matches_standalone(
+        t_a, lambda X: bbob.evaluate(8, inst8_4, X), 4, 7)
+    assert_matches_standalone(
+        t_b, lambda X: bbob.evaluate(1, inst1_4, X), 4, 3)
+    assert_matches_standalone(t_c, shifted_sphere, 4, 5)
+    assert_matches_standalone(
+        t_d, lambda X: bbob.evaluate(8, inst8_6, X), 6, 11)
+    assert_matches_standalone(
+        t_e, lambda X: bbob.evaluate(1, inst1_4, X), 4, 13)
+
+    # compile bound: ≤ #buckets × #dim-classes, and admission never recompiles
+    n_buckets = KW["kmax_exp"] + 1
+    compiles = srv.segment_compiles()
+    assert 1 <= compiles <= n_buckets * len(srv.lanes)
+    t_f = srv.submit(CampaignRequest(dim=4, fid=8, budget=1000, seed=17))
+    srv.drain()
+    assert t_f.done
+    assert srv.segment_compiles() == compiles   # zero new programs
+
+
+def test_run_ipop_service_backend_matches_bucketed():
+    inst = bbob.make_instance(8, 4, 1)
+    fit = lambda X: bbob.evaluate(8, inst, X)
+    kw = dict(lam_start=8, kmax_exp=2, max_evals=4000)
+    r_b = run_ipop(fit, 4, jax.random.PRNGKey(7), backend="bucketed", **kw)
+    r_s = run_ipop(fit, 4, jax.random.PRNGKey(7), backend="service", **kw)
+    assert r_b.total_fevals == r_s.total_fevals
+    assert len(r_b.descents) == len(r_s.descents)
+    for db, ds in zip(r_b.descents, r_s.descents):
+        assert db.k_exp == ds.k_exp
+        np.testing.assert_array_equal(db.fevals, ds.fevals)
+        assert db.stop_reason == ds.stop_reason
+    np.testing.assert_allclose(r_b.best_f, r_s.best_f, rtol=1e-5, atol=1e-7)
+    with pytest.raises(ValueError, match="total_gens"):
+        run_ipop(fit, 4, jax.random.PRNGKey(7), backend="service",
+                 total_gens=10, **kw)
+
+
+def test_target_early_retirement():
+    srv = make_server()
+    # a target the very first generations reach: the job retires long before
+    # its budget (stop_at-style early sharing, per job)
+    t = srv.submit(CampaignRequest(dim=4, fid=1, budget=5000, seed=0,
+                                   target=1e3))
+    srv.drain()
+    assert t.done
+    assert t.best_f <= 1e3
+    assert t.fevals < 5000
+
+
+# ---------------------------------------------------------------------------
+# kill-and-resume (satellite: checkpoint round-trip of campaign state)
+# ---------------------------------------------------------------------------
+
+def _submit_resume_jobs(srv):
+    return [srv.submit(CampaignRequest(dim=4, fid=8, budget=3000, seed=7)),
+            srv.submit(CampaignRequest(dim=4, fid=1, budget=2500, seed=3)),
+            srv.submit(CampaignRequest(dim=4, fitness="shifted_sphere",
+                                       budget=1500, seed=5))]
+
+
+def test_snapshot_kill_resume_reproduces_trajectory(tmp_path):
+    ref = make_server(rows_per_island=3)
+    ts_ref = _submit_resume_jobs(ref)
+    ref.drain()
+
+    d = str(tmp_path / "ckpt")
+    srv = make_server(rows_per_island=3, snapshot_dir=d)
+    ts = _submit_resume_jobs(srv)
+    for _ in range(3):
+        srv.step()
+    step = srv.snapshot()
+    assert store.latest_step(d) == step
+    assert store.load_meta(d, step)["boundary"] == 3
+    del srv                                     # the "kill"
+
+    srv2 = CampaignServer.restore(d, registry=make_registry())
+    assert srv2._resident_jobs() == 3           # allocator map round-tripped
+    srv2.drain()
+    for tr in ts_ref:
+        tb = srv2.tickets[tr.job_id]
+        assert tb.done
+        assert tr.fevals == tb.fevals
+        np.testing.assert_allclose(tr.best_f, tb.best_f,
+                                   rtol=1e-12, atol=1e-12)
+        # the remaining trajectory is reproduced: full descent structure
+        assert len(tr.result.descents) == len(tb.result.descents)
+        for d1, d2 in zip(tr.result.descents, tb.result.descents):
+            assert d1.k_exp == d2.k_exp
+            np.testing.assert_array_equal(d1.fevals, d2.fevals)
+            np.testing.assert_allclose(d1.best_f, d2.best_f,
+                                       rtol=1e-12, atol=1e-12)
+    del ts
+
+
+def test_restore_requeues_pending_and_accepts_new_jobs(tmp_path):
+    """A job still QUEUED at snapshot time rides the meta and is re-queued on
+    restore with its id preserved; fresh submissions after the restore must
+    not collide with the re-queued heap entries (the queue's sequence counter
+    fast-forwards past every restored id) and everything drains."""
+    d = str(tmp_path / "ckpt")
+    srv = make_server(rows_per_island=1, snapshot_dir=d)
+    t0 = srv.submit(CampaignRequest(dim=4, fid=1, budget=1200, seed=0))
+    t1 = srv.submit(CampaignRequest(dim=4, fid=8, budget=1200, seed=1))
+    srv.step()                          # t0 admitted; t1 queued (1 row)
+    assert t1.status == "queued"
+    srv.snapshot()
+    del srv
+
+    srv2 = CampaignServer.restore(d, registry=make_registry())
+    assert [t.job_id for t in srv2.queue.pending()] == [t1.job_id]
+    # two fresh submissions: the second would have reused sequence number 1
+    # (== t1's restored slot) before the counter fast-forward
+    t2 = srv2.submit(CampaignRequest(dim=4, fid=1, budget=1000, seed=2))
+    t3 = srv2.submit(CampaignRequest(dim=4, fid=1, budget=1000, seed=3))
+    assert len(srv2.queue.pending()) == 3   # sorts without comparing requests
+    srv2.drain()
+    for t in (t2, t3):
+        assert t.done and t.latency_s() is not None
+    resumed = srv2.tickets[t1.job_id]
+    assert resumed.done
+    assert resumed.latency_s() is None      # timestamps don't ride snapshots
+
+
+def test_unplaceable_job_is_rejected_not_hung():
+    srv = make_server(max_lanes=1)
+    t_ok = srv.submit(CampaignRequest(dim=4, fid=1, budget=1000, seed=0))
+    t_no = srv.submit(CampaignRequest(dim=6, fid=1, budget=1000, seed=1))
+    srv.drain()                         # must terminate, not RuntimeError
+    assert t_ok.done
+    assert t_no.status == "rejected"
+
+
+def test_program_cache_evicts_closure_keyed_entries():
+    from repro.distributed.mesh_engine import ProgramCache
+    pc = ProgramCache(max_closure_entries=2)
+    for j in range(4):                  # closure-keyed: capped at 2
+        pc.get(("x", (lambda X: X), j), lambda: object())
+    for j in range(4):                  # static keys: never evicted
+        pc.get(("static", j), lambda: object())
+    snap = pc.snapshot()
+    assert snap["traces"] == 8 and snap["programs"] == 6
+    pc.get(("static", 0), lambda: object())
+    assert pc.snapshot()["hits"] == 1
+
+
+def test_store_roundtrip_of_stacked_carry_and_allocator(tmp_path):
+    """checkpoint/store.py round-trip of the raw campaign state pieces —
+    stacked CMAState carry + allocator map — independent of the server."""
+    from repro.core import bucketed as bmod
+    eng = bmod.BucketedLadderEngine(n=4, max_evals=4000, **KW)
+    keys = jnp.stack([jax.random.fold_in(jax.random.PRNGKey(0), j)
+                      for j in range(4)])
+    carry = eng._init_runner(keys)
+    al = SlotAllocator(2, 2)
+    al.alloc(10, 1000)
+    al.alloc(11, 2000)
+    d = str(tmp_path / "ck")
+    store.save(d, 5, {"carry": carry}, meta={"alloc": al.to_meta()})
+    meta = store.load_meta(d, 5)
+    al2 = SlotAllocator.from_meta(meta["alloc"])
+    assert al2.occupied() == al.occupied()
+    assert [list(b) for b in al2.budgets] == [list(b) for b in al.budgets]
+    template = jax.eval_shape(eng._init_runner, keys)
+    back = store.restore(d, 5, {"carry": template})["carry"]
+    for a, b in zip(jax.tree_util.tree_leaves(carry),
+                    jax.tree_util.tree_leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# queue + allocator units
+# ---------------------------------------------------------------------------
+
+def test_queue_backpressure_and_priority():
+    q = AdmissionQueue(max_pending=2)
+    r_lo = CampaignRequest(dim=4, fid=1, budget=100, priority=0)
+    r_hi = CampaignRequest(dim=4, fid=1, budget=100, priority=5)
+    t1 = q.submit(r_lo)
+    t2 = q.submit(r_hi)
+    with pytest.raises(QueueFull):
+        q.submit(CampaignRequest(dim=4, fid=1, budget=100))
+    # priority first, FIFO within a priority
+    req, t = q.take()
+    assert t is t2 and req.priority == 5
+    req, t = q.take()
+    assert t is t1
+    assert q.take() is None
+    # predicate-matched take skips non-matching higher-priority entries
+    q2 = AdmissionQueue()
+    q2.submit(CampaignRequest(dim=8, fid=1, budget=100, priority=9))
+    tb = q2.submit(CampaignRequest(dim=4, fid=1, budget=100, priority=0))
+    req, t = q2.take(lambda r: r.dim == 4)
+    assert t is tb and len(q2) == 1
+
+
+def test_request_validation():
+    with pytest.raises(ValueError, match="exactly one"):
+        CampaignRequest(dim=4, budget=100).validate()
+    with pytest.raises(ValueError, match="exactly one"):
+        CampaignRequest(dim=4, budget=100, fid=1,
+                        fitness="x").validate()
+    srv = make_server()
+    with pytest.raises(ValueError, match="max_budget"):
+        srv.submit(CampaignRequest(dim=4, fid=1, budget=10 ** 9))
+    with pytest.raises(ValueError, match="menu"):
+        srv.submit(CampaignRequest(dim=4, fid=24, budget=100))
+    with pytest.raises(ValueError, match="unknown fitness"):
+        srv.submit(CampaignRequest(dim=4, fitness="nope", budget=100))
+    with pytest.raises(RuntimeError, match="frozen"):
+        srv.registry.register("late", shifted_sphere)
+
+
+def test_allocator_bitmap_and_repack():
+    al = SlotAllocator(2, 2)
+    spots = [al.alloc(j, 100 * (j + 1)) for j in range(4)]
+    assert None not in spots and al.free_rows() == 0
+    assert al.alloc(9, 1) is None               # full
+    al.release(*spots[1])
+    assert al.free_rows() == 1
+    al.alloc(9, 900)
+    # repack 2×2 → 4×1: every resident job lands exactly once, budgets ride
+    occ = al.occupied()
+    new, moves, layout = al.repack(4, 1)
+    assert sorted(moves) == sorted(j for (_i, _r, j) in occ)
+    assert new.capacity == 4 and new.free_rows() == 0
+    placed = {int(j): int(new.budgets[i][r]) for i, r, j in new.occupied()}
+    want = {int(j): int(al.budgets[i][r]) for i, r, j in occ}
+    assert placed == want
+    # layout names the old cell every occupied new cell pulls from
+    filled = [src for isl in layout for src in isl if src is not None]
+    assert sorted(filled) == sorted((i, r) for i, r, _j in occ)
+    with pytest.raises(ValueError, match="repack"):
+        al.repack(1, 2)                         # 4 jobs into 2 rows
+
+
+def test_zero_budget_job_completes_empty():
+    srv = make_server()
+    t = srv.submit(CampaignRequest(dim=4, fid=1, budget=4, seed=0))
+    srv.drain()
+    assert t.done and t.fevals == 0
+    assert t.result.descents == []
+
+
+# ---------------------------------------------------------------------------
+# the 8-virtual-device suite (subprocess, mesh_check pattern)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.timeout(540)
+def test_service_on_8_virtual_devices():
+    """S2-style lane islands over a real multi-device fleet + elastic 4→8
+    re-shard restore — asserted inside tests/service_check.py under
+    XLA_FLAGS=--xla_force_host_platform_device_count=8."""
+    script = os.path.join(os.path.dirname(__file__), "service_check.py")
+    env = dict(os.environ)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    src = os.path.join(root, "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, script], env=env,
+                          capture_output=True, text=True, timeout=520)
+    assert proc.returncode == 0, proc.stdout + "\n" + proc.stderr
+    assert "SERVICE-CHECK-OK" in proc.stdout
