@@ -20,6 +20,21 @@ the CI container measure host/dispatch efficiency at identical work, not
 hardware scaling — same caveat as BENCH_mesh.json.
 
   PYTHONPATH=src python -m benchmarks.bench_service [--jobs 8] [--dims 4,6]
+
+``--soak`` switches to the sustained-load harness instead of the A/B: a
+Poisson arrival trace of ``--soak-jobs`` mixed jobs streams through one
+long-lived server on ALL local devices (one island per device per lane —
+under the CI mesh-8dev job this exercises 8 islands), after a warm pass
+that populates the program cache (the steady state a real service runs in).
+The ``soak`` section merged into BENCH_service.json records p50/p95/p99
+completion latency, sustained useful-evals/s, max queue depth and rejected
+count; ``--slo-p99-s`` / ``--slo-min-evals-per-s`` turn it into an
+assertion (exit 1 on violation — the CI soak-smoke gate), and
+``--metrics-out`` tees the per-round ``repro.obs`` series to a JSONL file
+(docs/METRICS.md walks through reading one).
+
+  PYTHONPATH=src python -m benchmarks.bench_service --soak \
+      [--soak-jobs 24] [--arrive-every 1] [--slo-p99-s 60]
 """
 from __future__ import annotations
 
@@ -42,6 +57,17 @@ def _parser():
                     help="one arrival per N service rounds")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="BENCH_service.json")
+    ap.add_argument("--soak", action="store_true",
+                    help="run the sustained-load soak harness instead of "
+                         "the service-vs-sequential A/B")
+    ap.add_argument("--soak-jobs", type=int, default=24,
+                    help="jobs in the soak arrival trace")
+    ap.add_argument("--slo-p99-s", type=float, default=None,
+                    help="assert soak p99 completion latency <= this")
+    ap.add_argument("--slo-min-evals-per-s", type=float, default=None,
+                    help="assert soak sustained useful-evals/s >= this")
+    ap.add_argument("--metrics-out", default=None,
+                    help="tee per-round obs metrics JSONL here (soak mode)")
     return ap
 
 
@@ -50,12 +76,134 @@ def _percentile(xs, q):
     return float(np.percentile(np.asarray(xs, float), q)) if xs else None
 
 
+def _check_slo(soak: dict, p99_s, min_evals_per_s) -> list:
+    """SLO violations of one soak record (empty = pass).  Pure so the CI
+    gate's logic is unit-testable without a soak run."""
+    out = []
+    if p99_s is not None and soak["latency_p99_s"] > p99_s:
+        out.append(f"p99 completion latency {soak['latency_p99_s']}s "
+                   f"exceeds SLO {p99_s}s")
+    if min_evals_per_s is not None and soak["evals_per_s"] < min_evals_per_s:
+        out.append(f"sustained {soak['evals_per_s']} useful-evals/s below "
+                   f"SLO {min_evals_per_s}")
+    return out
+
+
+def _run_soak(args):
+    """The sustained-load harness: Poisson arrivals through one long-lived
+    multi-island server; returns the BENCH_service.json ``soak`` record."""
+    import jax
+    import numpy as np
+
+    from repro.service import (CampaignRequest, CampaignServer, QueueFull)
+
+    rng = np.random.default_rng(args.seed)
+    dims = [int(d) for d in args.dims.split(",")]
+    fids = tuple(int(f) for f in args.fids.split(","))
+    kw = dict(lam_start=args.lam_start, kmax_exp=args.kmax)
+    gaps = rng.exponential(scale=float(args.arrive_every),
+                           size=args.soak_jobs)
+    arrive = np.floor(np.cumsum(gaps)).astype(int)
+    jobs = [{
+        "dim": int(rng.choice(dims)),
+        "fid": int(rng.choice(fids)),
+        "budget": int(args.budget * rng.uniform(0.5, 1.5)),
+        "seed": int(rng.integers(0, 2 ** 31)),
+        "arrive_round": int(arrive[j]),
+    } for j in range(args.soak_jobs)]
+    max_budget = max(j["budget"] for j in jobs)
+
+    def make_server(metrics_out=None):
+        return CampaignServer(bbob_fids=fids, max_budget=max_budget,
+                              rows_per_island=args.rows_per_island,
+                              devices=jax.devices(),
+                              metrics_out=metrics_out, **kw)
+
+    # warm pass: one job per dim class through an identically-configured
+    # server traces every program into the module-level cache, so the
+    # measured pass sees the long-lived service's steady state
+    warm = make_server()
+    for d in dims:
+        warm.submit(CampaignRequest(dim=d, fid=fids[0], budget=max_budget))
+    warm.drain()
+
+    srv = make_server(metrics_out=args.metrics_out)
+    t0 = time.perf_counter()
+    pending, tickets = list(jobs), []
+    rnd = rejected = max_depth = 0
+    while True:
+        while pending and pending[0]["arrive_round"] <= rnd:
+            spec = pending[0]
+            try:
+                tickets.append(srv.submit(CampaignRequest(
+                    dim=spec["dim"], fid=spec["fid"],
+                    budget=spec["budget"], seed=spec["seed"])))
+                pending.pop(0)
+            except QueueFull:
+                rejected += 1       # backpressure observed; retry next round
+                break
+        stats = srv.step()
+        rnd += 1
+        max_depth = max(max_depth, len(srv.queue))
+        if (not stats.progressed() and not pending
+                and not len(srv.queue) and not srv._resident_jobs()):
+            break
+    wall = time.perf_counter() - t0
+    lats = [t.latency_s() for t in tickets if t.latency_s() is not None]
+    useful = sum(t.fevals for t in tickets if t.done)
+    return {
+        "jobs": args.soak_jobs,
+        "dims": dims, "fids": list(fids), "budget": args.budget,
+        "n_devices": len(jax.devices()),
+        "rounds": rnd,
+        "wall_s": round(wall, 4),
+        "useful_evals": int(useful),
+        "evals_per_s": round(useful / max(wall, 1e-9), 1),
+        "latency_p50_s": round(_percentile(lats, 50), 4),
+        "latency_p95_s": round(_percentile(lats, 95), 4),
+        "latency_p99_s": round(_percentile(lats, 99), 4),
+        "max_queue_depth": int(max_depth),
+        "backpressure_rejects": int(rejected),
+        "completed": sum(t.done for t in tickets),
+        "segment_compiles": srv.segment_compiles(),
+        "lanes": len(srv.lanes),
+    }
+
+
+def _merge_out(path: str, key: str, section: dict):
+    """Merge one section into the (possibly existing) BENCH json so the A/B
+    and soak results ride the same artifact file."""
+    try:
+        with open(path) as fh:
+            out = json.load(fh)
+    except (FileNotFoundError, json.JSONDecodeError):
+        out = {}
+    out[key] = section
+    with open(path, "w") as fh:
+        json.dump(out, fh, indent=2)
+    return out
+
+
 def main(argv=None):
     args = _parser().parse_args(argv)
 
     import jax
 
     jax.config.update("jax_enable_x64", True)
+
+    if args.soak:
+        soak = _run_soak(args)
+        _merge_out(args.out, "soak", soak)
+        print(json.dumps({"soak": soak}, indent=2))
+        print(f"[bench_service] merged soak results into {args.out}")
+        violations = _check_slo(soak, args.slo_p99_s,
+                                args.slo_min_evals_per_s)
+        for v in violations:
+            print(f"[bench_service] SLO VIOLATION: {v}", file=sys.stderr)
+        if not violations and (args.slo_p99_s is not None
+                               or args.slo_min_evals_per_s is not None):
+            print("[bench_service] SLO check passed")
+        return 1 if violations else 0
 
     import numpy as np
 
@@ -158,8 +306,10 @@ def main(argv=None):
         "latency_p95": round(out["sequential"]["latency_p95_s"]
                              / max(out["service"]["latency_p95_s"], 1e-9), 3),
     }
-    with open(args.out, "w") as fh:
-        json.dump(out, fh, indent=2)
+    # merge (not overwrite) so a prior --soak section on the same artifact
+    # file survives the A/B refresh and vice versa
+    for k, v in out.items():
+        _merge_out(args.out, k, v)
     print(json.dumps({"service": out["service"],
                       "sequential": out["sequential"],
                       "speedup": out["speedup"]}, indent=2))

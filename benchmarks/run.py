@@ -66,6 +66,17 @@ def main(argv=None):
         bench_service.main(["--jobs", "6", "--dims", "4,6", "--fids", "1,8",
                             "--budget", "3000", "--lam-start", "8",
                             "--kmax", "2", "--out", "BENCH_service.json"])
+        section("Smoke — service soak (sustained load, SLO-gated)")
+        # merges a `soak` section into the same BENCH_service.json artifact;
+        # the generous p99 bound is an is-it-alive gate on CI CPUs, not a
+        # hardware claim
+        rc = bench_service.main(["--soak", "--soak-jobs", "8",
+                                 "--dims", "4,6", "--fids", "1,8",
+                                 "--budget", "2000", "--lam-start", "8",
+                                 "--kmax", "2", "--slo-p99-s", "300",
+                                 "--out", "BENCH_service.json"])
+        if rc:
+            return rc
         print(f"\n[benchmarks.run] total {time.time() - t0:.1f}s")
         return 0
 

@@ -48,6 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import ladder
 from repro.core.params import bucket_config, default_max_iter, ladder_params
 from repro.fitness import bbob
@@ -311,14 +312,23 @@ def drive_segments(engine: BucketedLadderEngine, carry: ladder.LadderCarry,
     or park them).  ``dispatch`` must not block on its own outputs for
     overlap to help (the mesh S1 driver forces its psum scalars, so it pins
     ``overlap=False``).
+
+    Observability: the loop emits the ``bucketed_*`` series of
+    ``repro.obs.schema`` — segment wall, boundary sync, speculative-dispatch
+    hit/miss, useful vs padded evaluations and eigh-block counts — from
+    values that are ALREADY host-side here (the pull's np arrays and the
+    perf_counter deltas), so instrumentation adds no device syncs and no
+    recompiles (guarded in tests/test_obs.py).
     """
     pull = pull_schedule if pull is None else pull
     overlap = bool(engine.overlap) if overlap is None else bool(overlap)
+    reg = obs.metrics()
     seg_traces: List[ladder.LadderTrace] = []
     segments: List[dict] = []
     bucket_wall: Dict[int, float] = {}
     seg_len: Dict[int, int] = {}        # one segment length per bucket/campaign
     k_prev: Optional[int] = None
+    fev_prev: Optional[float] = None    # pulled-budget sum at the last boundary
 
     for _ in range(max_segments):
         spec = None
@@ -329,6 +339,12 @@ def drive_segments(engine: BucketedLadderEngine, carry: ladder.LadderCarry,
         t0 = time.perf_counter()
         k_idx, active, fevals, best_f = pull(carry)
         sync_s = time.perf_counter() - t0
+        reg.histogram("bucketed_sync_s").observe(sync_s)
+        fev_sum = float(np.sum(fevals))
+        if fev_prev is not None:
+            reg.counter("bucketed_useful_evals_total").inc(
+                max(0.0, fev_sum - fev_prev))
+        fev_prev = fev_sum
         if segments:
             # the pull reflects the PREVIOUS segment's result — attach its
             # post-segment best there (finite by then; None keeps the record
@@ -355,6 +371,15 @@ def drive_segments(engine: BucketedLadderEngine, carry: ladder.LadderCarry,
             # rides the pull instead
             seg["sync_s"] = round(sync_s, 5)
             seg["spec_hit"] = hit
+        if spec is not None:
+            reg.counter("bucketed_spec_dispatch_total",
+                        outcome="hit" if hit else "miss").inc()
+        reg.counter("bucketed_segments_total", bucket=k).inc()
+        reg.histogram("bucketed_segment_wall_s", bucket=k).observe(wall)
+        reg.counter("bucketed_padded_evals_total", bucket=k).inc(
+            int(np.size(k_idx)) * seg_len[k] * (2 ** k) * engine.lam_start)
+        reg.counter("bucketed_eigh_blocks_total", bucket=k).inc(
+            seg_len[k] // engine.interval)
         segments.append(seg)
         bucket_wall[k] = bucket_wall.get(k, 0.0) + wall + \
             (sync_s if overlap else 0.0)

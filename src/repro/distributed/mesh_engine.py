@@ -59,6 +59,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 import numpy as np
 
+from repro import obs
 from repro.core import bucketed, ladder
 from repro.core.eval_dispatch import shard_map_compat
 from repro.distributed.sharding import campaign_shardings
@@ -349,13 +350,24 @@ class MeshCampaignEngine:
                 lambda a: jax.device_put(a, shd), insts)
         local_cache = None if fitness_fn is None else {}
         exchange: List[dict] = []
+        reg = obs.metrics()
 
         def dispatch(k, seg_gens, c):
             runner = self.ordered_runner(k, seg_gens, branch_fids,
                                          fitness_fn, cache=local_cache)
             args = (keys, c) if insts is None else (keys, insts, c)
+            t0 = time.perf_counter()
             c, tr, g_fev, g_best = runner(*args)
-            exchange.append({"bucket": int(k), "global_fevals": int(g_fev),
+            reg.histogram("mesh_island_dispatch_s", strategy="ordered",
+                          island="all").observe(time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            g_fev = int(g_fev)          # forces the psum'd exchange scalars
+            reg.histogram("mesh_exchange_s",
+                          strategy="ordered").observe(
+                              time.perf_counter() - t0)
+            reg.counter("mesh_exchange_rounds_total",
+                        strategy="ordered").inc()
+            exchange.append({"bucket": int(k), "global_fevals": g_fev,
                              "global_best": _finite_or_none(g_best)})
             return c, tr
 
@@ -397,13 +409,17 @@ class MeshCampaignEngine:
         seg_len: Dict[int, int] = {}    # shared per bucket: compiles ≤ #buckets
         bucket_wall: Dict[int, float] = {}
         exchange: List[dict] = []
+        reg = obs.metrics()
         for rnd in range(max_segments):
             dispatched = retired = finished = 0
             for s, sh in enumerate(shards):
                 if sh["done"]:
                     continue
+                t0 = time.perf_counter()
                 k_idx, active, fevals, best_f = bucketed.pull_schedule(
                     sh["carry"])                 # blocks on THIS island only
+                reg.histogram("mesh_island_block_s",
+                              island=s).observe(time.perf_counter() - t0)
                 sh["best"] = float(best_f.min())
                 sh["fevals"] = int(fevals.sum())
                 if self.stop_at is not None and \
@@ -413,6 +429,8 @@ class MeshCampaignEngine:
                     # of dispatching another segment — S2's early sharing
                     sh["done"] = True
                     retired += 1
+                    reg.counter("mesh_retirements_total",
+                                reason="target").inc()
                     continue
                 # shard-local re-bucketing: the same decision the
                 # single-device driver makes, over this island's slice only
@@ -421,6 +439,8 @@ class MeshCampaignEngine:
                 if k is None:
                     sh["done"] = True
                     finished += 1
+                    reg.counter("mesh_retirements_total",
+                                reason="exhausted").inc()
                     continue
                 runner = self.island_runner(k, seg_len[k], branch_fids,
                                             fitness_fn)
@@ -429,6 +449,9 @@ class MeshCampaignEngine:
                 t0 = time.perf_counter()
                 sh["carry"], tr = runner(*args)   # async: no block here
                 wall = time.perf_counter() - t0
+                reg.histogram("mesh_island_dispatch_s",
+                              strategy="concurrent",
+                              island=s).observe(wall)
                 sh["traces"].append(tr)
                 sh["segments"].append({"shard": s, "bucket": k,
                                        "gens": seg_len[k],
@@ -437,6 +460,7 @@ class MeshCampaignEngine:
                 dispatched += 1
             # -- the only cross-island traffic: two scalars ----------------
             if dispatched or retired or finished:
+                t0 = time.perf_counter()
                 entry = {"round": rnd,
                          "global_best": _finite_or_none(
                              min(sh["best"] for sh in shards)),
@@ -444,6 +468,10 @@ class MeshCampaignEngine:
                 if retired:
                     entry["stopped_early"] = True
                 exchange.append(entry)
+                reg.histogram("mesh_exchange_s", strategy="concurrent"
+                              ).observe(time.perf_counter() - t0)
+                reg.counter("mesh_exchange_rounds_total",
+                            strategy="concurrent").inc()
             if not dispatched and all(sh["done"] for sh in shards):
                 break
         else:

@@ -2,7 +2,13 @@
 
   PYTHONPATH=src python -m repro.launch.serve_campaigns \
       [--requests reqs.json | --synthetic 8] [--devices 4] \
-      [--snapshot-dir ckpt --snapshot-every 4] [--resume] [--out results.json]
+      [--snapshot-dir ckpt --snapshot-every 4] [--resume] [--out results.json] \
+      [--metrics-out metrics.jsonl] [--metrics-port 9100]
+
+``--metrics-out`` appends one JSONL record of every live ``repro.obs``
+series per service round (docs/METRICS.md documents the series and how to
+read a run); ``--metrics-port`` additionally serves the prometheus-style
+text exposition at ``GET /metrics`` for dashboards to scrape.
 
 ``--requests`` takes a JSON list of CampaignRequest dicts, each optionally
 carrying an ``arrival_s`` wall-clock offset; ``--synthetic N`` generates a
@@ -51,6 +57,10 @@ def _parser():
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--max-steps", type=int, default=10_000)
     ap.add_argument("--out", default=None, help="write results JSON here")
+    ap.add_argument("--metrics-out", default=None,
+                    help="append a metrics JSONL record every service round")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve GET /metrics on 127.0.0.1:PORT (0=ephemeral)")
     return ap
 
 
@@ -114,6 +124,7 @@ def _serve(args):
             raise SystemExit("--resume requires --snapshot-dir")
         srv = CampaignServer.restore(args.snapshot_dir,
                                      snapshot_every=args.snapshot_every)
+        srv.metrics_out = args.metrics_out      # serving-process property
         print(f"[serve] resumed: {srv.stats()}", flush=True)
         raw = []                    # resumed queue/jobs come from the snapshot
     else:
@@ -124,7 +135,13 @@ def _serve(args):
                              rows_per_island=args.rows_per_island,
                              devices=jax.devices(),
                              snapshot_dir=args.snapshot_dir,
-                             snapshot_every=args.snapshot_every)
+                             snapshot_every=args.snapshot_every,
+                             metrics_out=args.metrics_out)
+    if args.metrics_port is not None:
+        from repro import obs
+        _httpd, port = obs.start_metrics_server(port=args.metrics_port)
+        print(f"[serve] metrics at http://127.0.0.1:{port}/metrics",
+              flush=True)
 
     t0 = time.monotonic()
     tickets = []

@@ -1,0 +1,17 @@
+"""Service observability: schema-validated metrics with zero dependencies.
+
+``obs/schema.py`` is the single table every metric name, kind, label set
+and histogram bucket layout is defined in (and ``docs/METRICS.md`` is
+generated from); ``obs/registry.py`` is the runtime — counters, gauges,
+log-bucketed histograms on a process-wide ``MetricsRegistry``, a JSONL
+sink flushed at segment boundaries, and an optional in-process HTTP
+``/metrics`` endpoint.  Instrumentation is host-side only: emitters pass
+scalars that already crossed the device boundary at an existing
+segment-boundary pull, never jax arrays (tests/test_obs.py pins both the
+device-sync count and the segment-compile count against it).
+"""
+from repro.obs.registry import (Counter, Gauge, Histogram,     # noqa: F401
+                                MetricsRegistry, metrics, reset_metrics,
+                                set_metrics, start_metrics_server)
+from repro.obs.schema import (SCHEMA, SPECS, MetricSpec,       # noqa: F401
+                              log_buckets, render_markdown)

@@ -1,0 +1,248 @@
+"""THE metric-name table — every series the repo emits is defined here.
+
+One ``MetricSpec`` per metric: name, kind (counter / gauge / histogram),
+unit, the exact label keys every emission must carry, the emission point,
+and a one-line meaning.  ``MetricsRegistry`` (obs/registry.py) refuses any
+name or label set not in this table, and ``docs/METRICS.md`` embeds the
+table rendered by ``render_markdown`` between markers — so code, registry
+and docs cannot drift:
+
+  PYTHONPATH=src python -m repro.obs.schema --check docs/METRICS.md   # CI lint
+  PYTHONPATH=src python -m repro.obs.schema --write docs/METRICS.md   # refresh
+
+This module is deliberately jax-free (the drift check must not pay a jax
+import), and the whole obs package has zero third-party dependencies.
+
+Naming follows the prometheus conventions production governance services
+front their metrics with: snake_case, ``_total`` suffix on counters,
+``_s`` suffix on second-valued series, subsystem prefix first
+(``bucketed_`` the segment driver, ``mesh_`` the S1/S2 mesh engine,
+``service_`` the campaign server).  Restart-policy-adjacent names carry a
+``policy``-free shape on purpose: when BIPOP & friends (arXiv 1207.0206)
+and large-scale strategy tiers (arXiv 2310.05377) land as per-row restart
+policies, they extend these series with a ``policy`` label instead of
+inventing parallel names.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+from typing import Dict, Tuple
+
+COUNTER = "counter"
+GAUGE = "gauge"
+HISTOGRAM = "histogram"
+
+
+def log_buckets(lo: float, hi: float, per_decade: int = 2,
+                ) -> Tuple[float, ...]:
+    """Fixed log-spaced histogram upper edges from ``lo`` to ``hi``
+    inclusive, ``per_decade`` edges per decade.  Edges are rounded to 6
+    significant digits so the schema (and therefore the JSONL sink and the
+    docs) is reproducible across platforms."""
+    import math
+    n = int(round(math.log10(hi / lo) * per_decade))
+    return tuple(float(f"{lo * 10 ** (i / per_decade):.6g}")
+                 for i in range(n + 1))
+
+
+#: default edges for second-valued histograms: 10 µs .. 1000 s, 2/decade —
+#: wide enough to hold a sub-ms host sync and a multi-minute soak job in
+#: the same fixed table (values beyond the last edge land in +Inf).
+TIME_BUCKETS_S = log_buckets(1e-5, 1e3, per_decade=2)
+
+
+@dataclasses.dataclass(frozen=True)
+class MetricSpec:
+    """One metric's contract: everything an emitter and a reader share."""
+
+    name: str
+    kind: str                       # COUNTER | GAUGE | HISTOGRAM
+    unit: str                       # "s", "evaluations", "jobs", ...
+    labels: Tuple[str, ...]         # exact label keys, enforced at emission
+    emitted_by: str                 # module:function of the emission point
+    help: str                       # one-line meaning
+    buckets: Tuple[float, ...] = () # histogram upper edges (+Inf implied)
+
+    def __post_init__(self):
+        if self.kind not in (COUNTER, GAUGE, HISTOGRAM):
+            raise ValueError(f"unknown metric kind {self.kind!r}")
+        if self.kind == HISTOGRAM and not self.buckets:
+            object.__setattr__(self, "buckets", TIME_BUCKETS_S)
+        if self.kind != HISTOGRAM and self.buckets:
+            raise ValueError(f"{self.name}: buckets only apply to histograms")
+
+
+SCHEMA: Tuple[MetricSpec, ...] = (
+    # -- bucketed segment driver (core/bucketed.py:drive_segments) ----------
+    MetricSpec("bucketed_segments_total", COUNTER, "segments", ("bucket",),
+               "core/bucketed.py:drive_segments",
+               "Dispatched bucket segments, by rung bucket."),
+    MetricSpec("bucketed_segment_wall_s", HISTOGRAM, "s", ("bucket",),
+               "core/bucketed.py:drive_segments",
+               "Per-segment wall: dispatch+block unoverlapped, dispatch-only "
+               "when overlap=True (the block rides the next sync)."),
+    MetricSpec("bucketed_sync_s", HISTOGRAM, "s", (),
+               "core/bucketed.py:drive_segments",
+               "Boundary host sync: the ONE batched schedule pull "
+               "(pull_schedule / pull_schedule_allgather) per segment."),
+    MetricSpec("bucketed_spec_dispatch_total", COUNTER, "segments",
+               ("outcome",),
+               "core/bucketed.py:drive_segments",
+               "Speculative double-buffered dispatches, outcome=hit|miss "
+               "(miss = bucket changed, speculative output discarded)."),
+    MetricSpec("bucketed_useful_evals_total", COUNTER, "evaluations", (),
+               "core/bucketed.py:drive_segments",
+               "True fitness evaluations progressed between boundary pulls "
+               "(delta of the pulled per-member budget counters)."),
+    MetricSpec("bucketed_padded_evals_total", COUNTER, "evaluations",
+               ("bucket",),
+               "core/bucketed.py:drive_segments",
+               "Device evaluation rows paid per dispatched segment "
+               "(rows x gens x lambda_bucket); padding waste = "
+               "padded/useful."),
+    MetricSpec("bucketed_eigh_blocks_total", COUNTER, "blocks", ("bucket",),
+               "core/bucketed.py:drive_segments",
+               "Batched eigendecomposition blocks executed "
+               "(seg_gens/eigen_interval per dispatched segment)."),
+    # -- mesh engine S1/S2 (distributed/mesh_engine.py) ---------------------
+    MetricSpec("mesh_island_dispatch_s", HISTOGRAM, "s",
+               ("strategy", "island"),
+               "distributed/mesh_engine.py:_drive_concurrent/_drive_ordered",
+               "Per-island segment dispatch wall (async enqueue for S2 "
+               "islands; island=all for S1's whole-mesh program)."),
+    MetricSpec("mesh_island_block_s", HISTOGRAM, "s", ("island",),
+               "distributed/mesh_engine.py:_drive_concurrent",
+               "S2 per-island blocking schedule pull — where an island "
+               "waits on its own running segment."),
+    MetricSpec("mesh_exchange_s", HISTOGRAM, "s", ("strategy",),
+               "distributed/mesh_engine.py:_drive_concurrent/_drive_ordered",
+               "Scalar exchange latency: S1 forces the psum'd "
+               "budget/best outputs, S2 folds the per-island host scalars."),
+    MetricSpec("mesh_exchange_rounds_total", COUNTER, "rounds",
+               ("strategy",),
+               "distributed/mesh_engine.py:_drive_concurrent/_drive_ordered",
+               "Completed cross-island exchange rounds."),
+    MetricSpec("mesh_retirements_total", COUNTER, "islands", ("reason",),
+               "distributed/mesh_engine.py:_drive_concurrent",
+               "Island retirement events, reason=target (stop_at early "
+               "sharing) | exhausted (no member can pay a generation)."),
+    # -- campaign service (service/server.py) -------------------------------
+    MetricSpec("service_jobs_total", COUNTER, "jobs", ("event",),
+               "service/server.py:submit/_admit/_finalize/drain",
+               "Job lifecycle events: event=submitted|admitted|completed|"
+               "rejected (backpressure or unplaceable)."),
+    MetricSpec("service_queue_depth", GAUGE, "jobs", (),
+               "service/server.py:step",
+               "Pending admission-queue depth at the end of a service "
+               "round."),
+    MetricSpec("service_admission_wait_s", HISTOGRAM, "s", (),
+               "service/server.py:_admit",
+               "submit -> admitted-into-a-row wait (queue time)."),
+    MetricSpec("service_time_to_first_ticket_s", HISTOGRAM, "s", (),
+               "service/server.py:_island_boundary",
+               "submit -> first streamed ticket update."),
+    MetricSpec("service_time_to_completion_s", HISTOGRAM, "s", (),
+               "service/server.py:_finalize",
+               "submit -> done: the per-job completion latency the soak "
+               "SLO is written against."),
+    MetricSpec("service_slot_occupancy", GAUGE, "fraction",
+               ("lane", "island"),
+               "service/server.py:step",
+               "Occupied fraction of an island's member rows (per-lane "
+               "slot occupancy)."),
+    MetricSpec("service_boundary_pull_s", HISTOGRAM, "s", ("lane",),
+               "service/server.py:_island_boundary",
+               "Per-island boundary schedule pull (the service's only "
+               "blocking device sync)."),
+    MetricSpec("service_segments_total", COUNTER, "segments",
+               ("lane", "bucket"),
+               "service/server.py:_island_boundary",
+               "Island segments dispatched by the service loop."),
+    MetricSpec("service_program_cache_hit_rate", GAUGE, "fraction", (),
+               "service/server.py:step",
+               "Process-wide segment ProgramCache hits/(hits+traces)."),
+    MetricSpec("service_snapshot_s", HISTOGRAM, "s", (),
+               "service/server.py:snapshot",
+               "Wall time of one snapshot() commit."),
+    MetricSpec("service_boundaries_total", COUNTER, "rounds", (),
+               "service/server.py:step",
+               "Completed service rounds (one segment boundary per island "
+               "per round)."),
+)
+
+SPECS: Dict[str, MetricSpec] = {s.name: s for s in SCHEMA}
+assert len(SPECS) == len(SCHEMA), "duplicate metric name in SCHEMA"
+
+
+# ---------------------------------------------------------------------------
+# docs generation + drift check
+# ---------------------------------------------------------------------------
+
+BEGIN_MARK = "<!-- BEGIN GENERATED TABLE: repro.obs.schema (do not edit) -->"
+END_MARK = "<!-- END GENERATED TABLE -->"
+
+
+def render_markdown() -> str:
+    """The METRICS.md reference table, one row per metric."""
+    lines = [
+        "| name | type | labels | unit | emitted by | meaning |",
+        "|---|---|---|---|---|---|",
+    ]
+    for s in SCHEMA:
+        labels = ", ".join(f"`{v}`" for v in s.labels) or "—"
+        help_md = s.help.replace("|", "\\|")     # keep table cells intact
+        lines.append(f"| `{s.name}` | {s.kind} | {labels} | {s.unit} "
+                     f"| `{s.emitted_by}` | {help_md} |")
+    return "\n".join(lines)
+
+
+def _splice(text: str) -> str:
+    """Replace the marked block of a METRICS.md body with the current table;
+    raises if the markers are missing."""
+    b, e = text.find(BEGIN_MARK), text.find(END_MARK)
+    if b < 0 or e < 0 or e < b:
+        raise ValueError(f"markers {BEGIN_MARK!r} / {END_MARK!r} not found")
+    return (text[:b + len(BEGIN_MARK)] + "\n" + render_markdown() + "\n"
+            + text[e:])
+
+
+def check_file(path: str) -> bool:
+    """True iff the generated block in ``path`` matches the live schema."""
+    with open(path) as fh:
+        text = fh.read()
+    return _splice(text) == text
+
+
+def write_file(path: str):
+    with open(path) as fh:
+        text = fh.read()
+    with open(path, "w") as fh:
+        fh.write(_splice(text))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--check", metavar="METRICS_MD", default=None,
+                    help="exit 1 if the file's generated table is stale")
+    ap.add_argument("--write", metavar="METRICS_MD", default=None,
+                    help="refresh the file's generated table in place")
+    args = ap.parse_args(argv)
+    if args.write:
+        write_file(args.write)
+        print(f"[obs.schema] refreshed {args.write}")
+        return 0
+    if args.check:
+        if check_file(args.check):
+            print(f"[obs.schema] {args.check} matches the schema")
+            return 0
+        print(f"[obs.schema] {args.check} is STALE — regenerate with:\n"
+              f"  PYTHONPATH=src python -m repro.obs.schema --write "
+              f"{args.check}", file=sys.stderr)
+        return 1
+    ap.error("pass --check or --write")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

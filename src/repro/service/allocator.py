@@ -60,6 +60,7 @@ class SlotAllocator:
         return self.n_islands * self.rows_per_island
 
     def free_rows(self, island: Optional[int] = None) -> int:
+        """Free row count on ``island`` (or lane-wide when None)."""
         if island is not None:
             return int(self.free[island].sum())
         return int(sum(f.sum() for f in self.free))
@@ -91,6 +92,7 @@ class SlotAllocator:
         return island, row
 
     def release(self, island: int, row: int):
+        """Free the row for the next tenant (job retirement)."""
         self.free[island][row] = True
         self.row_jobs[island][row] = -1
         # budgets deliberately kept: the device mirror still holds the old

@@ -120,15 +120,21 @@ class CampaignTicket:
     admit_boundary: Optional[int] = None
 
     def push(self, rec: dict):
+        """Append one boundary update, dropping the oldest beyond
+        ``TAIL_CAP`` (server-side; consumers just read ``updates``)."""
         self.updates.append(rec)
         if len(self.updates) > self.TAIL_CAP:
             del self.updates[:len(self.updates) - self.TAIL_CAP]
 
     @property
     def done(self) -> bool:
+        """True once the full result landed (status ``"done"``)."""
         return self.status == JOB_DONE
 
     def latency_s(self) -> Optional[float]:
+        """submit → done wall-clock latency (the quantity the soak SLO is
+        written against); None while running or on a snapshot-restored
+        ticket (timestamps are not persisted)."""
         if self.done_s is None or self.submit_s is None:
             return None
         return self.done_s - self.submit_s
@@ -154,6 +160,10 @@ class AdmissionQueue:
 
     def submit(self, req: CampaignRequest, *,
                now_s: float = 0.0) -> CampaignTicket:
+        """Validate and enqueue ``req``; returns its fresh ticket (job id
+        assigned here).  Raises ``QueueFull`` at ``max_pending`` — the
+        backpressure contract — and ``ValueError`` on an invalid request.
+        ``now_s`` stamps ``ticket.submit_s`` (queue-wait measurements)."""
         req.validate()
         if len(self._heap) >= self.max_pending:
             raise QueueFull(
@@ -180,4 +190,5 @@ class AdmissionQueue:
         return out
 
     def pending(self) -> List[CampaignTicket]:
+        """Tickets still queued, in admission (priority, FIFO) order."""
         return [t for (_p, _s, _r, t) in sorted(self._heap)]

@@ -50,6 +50,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.checkpoint import store
 from repro.core import bucketed, ipop as ipop_mod, ladder
 from repro.distributed.mesh_engine import ProgramCache
@@ -108,6 +109,13 @@ class FitnessRegistry:
 # ---------------------------------------------------------------------------
 
 _SEGMENT_CACHE = ProgramCache()
+
+
+def _lane_label(key: tuple) -> str:
+    """Metric label of a lane key: ``d<dim>.l<lam_start>.k<kmax_exp>.<dtype>``
+    (stable, low-cardinality — one value per dim-class)."""
+    dim, lam, kmax, dtype = key
+    return f"d{dim}.l{lam}.k{kmax}.{dtype}"
 
 
 def program_cache_stats() -> dict:
@@ -260,7 +268,8 @@ class CampaignServer:
                  sigma0_frac: float = 0.25, max_budget: int = 200_000,
                  rows_per_island: int = 4, max_pending: int = 256,
                  max_lanes: int = 16, snapshot_dir: Optional[str] = None,
-                 snapshot_every: int = 0):
+                 snapshot_every: int = 0,
+                 metrics_out: Optional[str] = None):
         if devices is not None:
             self.devices = list(devices)
         elif mesh is not None:
@@ -278,6 +287,10 @@ class CampaignServer:
         self.rows_per_island = int(rows_per_island)
         self.max_lanes = int(max_lanes)
         self.snapshot_dir, self.snapshot_every = snapshot_dir, snapshot_every
+        # JSONL metrics sink, flushed once per service round (step()); NOT a
+        # _CONFIG_FIELDS member — where metrics go is a property of the
+        # serving process, not of the snapshot-persisted service config
+        self.metrics_out = metrics_out
         self.queue = qmod.AdmissionQueue(max_pending=max_pending)
         self.tickets: Dict[int, CampaignTicket] = {}
         self.lanes: Dict[tuple, _Lane] = {}
@@ -299,6 +312,19 @@ class CampaignServer:
     # -- submission -----------------------------------------------------------
     def submit(self, req: CampaignRequest,
                now_s: Optional[float] = None) -> CampaignTicket:
+        """Enqueue one job; returns its ``CampaignTicket`` immediately.
+
+        The request is validated against THIS server's compiled surface
+        (budget ≤ ``max_budget``, ``fid`` in the compiled-in BBOB menu,
+        ``fitness`` registered before the server started) — violations raise
+        ``ValueError`` here, at the front door, instead of failing inside a
+        traced program.  A full pending queue raises ``queue.QueueFull``
+        (admission backpressure).  The ticket streams per-boundary updates
+        once the job is admitted into a lane row and carries the full
+        ``IPOPResult`` when it completes; ``now_s`` overrides the submit
+        timestamp (``time.monotonic()``) for replayed arrival traces — the
+        soak harness uses it to measure queue wait under a synthetic load.
+        """
         req.validate()
         if req.budget > self.max_budget:
             raise ValueError(f"budget {req.budget} exceeds the service "
@@ -312,6 +338,7 @@ class CampaignServer:
         t = self.queue.submit(
             req, now_s=time.monotonic() if now_s is None else now_s)
         self.tickets[t.job_id] = t
+        obs.metrics().counter("service_jobs_total", event="submitted").inc()
         return t
 
     # -- lanes ----------------------------------------------------------------
@@ -342,6 +369,21 @@ class CampaignServer:
             for i, isl in enumerate(lane.islands):
                 self._island_boundary(lane, i, isl, stats)
         self._boundary_n += 1
+        reg = obs.metrics()
+        reg.counter("service_boundaries_total").inc()
+        reg.gauge("service_queue_depth").set(len(self.queue))
+        for lane in self.lanes.values():
+            lbl = _lane_label(lane.key)
+            al = lane.allocator
+            for i in range(al.n_islands):
+                reg.gauge("service_slot_occupancy", lane=lbl, island=i).set(
+                    1.0 - al.free_rows(i) / al.rows_per_island)
+        pc = program_cache_stats()
+        if pc["hits"] + pc["traces"]:
+            reg.gauge("service_program_cache_hit_rate").set(
+                pc["hits"] / (pc["hits"] + pc["traces"]))
+        if self.metrics_out:
+            reg.flush_jsonl(self.metrics_out)
         if (self.snapshot_dir and self.snapshot_every
                 and self._boundary_n % self.snapshot_every == 0):
             self.snapshot()
@@ -363,6 +405,8 @@ class CampaignServer:
             _req, t = item
             t.status = JOB_REJECTED
             t.done_s = time.monotonic()
+            obs.metrics().counter("service_jobs_total",
+                                  event="rejected").inc()
         return [t for t in self.tickets.values() if t.done]
 
     def _resident_jobs(self) -> int:
@@ -372,8 +416,13 @@ class CampaignServer:
     def _island_boundary(self, lane: _Lane, i: int, isl: _Island,
                          stats: StepStats):
         al = lane.allocator
+        reg = obs.metrics()
+        lbl = _lane_label(lane.key)
+        t0 = time.perf_counter()
         k_idx, active, fevals, best_f = bucketed.pull_schedule(
             isl.arrays["carry"])
+        reg.histogram("service_boundary_pull_s",
+                      lane=lbl).observe(time.perf_counter() - t0)
         k_idx, active, fevals = k_idx.copy(), active.copy(), fevals.copy()
         lam_cur = lane.engine.lam_start * (2 ** k_idx)
 
@@ -385,6 +434,9 @@ class CampaignServer:
             t = self.tickets[job]
             t.best_f = float(best_f[row])
             t.fevals = int(fevals[row])
+            if not t.updates and t.submit_s is not None:
+                reg.histogram("service_time_to_first_ticket_s").observe(
+                    time.monotonic() - t.submit_s)
             t.push({"boundary": self._boundary_n, "fevals": t.fevals,
                     "best_f": t.best_f, "k": int(k_idx[row])})
             target = t.request.target
@@ -429,6 +481,7 @@ class CampaignServer:
         own = np.repeat(al.row_jobs[i].copy()[:, None], lane.seg_len[k],
                         axis=1)
         isl.traces.append((tr, own))
+        reg.counter("service_segments_total", lane=lbl, bucket=k).inc()
         stats.dispatched += 1
 
     def _admit(self, lane: _Lane, i: int, isl: _Island,
@@ -455,6 +508,11 @@ class CampaignServer:
         t.lane, t.island, t.row = lane.key, i, row
         t.admit_s = time.monotonic()
         t.admit_boundary = self._boundary_n
+        reg = obs.metrics()
+        reg.counter("service_jobs_total", event="admitted").inc()
+        if t.submit_s is not None:
+            reg.histogram("service_admission_wait_s").observe(
+                t.admit_s - t.submit_s)
         return row
 
     def _finalize(self, lane: _Lane, i: int, isl: _Island, row: int,
@@ -481,6 +539,11 @@ class CampaignServer:
         t.done_s = time.monotonic()
         lane.allocator.release(i, row)
         self._completed.add(job)
+        reg = obs.metrics()
+        reg.counter("service_jobs_total", event="completed").inc()
+        if t.submit_s is not None:
+            reg.histogram("service_time_to_completion_s").observe(
+                t.done_s - t.submit_s)
 
     def _prune_traces(self, isl: _Island):
         def live(own):
@@ -508,9 +571,22 @@ class CampaignServer:
 
     # -- durability -----------------------------------------------------------
     def snapshot(self) -> int:
-        """Write a crash-resume snapshot; returns the committed step id."""
+        """Write a crash-resume snapshot; returns the committed step id.
+
+        Persists, through ``checkpoint/store.py`` (arrays + an atomically
+        committed ``meta.json``): every lane's island arrays (per-row
+        operands + stacked carries), device-resident traces with their
+        per-generation job-ownership columns, the allocator maps, all
+        tickets, and the service config.  Anything a later ``restore`` needs
+        to continue bit-exactly is in the snapshot EXCEPT host wall-clock
+        ticket timestamps (latency measurements do not survive a resume) and
+        custom fitness callables (the restoring process re-registers them by
+        name).  Called automatically every ``snapshot_every`` boundaries when
+        both it and ``snapshot_dir`` are set.
+        """
         if not self.snapshot_dir:
             raise ValueError("server has no snapshot_dir")
+        t0 = time.perf_counter()
         step = self._boundary_n
         tree: dict = {"lanes": {}}
         lanes_meta = []
@@ -551,6 +627,8 @@ class CampaignServer:
                 "lanes": lanes_meta, "jobs": jobs_meta,
                 "next_job_id": max(self.tickets, default=-1) + 1}
         store.save(self.snapshot_dir, step, tree, meta=meta)
+        obs.metrics().histogram("service_snapshot_s").observe(
+            time.perf_counter() - t0)
         return step
 
     @classmethod
