@@ -110,17 +110,120 @@ def _bench_cell(n: int, lam: int, gens: int, reps: int) -> dict:
         yy, xx = ref.gen_sample(s.m, s.sigma, s.B, s.D, z)
         return s._replace(m=s.m + 0.0 * xx[0]), 0
 
+    # -- in-kernel-RNG stream vs host fold_in stream (PR-7 tier) ----------
+    # both draw fresh Z every generation (keyed off the carried s.gen, so
+    # the threefry work stays inside the scan); the counter stream is the
+    # pallas_rng tier's XLA ref — bit-exact with the Mosaic kernel
+    def samp_hostkey(s, _):
+        k2 = jax.random.fold_in(key, s.gen)
+        zz = cmaes.sample_z(s, k2, lam)
+        yy, xx = ref.gen_sample(s.m, s.sigma, s.B, s.D, zz)
+        return s._replace(gen=s.gen + 1, m=s.m + 0.0 * xx[0]), 0
+
+    def samp_ctrkey(s, _):
+        sd = jnp.asarray(jax.random.fold_in(key, s.gen), jnp.uint32)
+        yy, xx = ref.gen_sample_rng(s.m, s.sigma, s.B, s.D, sd, lam)
+        return s._replace(gen=s.gen + 1, m=s.m + 0.0 * xx[0]), 0
+
+    # -- full resident generation: sample → eval → update (eval-fused) ----
+    # baseline = the PR-6 engine chain on a (1, 2) BBOB menu: fused sample
+    # emits X, the vmapped fid switch evaluates it, stats index X;
+    # fused = the eval-fused epilogue — F rides the sample op, X is never
+    # materialized and x_best is reconstructed as m + σ·y*
+    from repro.fitness import bbob
+
+    def _mask(s, new):
+        return jax.tree_util.tree_map(
+            lambda old, nw: jnp.where(s.stop, old, nw), s, new)
+
+    def resid_cells(fid):
+        inst = bbob.make_instance(fid, n, 1)
+        sepc = bbob.separable_coeffs(inst, (1, 2))
+        coef = lambda s: cmaes.gen_coef(p, s)
+
+        def dispatched(s, _):
+            yy, xx = ref.gen_sample(s.m, s.sigma, s.B, s.D, live(s, z))
+            fv = bbob.evaluate_dynamic(inst, xx, (1, 2))
+            w2, f_sorted, x_best, n_evals = cmaes.population_stats(
+                fv, xx, p, lam)
+            c = coef(s)
+            cn, psn, pcn, y_w = ref.fused_gen_update(
+                s.C, s.B, s.D, s.p_sigma, s.p_c, yy, w2, c["c_sigma"],
+                c["mu_eff"], c["c_c"], c["c_1"], c["c_mu"], c["chi_n"],
+                c["gen1"])
+            return _mask(s, cmaes._finish_update(
+                cfg, p, s, f_sorted, x_best, n_evals, cn, psn, pcn, y_w,
+                "defer")), 0
+
+        def evalfused(s, _):
+            yy, fv = ref.gen_sample_eval(s.m, s.sigma, s.B, s.D,
+                                         live(s, z), sepc)
+            w2, f_sorted, x_best, n_evals = cmaes.population_stats_from_y(
+                fv, yy, s.m, s.sigma, p, lam)
+            c = coef(s)
+            cn, psn, pcn, y_w = ref.fused_gen_update(
+                s.C, s.B, s.D, s.p_sigma, s.p_c, yy, w2, c["c_sigma"],
+                c["mu_eff"], c["c_c"], c["c_1"], c["c_mu"], c["chi_n"],
+                c["gen1"])
+            return _mask(s, cmaes._finish_update(
+                cfg, p, s, f_sorted, x_best, n_evals, cn, psn, pcn, y_w,
+                "defer")), 0
+        return dispatched, evalfused
+
+    resid_f1 = resid_cells(1)
+    resid_f2 = resid_cells(2)
+
     cell = {}
     for name, unf, fus in (("update_core", core_unfused, core_fused),
                            ("full_step", full_unfused, full_fused),
-                           ("sample", samp_unfused, samp_fused)):
+                           ("sample", samp_unfused, samp_fused),
+                           ("sample_rng", samp_hostkey, samp_ctrkey),
+                           ("resident_full_step_f1", *resid_f1),
+                           ("resident_full_step_f2", *resid_f2)):
         tu = _time_scan(unf, st, gens, reps)
         tf = _time_scan(fus, st, gens, reps)
         cell[name] = {
             "unfused_ms": round(tu * 1e3, 5), "fused_ms": round(tf * 1e3, 5),
             "speedup": round(tu / max(tf, 1e-12), 3),
         }
+        if name.startswith("resident_full_step"):
+            # the acceptance currency: useful fitness evaluations per second
+            # through the whole sample→eval→update generation
+            cell[name]["unfused_evals_per_s"] = round(lam / tu, 1)
+            cell[name]["fused_evals_per_s"] = round(lam / tf, 1)
     return cell
+
+
+def _strategies_cell(n: int, chunk: int, reps: int) -> dict:
+    """A/B of the collectives update path (PR-7 tentpole c): the compiled
+    ``KDistributed.chunk_fn`` per generation under ``impl="xla_unfused"``
+    (PR-6's 4-tuple moments psum + ``masked_update``) vs the default fused
+    path (ONE √w-factored ``Ysᵀ·[Ys|√w]`` gram-family psum +
+    ``masked_update_from_gram``, no symmetrize pass)."""
+    from repro.core import strategies
+
+    sphere = lambda X: jnp.sum(X ** 2, axis=-1)
+
+    def per_gen(impl: str) -> float:
+        kd = strategies.KDistributed(n=n, n_devices=3, lam_start=16,
+                                     lam_slots=16, kmax_exp=1, impl=impl,
+                                     eigen_interval=8)
+        carry = kd.init_carry(jax.random.PRNGKey(0))
+        fn = jax.jit(jax.vmap(kd.chunk_fn(sphere, ("ev",), chunk),
+                              in_axes=(None, None), out_axes=0,
+                              axis_name="ev", axis_size=3))
+        keys = jax.random.split(jax.random.PRNGKey(1), chunk)
+        jax.block_until_ready(fn(carry, keys))
+        best = np.inf
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(carry, keys))
+            best = min(best, (time.perf_counter() - t0) / chunk)
+        return best
+
+    tu, tf = per_gen("xla_unfused"), per_gen("xla")
+    return {"unfused_ms": round(tu * 1e3, 5), "fused_ms": round(tf * 1e3, 5),
+            "speedup": round(tu / max(tf, 1e-12), 3)}
 
 
 def _roofline_cells(n: int, lam: int) -> dict:
@@ -179,9 +282,19 @@ def main(argv=None):
         "note": "update_core = the O(n²) per-generation state-update ops "
                 "(PR-3 unfused soup vs the fused one-dot/no-symmetrize "
                 "path); full_step adds order statistics, O(n) epilogue and "
-                "stop-masking (identical in both); times are best-of-reps "
-                "per generation on CPU",
-    }, "cells": {}, "ladder_speedup": {}, "roofline": {}}
+                "stop-masking (identical in both); sample_rng A/Bs the "
+                "pallas_rng tier's counter stream against the host fold_in "
+                "stream, resident_full_step_* A/Bs the eval-fused sample "
+                "epilogue (X never stored) against the dispatched "
+                "sample->eval chain, strategies_gram A/Bs KDistributed's "
+                "fused gram-family psum against the PR-6 moments psum; on "
+                "CPU the residency cells are ~neutral (XLA fuses the eval "
+                "chain and caches absorb the X store) - the HBM win they "
+                "pin is the accelerator surface, while update_core / "
+                "strategies_gram are genuine CPU wins; times are "
+                "best-of-reps per generation on CPU",
+    }, "cells": {}, "ladder_speedup": {}, "strategies_gram": {},
+        "roofline": {}}
 
     for n in dims:
         gens = max(10, min(args.gens, 8000 // n if n >= 512 else args.gens))
@@ -197,8 +310,12 @@ def main(argv=None):
             sec: round(float(np.exp(np.mean(
                 [np.log(per_rung[str(lam)][sec]["speedup"])
                  for lam in rungs]))), 3)
-            for sec in ("update_core", "full_step", "sample")
+            for sec in ("update_core", "full_step", "sample", "sample_rng",
+                        "resident_full_step_f1", "resident_full_step_f2")
         }
+        out["strategies_gram"][str(n)] = _strategies_cell(n, 16, args.reps)
+        print(f"[bench_kernels] n={n} strategies_gram "
+              f"{out['strategies_gram'][str(n)]['speedup']}x", flush=True)
         out["roofline"][str(n)] = _roofline_cells(n, min(rungs[-1], 64))
 
     with open(args.out, "w") as fh:

@@ -3,7 +3,13 @@ sequential IPOP-CMA-ES, per (function, target), with the parallel-time model
 (benchmarks/parallel_time.py) at configurable evaluation granularity.
 
   PYTHONPATH=src python -m benchmarks.bench_strategies \
-      [--fids 1,8,10,15] [--dim 10] [--devices 8] [--cost-ms 1] [--runs 3]
+      [--fids 1,8,10,15] [--dim 10] [--devices 8] [--cost-ms 1] [--runs 3] \
+      [--impl xla|xla_unfused]
+
+``--impl`` A/Bs the collectives update path: the default ``xla`` runs the
+fused gram-family psum (one ``Ysᵀ·[Ys|√w]`` dot + ``masked_update_from_gram``
+per generation), ``xla_unfused`` the PR-6 4-tuple moments psum.  Kernel-level
+timings for the same A/B live in BENCH_kernels.json (``strategies_gram``).
 """
 from __future__ import annotations
 
@@ -61,7 +67,7 @@ def kr_hit_times(out, f_opt, cm: CostModel, devices: int, lam_start: int,
     return hits, t
 
 
-def run(fids, dim, devices, cost_ms, runs, gens, max_evals):
+def run(fids, dim, devices, cost_ms, runs, gens, max_evals, impl="xla"):
     cm = CostModel(eval_cost_s=cost_ms * 1e-3)
     rows = []
     for fid in fids:
@@ -80,11 +86,11 @@ def run(fids, dim, devices, cost_ms, runs, gens, max_evals):
             # concurrent rungs on the strategies collectives, single jit
             kd, _, tr = ladder.run_concurrent(
                 dim, devices, jax.random.PRNGKey(200 + r), fit,
-                total_gens=gens)
+                total_gens=gens, impl=impl)
             h, b = kd_hit_times(kd, tr, f_opt, cm, devices)
             kd_h.append(h); kd_b.append(b)
 
-            kr = KReplicated(n=dim, n_devices=devices)
+            kr = KReplicated(n=dim, n_devices=devices, impl=impl)
             out = kr.run_sim(jax.random.PRNGKey(300 + r), fit,
                              phase_gens=gens, max_evals=max_evals)
             h, b = kr_hit_times(out, f_opt, cm, devices, 12, dim)
@@ -111,10 +117,13 @@ def main(argv=None):
     ap.add_argument("--runs", type=int, default=3)
     ap.add_argument("--gens", type=int, default=120)
     ap.add_argument("--max-evals", type=int, default=40_000)
+    ap.add_argument("--impl", default="xla",
+                    help="collectives update path: xla (fused gram-family "
+                         "psum, default) | xla_unfused (PR-6 moments psum)")
     args = ap.parse_args(argv)
     fids = [int(f) for f in args.fids.split(",")]
     rows = run(fids, args.dim, args.devices, args.cost_ms, args.runs,
-               args.gens, args.max_evals)
+               args.gens, args.max_evals, impl=args.impl)
     print("fid,target,ert_seq_s,ert_kdist_s,ert_krep_s,"
           "speedup_kdist,speedup_krep")
     for r in rows:

@@ -42,6 +42,11 @@ def main(argv=None):
         from benchmarks import (bench_kernels, bench_ladder, bench_mesh,
                                 bench_service)
         section("Smoke — fused generation kernels vs PR-3 unfused op soup")
+        # also writes the PR-7 residency A/B cells: sample_rng (in-kernel
+        # counter stream vs host fold_in), resident_full_step_f1/f2
+        # (eval-fused sample epilogue vs dispatched sample→eval chain) and
+        # strategies_gram (KDistributed fused gram-family psum vs the PR-6
+        # moments psum)
         bench_kernels.main(["--dims", "64,256,1024", "--gens", "40",
                             "--reps", "5", "--out", "BENCH_kernels.json"])
         section("Smoke — host-loop IPOP vs device-resident ladder")

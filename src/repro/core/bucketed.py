@@ -155,13 +155,17 @@ class BucketedLadderEngine:
 
     def segment_runner(self, k: int, branch_fids: Tuple[int, ...],
                        seg_gens: int):
-        """Jitted vmapped segment program, cached per (bucket, length, fids)."""
-        key = (int(k), int(seg_gens), tuple(branch_fids))
+        """Jitted vmapped segment program, cached per (bucket, length, fids)
+        — plus the trace-time eval-fusion toggle (``REPRO_EVAL_FUSION``)."""
+        key = (int(k), int(seg_gens), tuple(branch_fids),
+               bbob.eval_fusion_enabled())
         if key not in self._runner_cache:
             def run_one(base_key, inst, carry):
                 def fit(X):
                     return bbob.evaluate_dynamic(inst, X, branch_fids)
-                return self.segment_scan(k, base_key, fit, carry, seg_gens)
+                return self.segment_scan(
+                    k, base_key, bbob.fusable_fitness(inst, branch_fids, fit),
+                    carry, seg_gens)
             self._runner_cache[key] = jax.jit(jax.vmap(run_one))
         return self._runner_cache[key]
 
@@ -468,8 +472,18 @@ def run_campaign_bucketed(engine: BucketedLadderEngine, fids,
     keys = jnp.stack([jax.random.fold_in(base, j) for j in range(len(members))])
     carry = engine._init_runner(keys)
 
+    fused_menu = (bbob.eval_fusion_enabled()
+                  and all(f in bbob.FUSABLE_FIDS for f in branch_fids))
+    reg = obs.metrics()
+
     def dispatch(k, seg_gens, c):
         runner = engine.segment_runner(k, branch_fids, seg_gens)
+        if fused_menu:
+            # whole-menu-separable segments run the eval-fused sample
+            # epilogue — count their generations (host-known statics only:
+            # no device sync, no recompile)
+            reg.counter("bucketed_eval_fused_generations_total").inc(
+                int(seg_gens))
         return runner(keys, stacked, c)
 
     carry, trace, segments, bucket_wall = drive_segments(

@@ -27,6 +27,7 @@ import jax.numpy as jnp
 from repro.core import stopping
 from repro.core.params import CMAConfig, CMAParams
 from repro.kernels import ops as kops
+from repro.kernels import ref as kref
 
 
 class CMAState(NamedTuple):
@@ -154,6 +155,18 @@ def population_stats(fitness: jnp.ndarray, x: jnp.ndarray, params: CMAParams,
             [f_sorted_full, jnp.full((lam_max - lam,), jnp.inf, fitness.dtype)])
     x_best = x[jnp.argmin(fitness)]
     n_evals = jnp.sum(jnp.isfinite(fitness)).astype(jnp.int32)
+    return w, f_sorted, x_best, n_evals
+
+
+def population_stats_from_y(fitness: jnp.ndarray, y: jnp.ndarray, m, sigma,
+                            params: CMAParams, lam_max: int):
+    """``population_stats`` for the eval-fused path, where X never
+    materialized: the generation's best point is reconstructed from its Y
+    row as ``m + σ·y`` — the same algebra that produced every X row, so the
+    result is bit-identical to indexing a materialized X."""
+    w, f_sorted, _, n_evals = population_stats(
+        fitness, jnp.zeros((fitness.shape[0], 1), y.dtype), params, lam_max)
+    x_best = m + jnp.asarray(sigma, y.dtype) * y[jnp.argmin(fitness)]
     return w, f_sorted, x_best, n_evals
 
 
@@ -336,6 +349,31 @@ def masked_update_fused(cfg: CMAConfig, params: CMAParams, state: CMAState,
     """Fused-path sibling of ``masked_update`` (population in, state out)."""
     new = update_from_population(cfg, params, state, y, fitness, x,
                                  impl=impl, eigen=eigen)
+    return jax.tree_util.tree_map(
+        lambda old, nw: jnp.where(state.stop, old, nw), state, new)
+
+
+def masked_update_from_gram(cfg: CMAConfig, params: CMAParams,
+                            state: CMAState, gram, y_w, f_sorted, x_best,
+                            n_evals, eigen: str = "lazy") -> CMAState:
+    """Generation update from an ALREADY-REDUCED gram family — the
+    replicated tail of the cross-device fused path (core/strategies.py):
+    each device contributes its √w-factored partial ``Ysᵀ·[Ys | √w]`` dot,
+    ONE psum merges the stacked (n, n+1) family, and every device replays
+    this identical O(n²) epilogue.  ``gram``/``y_w`` must be normalized to
+    unit total weight (both are linear in w, so post-psum renormalization
+    by 1/Σw is exactly the per-piece scaling).  ``gram`` must be symmetric
+    by construction — true for every caller (the √w partials, their psum,
+    and the central-comm einsum all produce bitwise-symmetric grams), so
+    the memory-bound ``0.5·(C + Cᵀ)`` repair pass stays dropped exactly as
+    in ``ref.fused_gen_update``."""
+    c = gen_coef(params, state)
+    C_new, p_sigma_new, p_c_new, y_w = kref.fused_update_from_gram(
+        state.C, state.B, state.D, state.p_sigma, state.p_c, gram, y_w,
+        c["c_sigma"], c["mu_eff"], c["c_c"], c["c_1"], c["c_mu"],
+        c["chi_n"], c["gen1"])
+    new = _finish_update(cfg, params, state, f_sorted, x_best, n_evals,
+                         C_new, p_sigma_new, p_c_new, y_w, eigen)
     return jax.tree_util.tree_map(
         lambda old, nw: jnp.where(state.stop, old, nw), state, new)
 

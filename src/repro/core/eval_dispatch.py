@@ -26,6 +26,30 @@ import jax.numpy as jnp
 AxisNames = Sequence[str]
 
 
+class FusableEval:
+    """A fitness closure that ALSO carries the separable coefficients of its
+    (traced-fid) evaluation — the per-fid ``fusable`` capability flag of the
+    dispatch menu, in object form.
+
+    Calling it behaves exactly like the wrapped closure (the two-program
+    fallback, and what every non-fused engine path keeps using); engines
+    that can fuse (``ladder._slots_fused_update``) detect the ``.sep``
+    payload via ``getattr(fitness_fn, "sep", None)`` and route sampling
+    through the eval-fused kernel ops instead, so X never materializes.
+    Built by ``bbob.fusable_fitness`` — only when the whole static fid menu
+    is separable.
+    """
+
+    __slots__ = ("fn", "sep")
+
+    def __init__(self, fn, sep):
+        self.fn = fn
+        self.sep = sep
+
+    def __call__(self, X):
+        return self.fn(X)
+
+
 def shard_map_compat(f, mesh, in_specs, out_specs, check: bool = False):
     """``jax.shard_map`` across jax versions.
 

@@ -143,15 +143,50 @@ def _slots_fused_update(cfg: CMAConfig, params_k, states: cmaes.CMAState,
     host-loop baseline runs.
     """
     lam_max = cfg.lam_max
-    Z = jax.vmap(lambda st, kg: cmaes.sample_z(st, kg, lam_max))(states, kgs)
-    Y, X = cmaes.kops.gen_sample(states.m, states.sigma, states.B, states.D,
-                                 Z, impl=impl)
-    F = jax.vmap(fitness_fn)(X)
+    resolved = cmaes.kops.resolve_impl(impl)
+    sep = getattr(fitness_fn, "sep", None)   # bbob.fusable_fitness payload
+    if resolved == "pallas_rng":
+        # In-kernel RNG tier: the per-(slot, incarnation, generation) key IS
+        # the counter-stream seed — nothing host-shaped remains on the
+        # sampled path, and the stream stays chunk/padding-independent the
+        # same way the row-keyed fold_in draw is (counter = (row<<16)|col).
+        seeds = jnp.asarray(kgs, jnp.uint32).reshape(kgs.shape[0], 2)
+        if sep is not None:
+            X = None
+            Y, F = cmaes.kops.gen_sample_rng_eval(
+                states.m, states.sigma, states.B, states.D, seeds, lam_max,
+                sep, impl=impl)
+        else:
+            Y, X = cmaes.kops.gen_sample_rng(
+                states.m, states.sigma, states.B, states.D, seeds, lam_max,
+                impl=impl)
+            F = jax.vmap(fitness_fn)(X)
+    else:
+        Z = jax.vmap(lambda st, kg: cmaes.sample_z(st, kg, lam_max))(states,
+                                                                     kgs)
+        if sep is not None:
+            # eval-fused epilogue: the kernel/ref returns F directly and X
+            # never materializes in HBM (bit-identical F to the dispatched
+            # menu on the XLA tiers — see bbob.separable_eval).
+            X = None
+            Y, F = cmaes.kops.gen_sample_eval(
+                states.m, states.sigma, states.B, states.D, Z, sep,
+                impl=impl)
+        else:
+            Y, X = cmaes.kops.gen_sample(states.m, states.sigma, states.B,
+                                         states.D, Z, impl=impl)
+            F = jax.vmap(fitness_fn)(X)
     F = jnp.where(jnp.arange(lam_max)[None, :] < params_k.lam[:, None],
                   F, jnp.inf)
-    W, f_sorted, x_best, n_evals = jax.vmap(
-        lambda f, x, p: cmaes.population_stats(f, x, p, lam_max))(
-            F, X, params_k)
+    if X is None:
+        W, f_sorted, x_best, n_evals = jax.vmap(
+            lambda f, y, m, s, p: cmaes.population_stats_from_y(
+                f, y, m, s, p, lam_max))(
+                F, Y, states.m, states.sigma, params_k)
+    else:
+        W, f_sorted, x_best, n_evals = jax.vmap(
+            lambda f, x, p: cmaes.population_stats(f, x, p, lam_max))(
+                F, X, params_k)
     C_new, ps_new, pc_new, y_w = cmaes.kops.gen_update(
         states.C, states.B, states.D, states.p_sigma, states.p_c, Y, W,
         cmaes.gen_coef(params_k, states), impl=impl)
@@ -464,13 +499,17 @@ class LadderEngine:
 
     # -- campaign: vmap over (function, instance, run) triples -----------------
     def campaign_runner(self, branch_fids: Tuple[int, ...], total_gens: int):
-        """Jitted vmapped runner, cached per (fid set, scan length)."""
-        key = (tuple(branch_fids), int(total_gens))
+        """Jitted vmapped runner, cached per (fid set, scan length) — plus
+        the eval-fusion toggle, read at trace time like the impl override."""
+        key = (tuple(branch_fids), int(total_gens),
+               bbob.eval_fusion_enabled())
         if key not in self._runner_cache:
             def run_one(base_key, inst):
                 def fit(X):
                     return bbob.evaluate_dynamic(inst, X, branch_fids)
-                return self.run_scan(base_key, fit, total_gens)
+                return self.run_scan(
+                    base_key, bbob.fusable_fitness(inst, branch_fids, fit),
+                    total_gens)
             self._runner_cache[key] = jax.jit(jax.vmap(run_one))
         return self._runner_cache[key]
 

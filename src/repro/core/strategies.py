@@ -189,6 +189,7 @@ class KDistributed:
         w = jnp.where(jnp.isfinite(f), w, 0.0)
 
         # ---- population moments ------------------------------------------------
+        fused = cmaes.kops.use_fused(self.impl)
         if self.comm == "central":
             # paper-faithful (§3.2.1): the λ points travel to the descent's
             # main process (here: gathered everywhere, SPMD-replicated main).
@@ -210,8 +211,27 @@ class KDistributed:
             wsum_st = jnp.sum(w_rows, axis=1)
             nval_st = jnp.sum(for_desc.T & jnp.isfinite(f_flat)[None, :],
                               axis=1).astype(jnp.int64)
+        elif fused:
+            # beyond-paper, fused (this PR): ONE √w-factored gram-FAMILY dot
+            # per device — [gram | y_w] = Ysᵀ·[Ys | √w] — scattered into a
+            # stacked (D, n, n+1) tensor, so the generation pays a single
+            # λ-contraction and a single psum'd tensor where the unfused
+            # path pays two dots (gram, w·y) and two reduced arrays.
+            rw = jnp.sqrt(w)
+            Ys = rw[:, None] * y
+            fam_part = Ys.T @ jnp.concatenate([Ys, rw[:, None]], axis=1)
+            gdt = jnp.dtype(self.gram_dtype) if self.gram_dtype else dt
+            fam_st = jnp.zeros((D, n, n + 1), gdt).at[kd].add(
+                fam_part.astype(gdt))
+            wsum_st = jnp.zeros((D,), dt).at[kd].add(jnp.sum(w))
+            nval_st = jnp.zeros((D,), jnp.int64).at[kd].add(
+                jnp.sum(jnp.isfinite(f)).astype(jnp.int64))
+            fam_st, wsum_st, nval_st = jax.lax.psum(
+                (fam_st, wsum_st, nval_st), axes)
+            fam_st = fam_st.astype(dt)
+            gram_st, yw_st = fam_st[:, :, :n], fam_st[:, :, n]
         else:
-            # beyond-paper: local partial moments + ONE fused stacked psum
+            # pre-fused op soup, kept under impl="xla_unfused" for A/B
             yw_part = w @ y
             gram_part = cmaes.kops.rank_mu_gram(y, w, impl=self.impl)
             gdt = jnp.dtype(self.gram_dtype) if self.gram_dtype else dt
@@ -245,12 +265,23 @@ class KDistributed:
         r_star = jnp.argmin(row_masked, axis=1)
         x_best = xb_all[r_star]                                   # (D, n)
 
-        mom = cmaes.Moments(y_w=yw_st, gram=gram_st, f_sorted=f_sorted,
-                            x_best=x_best, n_evals=nval_st.astype(jnp.int32))
-
-        upd = jax.vmap(lambda p, s, m: cmaes.masked_update(
-            self.cfg, p, s, m, impl=self.impl, eigen=eigen))(
-                self.sparams, carry.states, mom)
+        if fused:
+            # replicated fused epilogue (PR-4 form) on the reduced family —
+            # both comm schedules feed the same mathematically-identical
+            # gram, so they share this tail bit-for-bit.
+            upd = jax.vmap(lambda p, s, g, yw, fs, xb, ne:
+                           cmaes.masked_update_from_gram(
+                               self.cfg, p, s, g, yw, fs, xb, ne,
+                               eigen=eigen))(
+                self.sparams, carry.states, gram_st, yw_st, f_sorted,
+                x_best, nval_st.astype(jnp.int32))
+        else:
+            mom = cmaes.Moments(y_w=yw_st, gram=gram_st, f_sorted=f_sorted,
+                                x_best=x_best,
+                                n_evals=nval_st.astype(jnp.int32))
+            upd = jax.vmap(lambda p, s, m: cmaes.masked_update(
+                self.cfg, p, s, m, impl=self.impl, eigen=eigen))(
+                    self.sparams, carry.states, mom)
 
         # ---- global best (before any restart wipes descent state) -------------
         gen_best = f_sorted[:, 0]
@@ -441,11 +472,23 @@ class KReplicated:
         w = params.weights[jnp.clip(ranks, 0, params.weights.shape[0] - 1)]
         w = jnp.where(jnp.isfinite(f), w, 0.0)
 
-        yw_part = w @ y
-        gram_part = cmaes.kops.rank_mu_gram(y, w, impl=self.impl)
-        gram, yw, wsum, nval = jax.lax.psum(
-            (gram_part, yw_part, jnp.sum(w),
-             jnp.sum(jnp.isfinite(f)).astype(jnp.int64)), "mem")
+        fused = cmaes.kops.use_fused(self.impl)
+        if fused:
+            # one √w-factored gram-family dot + ONE psum'd tensor over 'mem'
+            # (same residency move as KDistributed — see masked_update_from_gram)
+            rw = jnp.sqrt(w)
+            Ys = rw[:, None] * y
+            fam_part = Ys.T @ jnp.concatenate([Ys, rw[:, None]], axis=1)
+            fam, wsum, nval = jax.lax.psum(
+                (fam_part, jnp.sum(w),
+                 jnp.sum(jnp.isfinite(f)).astype(jnp.int64)), "mem")
+            gram, yw = fam[:, :n], fam[:, n]
+        else:
+            yw_part = w @ y
+            gram_part = cmaes.kops.rank_mu_gram(y, w, impl=self.impl)
+            gram, yw, wsum, nval = jax.lax.psum(
+                (gram_part, yw_part, jnp.sum(w),
+                 jnp.sum(jnp.isfinite(f)).astype(jnp.int64)), "mem")
         scale = jnp.where(wsum > 1e-12, 1.0 / jnp.maximum(wsum, 1e-12), 0.0)
         yw, gram = yw * scale, gram * scale
 
@@ -454,10 +497,15 @@ class KReplicated:
         xb_all = jax.lax.all_gather(x[i_loc], "mem").reshape(g, n)
         x_best = xb_all[jnp.argmin(jnp.min(f_all, axis=1))]
 
-        mom = cmaes.Moments(y_w=yw, gram=gram, f_sorted=f_sorted,
-                            x_best=x_best, n_evals=nval.astype(jnp.int32))
-        new_state = cmaes.masked_update(cfg, params, state, mom,
-                                        impl=self.impl, eigen=eigen)
+        if fused:
+            new_state = cmaes.masked_update_from_gram(
+                cfg, params, state, gram, yw, f_sorted, x_best,
+                nval.astype(jnp.int32), eigen=eigen)
+        else:
+            mom = cmaes.Moments(y_w=yw, gram=gram, f_sorted=f_sorted,
+                                x_best=x_best, n_evals=nval.astype(jnp.int32))
+            new_state = cmaes.masked_update(cfg, params, state, mom,
+                                            impl=self.impl, eigen=eigen)
 
         # global best across groups (gather per-group candidates)
         gen_best = f_sorted[0]

@@ -152,6 +152,7 @@ def island_program_key(eng: bucketed.BucketedLadderEngine, k: int,
     fit_id = tuple(branch_fids) if fitness_fn is None else fitness_fn
     return (eng.bucket_cfgs[k], eng.lam_start, eng.kmax_exp, eng.max_evals,
             tuple(eng.domain), eng.impl, int(k), int(seg_gens), fit_id,
+            bbob.eval_fusion_enabled(),
             tuple((d.platform, d.id) for d in devices))
 
 
@@ -209,6 +210,9 @@ class MeshCampaignEngine:
     mesh: Optional[object] = None       # jax.sharding.Mesh over axis "camp"
     axis: str = "camp"
     stop_at: Optional[float] = None     # S2 early-stop on the shared best
+    overlap: bool = True                # S1 speculative double-buffered
+                                        # dispatch (exchange scalars fold
+                                        # lazily at the boundary pull)
 
     def __post_init__(self):
         if self.strategy not in ("ordered", "concurrent"):
@@ -237,7 +241,9 @@ class MeshCampaignEngine:
             def run_one(base_key, inst, c):
                 def fit(X):
                     return bbob.evaluate_dynamic(inst, X, branch_fids)
-                return eng.segment_scan(k, base_key, fit, c, seg_gens)
+                return eng.segment_scan(
+                    k, base_key, bbob.fusable_fitness(inst, branch_fids, fit),
+                    c, seg_gens)
             return jax.vmap(run_one)
 
         def run_one(base_key, c):
@@ -254,7 +260,8 @@ class MeshCampaignEngine:
         jit-cache size 1 per entry, so ``compiles ≤ #buckets`` holds at the
         executable level (asserted in tests/mesh_check.py)."""
         cache = self._runner_cache if cache is None else cache
-        key = ("ordered", int(k), int(seg_gens), tuple(branch_fids))
+        key = ("ordered", int(k), int(seg_gens), tuple(branch_fids),
+               bbob.eval_fusion_enabled())
         if key not in cache:
             axis = self.axis
             vmapped = self._seg_fn(k, seg_gens, branch_fids, fitness_fn)
@@ -339,8 +346,19 @@ class MeshCampaignEngine:
     def _drive_ordered(self, keys, insts, carry, branch_fids, fitness_fn,
                        max_segments: int):
         """S1: the bucketed re-bucketing loop verbatim (``drive_segments``),
-        with shard_map dispatch and the allgather pull — one barrier per
-        segment."""
+        with shard_map dispatch and the allgather pull.
+
+        The psum'd exchange scalars are folded LAZILY: ``dispatch`` leaves
+        them device-resident (keyed by the segment's output carry) and the
+        boundary pull — which already blocks on that same segment's carry —
+        folds the matching entry afterwards, when the values are guaranteed
+        ready and ``int()`` costs a ready-buffer read instead of a device
+        round-trip.  With nothing in ``dispatch`` blocking on its own
+        outputs, S1 runs the bucketed driver's speculative double-buffered
+        dispatch (``engine.overlap``, default on): trajectories are
+        bit-identical (a mispredicted segment's output — and its pending
+        exchange entry — is discarded without ever being forced), and each
+        accepted segment still produces exactly one exchange record."""
         shd = campaign_shardings(keys, self.mesh, self.axis)
         keys = jax.device_put(keys, shd)
         carry = jax.tree_util.tree_map(
@@ -351,6 +369,9 @@ class MeshCampaignEngine:
         local_cache = None if fitness_fn is None else {}
         exchange: List[dict] = []
         reg = obs.metrics()
+        # pending exchange scalars, matched to the accepted carry by object
+        # identity (holding the array also pins its id against reuse)
+        inflight: List[tuple] = []
 
         def dispatch(k, seg_gens, c):
             runner = self.ordered_runner(k, seg_gens, branch_fids,
@@ -360,23 +381,32 @@ class MeshCampaignEngine:
             c, tr, g_fev, g_best = runner(*args)
             reg.histogram("mesh_island_dispatch_s", strategy="ordered",
                           island="all").observe(time.perf_counter() - t0)
-            t0 = time.perf_counter()
-            g_fev = int(g_fev)          # forces the psum'd exchange scalars
-            reg.histogram("mesh_exchange_s",
-                          strategy="ordered").observe(
-                              time.perf_counter() - t0)
-            reg.counter("mesh_exchange_rounds_total",
-                        strategy="ordered").inc()
-            exchange.append({"bucket": int(k), "global_fevals": g_fev,
-                             "global_best": _finite_or_none(g_best)})
+            inflight.append((c.total_fevals, int(k), g_fev, g_best))
             return c, tr
 
-        # overlap=False pinned: this dispatch forces the psum'd exchange
-        # scalars (int(g_fev)), so a speculative dispatch would block on its
-        # own output and serialize instead of overlapping
+        def pull(c):
+            res = pull_schedule_allgather(c)
+            for i, (arr, k, g_fev, g_best) in enumerate(inflight):
+                if arr is c.total_fevals:
+                    t0 = time.perf_counter()
+                    exchange.append({
+                        "bucket": k, "global_fevals": int(g_fev),
+                        "global_best": _finite_or_none(g_best)})
+                    reg.histogram("mesh_exchange_s", strategy="ordered"
+                                  ).observe(time.perf_counter() - t0)
+                    reg.counter("mesh_exchange_rounds_total",
+                                strategy="ordered").inc()
+                    # anything dispatched before the accepted segment can
+                    # never be pulled again — mispredicted spec entries drop
+                    del inflight[:i + 1]
+                    break
+            return res
+
+        # every accepted segment is folded: the loop always pulls the carry
+        # it just accepted before deciding whether another bucket exists
         carry, trace, segments, bucket_wall = bucketed.drive_segments(
             self.bucketed, carry, dispatch, max_segments,
-            time_axis=1, pull=pull_schedule_allgather, overlap=False)
+            time_axis=1, pull=pull, overlap=self.overlap)
         return carry, trace, segments, bucket_wall, exchange, None
 
     def _drive_concurrent(self, keys, insts, carry, branch_fids, fitness_fn,

@@ -14,6 +14,7 @@ the mesh (the paper's 'scatter the λ evaluations', §3.2.1).
 """
 from __future__ import annotations
 
+import os
 from typing import NamedTuple
 
 import jax
@@ -21,6 +22,15 @@ import jax.numpy as jnp
 import numpy as np
 
 SEARCH_DOMAIN = (-5.0, 5.0)
+
+#: fids whose evaluation is fully separable AFTER the x_opt shift — i.e.
+#: expressible as Σᵢ scaleᵢ·g(xᵢ − shiftᵢ)² with an elementwise g — and
+#: therefore fusable into the sample kernel's epilogue (f(X) computed while
+#: X is still in registers; X never stored).  f1 sphere (g = identity) and
+#: f2 ellipsoid (g = t_osz, the f10-style 10^{6i/(n−1)} conditioning
+#: WITHOUT f10's rotation).  Rotated fids (f10 itself: `@ R.T`) are not
+#: separable and take the dispatched two-program path.
+FUSABLE_FIDS = (1, 2)
 
 GROUPS = {  # paper §4.1: the five BBOB difficulty groups
     "separable": (1, 2, 3, 4, 5),
@@ -158,11 +168,20 @@ def _f01(inst, X):
     return jnp.sum(z ** 2, -1)
 
 
+def _ell_scale(n: int, dtype) -> jnp.ndarray:
+    """The ellipsoid axis weights 10^(6·i/(n−1)), host-computed so the SAME
+    literal constant is embedded in every program that needs them.  (XLA's
+    compiled/folded ``pow`` differs from the eager one by ulps; sharing the
+    literal is what makes the eval-fused f2 bit-identical to the dispatched
+    ``_f02``.)"""
+    return jnp.asarray(
+        np.power(10.0, 6.0 * np.arange(n) / max(n - 1.0, 1.0)), dtype)
+
+
 def _f02(inst, X):
     n = X.shape[-1]
     z = t_osz(X - inst.x_opt)
-    scale = 10.0 ** (6.0 * jnp.arange(n) / max(n - 1.0, 1.0))
-    return jnp.sum(scale * z ** 2, -1)
+    return jnp.sum(_ell_scale(n, X.dtype) * z ** 2, -1)
 
 
 def _f03(inst, X):
@@ -422,6 +441,80 @@ def evaluate_dynamic(inst: BBOBInstance, X: jnp.ndarray,
     # a fid outside branch_fids would silently dispatch to branch 0 (argmax of
     # all-False is 0); the fid is traced so we cannot raise — poison instead
     return jnp.where(jnp.any(match), val, jnp.nan)
+
+
+# ---------------------------------------------------------------------------
+# separable-fid eval fusion (the sample kernel's fitness epilogue)
+# ---------------------------------------------------------------------------
+
+class SepCoeffs(NamedTuple):
+    """Per-instance coefficients of a separable fid: f(X) = Σᵢ scaleᵢ·
+    g(Xᵢ − shiftᵢ)² + f_opt with g selected by ``mode`` (0 = identity,
+    1 = t_osz).  Pure data — rides kernel calls (SMEM scalars + two (n,)
+    rows) and program-cache keys never see the values."""
+    scale: jnp.ndarray     # (n,)
+    shift: jnp.ndarray     # (n,) — x_opt
+    f_opt: jnp.ndarray     # ()
+    mode: jnp.ndarray      # () int32: 0 identity, 1 t_osz
+    valid: jnp.ndarray     # () bool: fid ∈ branch_fids (else poison NaN)
+
+
+def separable_coeffs(inst: BBOBInstance, branch_fids: tuple) -> SepCoeffs:
+    """SepCoeffs for a (traced-fid) instance over a fusable static fid menu.
+
+    The per-fid scale/mode tables are selected by the same argmax-match
+    index ``evaluate_dynamic`` dispatches on, so a stacked campaign keeps
+    its fid a row operand; a fid outside ``branch_fids`` poisons to NaN
+    exactly like the dispatched path.
+    """
+    branch_fids = tuple(branch_fids)
+    assert all(f in FUSABLE_FIDS for f in branch_fids), branch_fids
+    n = inst.x_opt.shape[-1]
+    dt = inst.x_opt.dtype
+    scale_tab = {1: jnp.ones((n,), dt), 2: _ell_scale(n, dt)}
+    mode_tab = {1: 0, 2: 1}
+    fid_tab = jnp.asarray(branch_fids, jnp.int32)
+    match = fid_tab == inst.fid.astype(jnp.int32)
+    idx = jnp.argmax(match)
+    return SepCoeffs(
+        scale=jnp.stack([scale_tab[f] for f in branch_fids])[idx],
+        shift=inst.x_opt,
+        f_opt=inst.f_opt,
+        mode=jnp.asarray([mode_tab[f] for f in branch_fids],
+                         jnp.int32)[idx],
+        valid=jnp.any(match))
+
+
+def separable_eval(X: jnp.ndarray, sep: SepCoeffs) -> jnp.ndarray:
+    """Evaluate a separable fid from its coefficients — bit-identical to the
+    dispatched ``evaluate_dynamic`` on the same X (same elementwise chain,
+    same last-axis reduce; ×1.0 and +0.0 are IEEE-exact)."""
+    t = X - sep.shift[..., None, :]
+    tg = jnp.where(sep.mode[..., None, None] == 1, t_osz(t), t)
+    val = jnp.sum(sep.scale[..., None, :] * tg ** 2, -1) + sep.f_opt[..., None]
+    return jnp.where(sep.valid[..., None], val, jnp.nan)
+
+
+def eval_fusion_enabled() -> bool:
+    """Env toggle (``REPRO_EVAL_FUSION=0`` disables) — read at TRACE time,
+    like ``REPRO_KERNEL_IMPL``: export before the first engine call, and
+    mind that cached programs keep the setting they were traced with (the
+    engines' program-cache keys include it)."""
+    return os.environ.get("REPRO_EVAL_FUSION", "1").strip() != "0"
+
+
+def fusable_fitness(inst: BBOBInstance, branch_fids: tuple, fn):
+    """Wrap a campaign fitness closure with its separable coefficients when
+    the WHOLE static fid menu is fusable (and fusion is enabled) — the
+    engines detect the ``.sep`` attribute and route sampling through the
+    eval-fused kernels; any non-fusable fid in the menu, or the env kill
+    switch, returns ``fn`` unchanged (two-program fallback)."""
+    branch_fids = tuple(branch_fids)
+    if (not branch_fids or not eval_fusion_enabled()
+            or any(f not in FUSABLE_FIDS for f in branch_fids)):
+        return fn
+    from repro.core.eval_dispatch import FusableEval
+    return FusableEval(fn, separable_coeffs(inst, branch_fids))
 
 
 def evaluate_stacked(fid_array: jnp.ndarray, inst_params: BBOBInstance,

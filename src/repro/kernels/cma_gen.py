@@ -128,6 +128,259 @@ def cma_gen_sample(m: jnp.ndarray, sigma: jnp.ndarray, B: jnp.ndarray,
 
 
 # ---------------------------------------------------------------------------
+# residency variants: in-kernel RNG + eval-fused epilogue (PR 7)
+# ---------------------------------------------------------------------------
+#
+# One parametrized factory covers the three residency combinations on top
+# of the plain kernel above (kept verbatim — it is the default tier and the
+# HLO-pinned baseline):
+#
+#   rng=True         Z is drawn IN the kernel via the portable threefry2x32
+#                    counter stream (kernels/ref.py — plain jnp uint32 ops,
+#                    so the same code lowers under Mosaic AND interpret
+#                    mode), seeded per slot from the row base key with
+#                    counter (row << 16) | col.  The host-shaped fold_in
+#                    stream and the HBM-resident (S, λ, n) Z tile both
+#                    disappear from the sampled path.
+#   fused_eval=True  the separable-fid fitness (bbob.SepCoeffs) is computed
+#                    in the epilogue while X = m + σ·Y is still in
+#                    registers: the kernel emits (Y, F) and X never exists
+#                    in HBM.
+#
+# ``pltpu.prng_random_bits`` (the hardware PRNG) has no interpret/CPU
+# lowering on this jax, so the threefry stream is the portable default;
+# the hw path stays available behind ``rng_bits="hw"`` for TPU-only runs
+# (seeded per (slot, row-block) from the same seeds — a DIFFERENT stream,
+# gated out of every parity test off-TPU).
+
+def _make_sample_kernel(*, n_k: int, bl: int, bn: int, np_: int, n_true: int,
+                        rng: bool, fused_eval: bool, rng_bits: str = "counter",
+                        z_dtype=None):
+    from repro.kernels import ref as _ref
+
+    def body(*refs):
+        it = iter(refs)
+        sigma_ref = next(it)
+        seeds_ref = next(it) if rng else None
+        z_ref = None if rng else next(it)
+        d_ref, b_ref, m_ref = next(it), next(it), next(it)
+        if fused_eval:
+            scale_ref, shift_ref, fopt_ref = next(it), next(it), next(it)
+            mode_ref, valid_ref = next(it), next(it)
+        y_ref, out2_ref, acc_ref = next(it), next(it), next(it)
+
+        s, l, k = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+        @pl.when(k == 0)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        if rng and rng_bits == "hw":
+            # TPU hardware PRNG: per-(slot, row-block) seed keeps each
+            # grid step's draw independent of every other step's.
+            pltpu.prng_seed(seeds_ref[s, 0], seeds_ref[s, 1], l, k)
+            bits = pltpu.prng_random_bits((bl, bn))
+            z = _ref._bits_to_unit(bits.astype(jnp.uint32), jnp.float32)
+            z2 = _ref._bits_to_unit(
+                pltpu.prng_random_bits((bl, bn)).astype(jnp.uint32),
+                jnp.float32)
+            two_pi = jnp.float32(2.0 * 3.14159265358979323846)
+            z = jnp.sqrt(jnp.float32(-2.0) * jnp.log1p(-z)) * jnp.cos(
+                two_pi * z2)
+        elif rng:
+            rows = (jax.lax.broadcasted_iota(jnp.uint32, (bl, bn), 0)
+                    + (l * bl).astype(jnp.uint32))
+            cols = (jax.lax.broadcasted_iota(jnp.uint32, (bl, bn), 1)
+                    + (k * bn).astype(jnp.uint32))
+            z = _ref.threefry_normal(seeds_ref[s, 0], seeds_ref[s, 1],
+                                     rows, cols, z_dtype).astype(jnp.float32)
+        else:
+            z = z_ref[0].astype(jnp.float32)        # (bl, bn)
+        d = d_ref[0].astype(jnp.float32)            # (bn,)
+        b = b_ref[0].astype(jnp.float32)            # (np, bn)
+        acc_ref[...] += jax.lax.dot_general(
+            z * d[None, :], b, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+        @pl.when(k == n_k - 1)
+        def _epilogue():
+            sigma = sigma_ref[s]
+            m = m_ref[0].astype(jnp.float32)        # (np,)
+            y = acc_ref[...]
+            y_ref[0] = y.astype(y_ref.dtype)
+            x = m[None, :] + sigma * y              # (bl, np) — in registers
+            if not fused_eval:
+                out2_ref[0] = x.astype(out2_ref.dtype)
+                return
+            from repro.fitness import bbob as _bbob
+            # the eval chain runs in the OUTPUT dtype on the f32-computed x
+            # — exactly the values the two-program path would hand the
+            # dispatched menu.  (On TPU the output dtype is f32 anyway; the
+            # state-dtype chain is what keeps the f64 interpret tier at ref
+            # precision, e.g. + f_opt must not round to f32.)
+            dt = out2_ref.dtype
+            xe = x.astype(dt)
+            t = xe - shift_ref[0][None, :]
+            tg = jnp.where(mode_ref[s] == 1, _bbob.t_osz(t), t)
+            # padding cols: scale is zero-padded, but guard the transform
+            # output anyway (0·NaN would poison the row sum)
+            colm = jax.lax.broadcasted_iota(jnp.int32, (bl, np_), 1) < n_true
+            tg = jnp.where(colm, tg, jnp.zeros((), dt))
+            fv = jnp.sum(scale_ref[0][None, :] * tg * tg, axis=1) \
+                + fopt_ref[0, 0]
+            fv = jnp.where(valid_ref[s] == 1, fv, jnp.asarray(jnp.nan, dt))
+            out2_ref[0] = fv.astype(dt)
+
+    return body
+
+
+def _sample_call(m, sigma, B, D, *, Z=None, seeds=None, sep=None,
+                 lam=None, bl=128, bn=128, interpret=False,
+                 rng_bits: str = "counter"):
+    """Shared pad/spec plumbing of the residency sample kernels.  Returns
+    (Y, X) without ``sep`` and (Y, F) with it."""
+    rng = seeds is not None
+    fused_eval = sep is not None
+    S, n = m.shape
+    lam = Z.shape[1] if Z is not None else int(lam)
+    dt = m.dtype
+    bl = _round_block(lam, bl)
+    bn = _round_block(n, bn)
+    lp = -(-lam // bl) * bl
+    np_ = -(-n // bn) * bn
+    Bp = jnp.zeros((S, np_, np_), dt).at[:, :n, :n].set(B)
+    Dp = jnp.zeros((S, np_), dt).at[:, :n].set(D)
+    Mp = jnp.zeros((S, np_), dt).at[:, :n].set(m)
+    sig = jnp.asarray(sigma, jnp.float32)
+
+    n_l, n_k = lp // bl, np_ // bn
+    in_specs = [pl.BlockSpec(memory_space=pltpu.SMEM)]          # sigma (S,)
+    args = [sig]
+    if rng:
+        in_specs.append(pl.BlockSpec(memory_space=pltpu.SMEM))  # seeds (S,2)
+        args.append(jnp.asarray(seeds, jnp.uint32))
+    else:
+        in_specs.append(pl.BlockSpec((1, bl, bn), lambda s, l, k: (s, l, k)))
+        args.append(jnp.zeros((S, lp, np_), dt).at[:, :lam, :n].set(Z))
+    in_specs += [
+        pl.BlockSpec((1, bn), lambda s, l, k: (s, k)),           # D
+        pl.BlockSpec((1, np_, bn), lambda s, l, k: (s, 0, k)),   # B
+        pl.BlockSpec((1, np_), lambda s, l, k: (s, 0)),          # m
+    ]
+    args += [Dp, Bp, Mp]
+    if fused_eval:
+        scale, shift, fopt, mode, valid = sep
+        row = pl.BlockSpec((1, np_), lambda s, l, k: (s, 0))
+        in_specs += [row, row,
+                     pl.BlockSpec((1, 1), lambda s, l, k: (s, 0)),   # f_opt
+                     pl.BlockSpec(memory_space=pltpu.SMEM),          # mode
+                     pl.BlockSpec(memory_space=pltpu.SMEM)]          # valid
+        args += [jnp.zeros((S, np_), dt).at[:, :n].set(scale),
+                 jnp.zeros((S, np_), dt).at[:, :n].set(shift),
+                 jnp.asarray(fopt, dt).reshape(S, 1),
+                 jnp.asarray(mode, jnp.int32),
+                 jnp.asarray(valid, jnp.int32)]
+
+    y_spec = pl.BlockSpec((1, bl, np_), lambda s, l, k: (s, l, 0))
+    if fused_eval:
+        out_specs = (y_spec, pl.BlockSpec((1, bl), lambda s, l, k: (s, l)))
+        out_shape = (jax.ShapeDtypeStruct((S, lp, np_), dt),
+                     jax.ShapeDtypeStruct((S, lp), dt))
+    else:
+        out_specs = (y_spec, y_spec)
+        out_shape = (jax.ShapeDtypeStruct((S, lp, np_), dt),
+                     jax.ShapeDtypeStruct((S, lp, np_), dt))
+
+    kernel = _make_sample_kernel(n_k=n_k, bl=bl, bn=bn, np_=np_, n_true=n,
+                                 rng=rng, fused_eval=fused_eval,
+                                 rng_bits=rng_bits, z_dtype=dt)
+    Y, out2 = pl.pallas_call(
+        kernel, grid=(S, n_l, n_k), in_specs=in_specs, out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=[pltpu.VMEM((bl, np_), jnp.float32)],
+        interpret=interpret,
+    )(*args)
+    if fused_eval:
+        return Y[:, :lam, :n], out2[:, :lam]
+    return Y[:, :lam, :n], out2[:, :lam, :n]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("lam", "bl", "bn", "interpret",
+                                    "rng_bits"))
+def cma_gen_sample_rng(m, sigma, B, D, seeds, *, lam: int, bl: int = 128,
+                       bn: int = 128, interpret: bool = False,
+                       rng_bits: str = "counter"):
+    """Fused sampling with in-kernel RNG: per-slot ``seeds`` (S, 2) uint32
+    replace the (S, lam, n) Z operand.  Returns (Y, X), each (S, lam, n).
+    Oracle: ``ref.gen_sample_rng`` (bit-exact Z stream by construction)."""
+    return _sample_call(m, sigma, B, D, seeds=seeds, lam=lam, bl=bl, bn=bn,
+                        interpret=interpret, rng_bits=rng_bits)
+
+
+@functools.partial(jax.jit, static_argnames=("bl", "bn", "interpret"))
+def cma_gen_sample_eval(m, sigma, B, D, Z, scale, shift, fopt, mode, valid,
+                        *, bl: int = 128, bn: int = 128,
+                        interpret: bool = False):
+    """Eval-fused sampling: the separable fid (per-slot SepCoeffs rows
+    ``scale``/``shift`` (S, n), scalars ``fopt``/``mode``/``valid`` (S,))
+    is evaluated in the epilogue; returns (Y, F) — X never leaves VMEM.
+    Oracle: ``ref.gen_sample_eval``."""
+    return _sample_call(m, sigma, B, D, Z=Z,
+                        sep=(scale, shift, fopt, mode, valid),
+                        bl=bl, bn=bn, interpret=interpret)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("lam", "bl", "bn", "interpret",
+                                    "rng_bits"))
+def cma_gen_sample_rng_eval(m, sigma, B, D, seeds, scale, shift, fopt, mode,
+                            valid, *, lam: int, bl: int = 128, bn: int = 128,
+                            interpret: bool = False,
+                            rng_bits: str = "counter"):
+    """The full residency kernel: seeds → (Y, F).  No host RNG stream, no
+    HBM Z, no HBM X — one kernel in, one kernel out per generation."""
+    return _sample_call(m, sigma, B, D, seeds=seeds,
+                        sep=(scale, shift, fopt, mode, valid), lam=lam,
+                        bl=bl, bn=bn, interpret=interpret, rng_bits=rng_bits)
+
+
+def _z_kernel(seeds_ref, z_ref, *, bl: int, bn: int, z_dtype):
+    from repro.kernels import ref as _ref
+    s, l, k = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    rows = (jax.lax.broadcasted_iota(jnp.uint32, (bl, bn), 0)
+            + (l * bl).astype(jnp.uint32))
+    cols = (jax.lax.broadcasted_iota(jnp.uint32, (bl, bn), 1)
+            + (k * bn).astype(jnp.uint32))
+    z_ref[0] = _ref.threefry_normal(seeds_ref[s, 0], seeds_ref[s, 1],
+                                    rows, cols, z_dtype).astype(z_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("lam", "n", "dtype", "bl", "bn",
+                                    "interpret"))
+def cma_sample_z_rng(seeds, *, lam: int, n: int, dtype, bl: int = 128,
+                     bn: int = 128, interpret: bool = False):
+    """Materialize the in-kernel Z stream — the parity surface the bit-exact
+    kernel↔ref tests compare (``ref.sample_z_rng``), and the compile probe
+    target for ``ops._rng_kernel_supported``."""
+    seeds = jnp.asarray(seeds, jnp.uint32)
+    S = seeds.shape[0]
+    bl = _round_block(lam, bl)
+    bn = _round_block(n, bn)
+    lp, np_ = -(-lam // bl) * bl, -(-n // bn) * bn
+    Z = pl.pallas_call(
+        functools.partial(_z_kernel, bl=bl, bn=bn, z_dtype=dtype),
+        grid=(S, lp // bl, np_ // bn),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM)],
+        out_specs=pl.BlockSpec((1, bl, bn), lambda s, l, k: (s, l, k)),
+        out_shape=jax.ShapeDtypeStruct((S, lp, np_), dtype),
+        interpret=interpret,
+    )(seeds)
+    return Z[:, :lam, :n]
+
+
+# ---------------------------------------------------------------------------
 # update megakernel
 # ---------------------------------------------------------------------------
 

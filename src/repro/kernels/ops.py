@@ -15,7 +15,21 @@
                     in interpret mode elsewhere (correctness-equivalent,
                     slow — the interpret path exists for the equivalence
                     tests, not for production CPU runs).
-  * ``"auto"``    — "pallas" on TPU backends, "xla" otherwise.
+  * ``"pallas_rng"`` — ``"pallas"`` plus in-kernel RNG for the generation
+                    sample: Z is drawn inside ``cma_gen_sample_rng`` from a
+                    portable threefry2x32 counter stream seeded per slot,
+                    so the host-shaped ``fold_in`` stream and the HBM Z
+                    operand disappear.  A DIFFERENT (but still
+                    counter-based, prefix-stable) stream from the default
+                    row-keyed one — trajectories are not comparable across
+                    tiers, which is why ``"auto"`` never selects it.  Off
+                    TPU (or if the Mosaic probe fails) the sample falls
+                    back to the XLA threefry ref — the bit-exact same
+                    stream, so the fallback never changes a trajectory.
+  * ``"auto"``    — "pallas" on TPU backends, "xla" otherwise.  Never
+                    resolves to "pallas_rng": switching the RNG stream is
+                    a trajectory-level decision the caller must make
+                    explicitly.
 
 ``REPRO_KERNEL_IMPL`` (env) overrides the caller's choice globally — handy
 for A/B runs of a whole campaign without threading a flag through every
@@ -33,11 +47,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.cma_gen import COEF_FIELDS, cma_gen_sample, cma_gen_update
+from repro.kernels.cma_gen import (COEF_FIELDS, cma_gen_sample,
+                                   cma_gen_sample_eval, cma_gen_sample_rng,
+                                   cma_gen_sample_rng_eval, cma_gen_update,
+                                   cma_sample_z_rng)
 from repro.kernels.cma_sample import cma_sample
 from repro.kernels.cma_update import cma_rank_mu_update
 
-IMPL_CHOICES = ("auto", "xla", "xla_unfused", "pallas")
+IMPL_CHOICES = ("auto", "xla", "xla_unfused", "pallas", "pallas_rng")
 
 
 @functools.lru_cache(maxsize=1)
@@ -73,10 +90,37 @@ def use_fused(impl: str) -> bool:
     return resolve_impl(impl) != "xla_unfused"
 
 
+def _kernel_tier(impl: str) -> bool:
+    """True for every resolved tier that routes through the Pallas kernels
+    ("pallas_rng" is "pallas" plus the in-kernel sample RNG — all non-sample
+    ops treat the two identically)."""
+    return impl in ("pallas", "pallas_rng")
+
+
+@functools.lru_cache(maxsize=1)
+def _rng_kernel_supported() -> bool:
+    """One-shot probe (satellite of the residency PR): can the in-kernel
+    RNG sample kernel actually compile and run on this backend?  Mosaic on
+    TPU is probed with a tiny real call; everywhere else the answer is a
+    static False — the XLA threefry ref IS the bit-exact same stream, so
+    the CPU fallback never changes a trajectory and interpret-mode kernels
+    stay a test-only surface (they are orders of magnitude too slow for
+    production CPU runs)."""
+    if not _on_tpu():
+        return False
+    try:
+        seeds = jnp.zeros((1, 2), jnp.uint32)
+        jax.block_until_ready(
+            cma_sample_z_rng(seeds, lam=8, n=128, dtype=jnp.float32))
+        return True
+    except Exception:                                   # pragma: no cover
+        return False
+
+
 def sample_transform(B, D, Z, impl: str = "auto"):
     """Y = Z·diag(D)·Bᵀ (lam, n)."""
     impl = resolve_impl(impl)
-    if impl != "pallas":
+    if not _kernel_tier(impl):
         return ref.sample_transform(B, D, Z)
     zero = jnp.zeros((B.shape[0],), Z.dtype)
     one = jnp.ones((), Z.dtype)
@@ -86,7 +130,7 @@ def sample_transform(B, D, Z, impl: str = "auto"):
 def sample_points(m, sigma, B, D, Z, impl: str = "auto"):
     """X = M + σ·B·diag(D)·Z (lam, n) — fused kernel when impl=pallas."""
     impl = resolve_impl(impl)
-    if impl != "pallas":
+    if not _kernel_tier(impl):
         return ref.sample_points(m, sigma, B, D, Z)
     return cma_sample(m, sigma, B, D, Z, interpret=not _on_tpu())
 
@@ -94,7 +138,7 @@ def sample_points(m, sigma, B, D, Z, impl: str = "auto"):
 def rank_mu_gram(Y, w, impl: str = "auto"):
     """Σ wᵢ yᵢyᵢᵀ — the paper's rank-λ GEMM (eq. 3)."""
     impl = resolve_impl(impl)
-    if impl != "pallas":
+    if not _kernel_tier(impl):
         return ref.rank_mu_gram(Y, w)
     n = Y.shape[1]
     zeros = jnp.zeros((n, n), Y.dtype)
@@ -153,7 +197,7 @@ def gen_sample(m, sigma, B, D, Z, impl: str = "auto"):
     arrays are accepted too (a singleton slot axis is added for the kernel).
     """
     impl = _gen_impl(impl, Z.shape[-1], Z.dtype, fits=_sample_fits)
-    if impl != "pallas":
+    if not _kernel_tier(impl):
         return ref.gen_sample(m, sigma, B, D, Z)
     if Z.ndim == 3:
         return cma_gen_sample(m, sigma, B, D, Z, interpret=not _on_tpu())
@@ -161,6 +205,78 @@ def gen_sample(m, sigma, B, D, Z, impl: str = "auto"):
     Y, X = cma_gen_sample(m1, jnp.asarray(sigma)[None], B1, D1, Z1,
                           interpret=not _on_tpu())
     return Y[0], X[0]
+
+
+def _sep_slots(sep, S: int, n: int, dtype):
+    """Broadcast a ``bbob.SepCoeffs`` (shared by all slots of a run, or
+    already per-slot) to the kernel's per-slot layout."""
+    return (jnp.broadcast_to(jnp.asarray(sep.scale, dtype), (S, n)),
+            jnp.broadcast_to(jnp.asarray(sep.shift, dtype), (S, n)),
+            jnp.broadcast_to(jnp.asarray(sep.f_opt, dtype), (S,)),
+            jnp.broadcast_to(jnp.asarray(sep.mode, jnp.int32), (S,)),
+            jnp.broadcast_to(jnp.asarray(sep.valid), (S,)))
+
+
+def gen_sample_rng(m, sigma, B, D, seeds, lam: int, impl: str = "auto"):
+    """Fused sampling with the in-kernel threefry counter stream: per-slot
+    ``seeds`` (S, 2) uint32 replace the (S, lam, n) Z operand, so nothing
+    host-shaped (and no HBM Z) exists on the sampled path.  Returns (Y, X).
+
+    The Mosaic kernel runs only when the resolved tier is ``"pallas_rng"``
+    AND the one-shot backend probe passes; every other combination takes
+    ``ref.gen_sample_rng`` — the bit-exact same stream under jit, so the
+    fallback is trajectory-invisible.  Slot-batched like ``gen_sample``.
+    """
+    impl = _gen_impl(impl, B.shape[-1], B.dtype, fits=_sample_fits)
+    if impl == "pallas_rng" and _rng_kernel_supported():
+        if B.ndim == 3:
+            return cma_gen_sample_rng(m, sigma, B, D, seeds, lam=lam)
+        m1, B1, D1 = _stacked(m, B, D)
+        Y, X = cma_gen_sample_rng(m1, jnp.asarray(sigma)[None], B1, D1,
+                                  jnp.asarray(seeds)[None], lam=lam)
+        return Y[0], X[0]
+    return ref.gen_sample_rng(m, sigma, B, D, seeds, lam)
+
+
+def gen_sample_eval(m, sigma, B, D, Z, sep, impl: str = "auto"):
+    """Eval-fused sampling for separable fids: returns (Y, F) with the
+    fitness computed in the sample epilogue — X never materializes in HBM.
+    ``sep`` is a ``bbob.SepCoeffs``; on the XLA tiers the same algebra runs
+    as ``ref.gen_sample_eval`` (bit-identical to the dispatched
+    ``evaluate_dynamic`` on the same X)."""
+    impl = _gen_impl(impl, Z.shape[-1], Z.dtype, fits=_sample_fits)
+    if not _kernel_tier(impl):
+        return ref.gen_sample_eval(m, sigma, B, D, Z, sep)
+    batched = Z.ndim == 3
+    if not batched:
+        m, B, D, Z = _stacked(m, B, D, Z)
+        sigma = jnp.asarray(sigma)[None]
+    S, n = Z.shape[0], Z.shape[-1]
+    Y, F = cma_gen_sample_eval(m, sigma, B, D, Z,
+                               *_sep_slots(sep, S, n, Z.dtype),
+                               interpret=not _on_tpu())
+    return (Y, F) if batched else (Y[0], F[0])
+
+
+def gen_sample_rng_eval(m, sigma, B, D, seeds, lam: int, sep,
+                        impl: str = "auto"):
+    """The full residency path: seeds → (Y, F) in one kernel — in-kernel
+    RNG plus eval-fused epilogue.  Kernel only under a probed
+    ``"pallas_rng"``; otherwise the XLA threefry ref with the fused
+    separable eval (same stream, same fitness algebra)."""
+    impl = _gen_impl(impl, B.shape[-1], B.dtype, fits=_sample_fits)
+    if impl == "pallas_rng" and _rng_kernel_supported():
+        batched = B.ndim == 3
+        if not batched:
+            m, B, D = _stacked(m, B, D)
+            sigma = jnp.asarray(sigma)[None]
+            seeds = jnp.asarray(seeds)[None]
+        S, n = B.shape[0], B.shape[-1]
+        Y, F = cma_gen_sample_rng_eval(m, sigma, B, D, seeds,
+                                       *_sep_slots(sep, S, n, B.dtype),
+                                       lam=lam)
+        return (Y, F) if batched else (Y[0], F[0])
+    return ref.gen_sample_rng_eval(m, sigma, B, D, seeds, lam, sep)
 
 
 def gen_update(C, B, D, p_sigma, p_c, Y, w, coef, impl: str = "auto"):
@@ -178,7 +294,7 @@ def gen_update(C, B, D, p_sigma, p_c, Y, w, coef, impl: str = "auto"):
     XLA ref (``_megakernel_fits``).
     """
     impl = _gen_impl(impl, C.shape[-1], C.dtype)
-    if impl != "pallas":
+    if not _kernel_tier(impl):
         fn = ref.fused_gen_update
         args = (coef["c_sigma"], coef["mu_eff"], coef["c_c"], coef["c_1"],
                 coef["c_mu"], coef["chi_n"], coef["gen1"])

@@ -8,6 +8,7 @@ epilogues; see kernels/cma_update.py and kernels/cma_sample.py).
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 
@@ -64,6 +65,160 @@ def gen_sample(m: jnp.ndarray, sigma: jnp.ndarray, B: jnp.ndarray,
     return Y, X
 
 
+# ---------------------------------------------------------------------------
+# in-kernel RNG: portable threefry2x32 counter stream (oracle of the
+# `impl="pallas_rng"` sample-kernel tier)
+# ---------------------------------------------------------------------------
+#
+# One function, two callers: the Pallas sample kernel's body and this XLA
+# ref both evaluate _threefry2x32 with identical jnp uint32 vector ops, so
+# kernel↔ref agreement is bit-exact BY CONSTRUCTION (no tolerance band).
+# Each Z element depends only on (slot seed, row, col) through the counter
+# (row << 16) | col — chunk- and padding-independent, the in-kernel
+# analogue of the engines' row-keyed prefix-stable sampling.
+
+_TF_ROT_A = (13, 15, 26, 6)
+_TF_ROT_B = (17, 29, 16, 24)
+_TF_PARITY = 0x1BD11BDA
+
+
+def _rotl32(x, r: int):
+    r = jnp.uint32(r)
+    return (x << r) | (x >> (jnp.uint32(32) - r))
+
+
+def _threefry2x32(k0, k1, c0, c1):
+    """Threefry-2x32, 20 rounds — the standard counter-based block cipher
+    jax's own PRNG builds on, spelled in plain jnp uint32 arithmetic so the
+    SAME code runs inside a Pallas kernel body (Mosaic and interpret mode)
+    and as an XLA program.  ``k0/k1`` key words, ``c0/c1`` counter words
+    (any broadcastable uint32 shapes); returns two uint32 output words."""
+    k0, k1 = jnp.uint32(k0), jnp.uint32(k1)
+    x0 = jnp.asarray(c0, jnp.uint32) + k0
+    x1 = jnp.asarray(c1, jnp.uint32) + k1
+    ks = (k0, k1, k0 ^ k1 ^ jnp.uint32(_TF_PARITY))
+    for i in range(5):
+        for r in (_TF_ROT_A if i % 2 == 0 else _TF_ROT_B):
+            x0 = x0 + x1
+            x1 = _rotl32(x1, r)
+            x1 = x0 ^ x1
+        x0 = x0 + ks[(i + 1) % 3]
+        x1 = x1 + ks[(i + 2) % 3] + jnp.uint32(i + 1)
+    return x0, x1
+
+
+def _bits_to_unit(bits, dtype):
+    """uint32 → [0, 1): keep the top 23 bits as an f32 mantissa in [1, 2)
+    and subtract 1 — branch-free, Mosaic-lowerable (lax.bitcast, not
+    pltpu.bitcast, so the interpret/CPU path works too)."""
+    f = jax.lax.bitcast_convert_type(
+        (bits >> jnp.uint32(9)) | jnp.uint32(0x3F800000), jnp.float32)
+    return (f - jnp.float32(1.0)).astype(dtype)
+
+
+def threefry_normal(seed0, seed1, rows, cols, dtype):
+    """Standard-normal grid keyed by (seed, row, col).
+
+    ``rows``/``cols`` are integer index arrays (broadcastable against each
+    other); element (r, c) draws counter ``(r << 16) | c`` — rows and
+    columns each bounded by 2¹⁶, far above any λ or n this repo runs — and
+    maps the two threefry output words through one Box–Muller cosine branch
+    (one normal per counter; the sine partner is discarded so each element
+    stays an independent function of its own counter).
+    """
+    c0 = ((jnp.asarray(rows, jnp.uint32) << jnp.uint32(16))
+          | jnp.asarray(cols, jnp.uint32))
+    b0, b1 = _threefry2x32(seed0, seed1, c0, jnp.zeros_like(c0))
+    u1 = _bits_to_unit(b0, dtype)
+    u2 = _bits_to_unit(b1, dtype)
+    two_pi = jnp.asarray(2.0 * 3.14159265358979323846, dtype)
+    return jnp.sqrt(jnp.asarray(-2.0, dtype)
+                    * jnp.log1p(-u1)) * jnp.cos(two_pi * u2)
+
+
+def sample_z_rng(seeds: jnp.ndarray, lam: int, n: int, dtype) -> jnp.ndarray:
+    """The pallas_rng tier's Z stream as an XLA program.
+
+    ``seeds`` (2,) uint32 per slot or (S, 2) slot-stacked; returns Z of
+    shape (lam, n) / (S, lam, n).  Bit-exact against the in-kernel draw.
+    """
+    seeds = jnp.asarray(seeds, jnp.uint32)
+    rows = jnp.arange(lam, dtype=jnp.uint32)[:, None]
+    cols = jnp.arange(n, dtype=jnp.uint32)[None, :]
+    if seeds.ndim == 1:
+        return threefry_normal(seeds[0], seeds[1], rows, cols, dtype)
+    return threefry_normal(seeds[:, 0, None, None], seeds[:, 1, None, None],
+                           rows[None], cols[None], dtype)
+
+
+def gen_sample_rng(m: jnp.ndarray, sigma: jnp.ndarray, B: jnp.ndarray,
+                   D: jnp.ndarray, seeds: jnp.ndarray, lam: int):
+    """Fused sampling with the device-side counter RNG: (Y, X) straight from
+    per-slot seeds — no host-shaped fold_in stream, no HBM-resident Z."""
+    n = B.shape[-1]
+    Z = sample_z_rng(seeds, lam, n, m.dtype)
+    return gen_sample(m, sigma, B, D, Z)
+
+
+def gen_sample_eval(m: jnp.ndarray, sigma: jnp.ndarray, B: jnp.ndarray,
+                    D: jnp.ndarray, Z: jnp.ndarray, sep):
+    """Eval-fused sampling for the separable BBOB family: (Y, F).
+
+    ``sep`` is a ``bbob.SepCoeffs``; F is bit-identical to evaluating the
+    dispatched fid on the materialized X (same elementwise chain, same
+    reduce) — but expressed without X as a program output, so XLA fuses the
+    m + σ·Y elementwise chain into the fitness reduction and the (λ, n) X
+    tile never reaches HBM (pinned in tests/test_eval_fusion.py).
+    """
+    from repro.fitness import bbob
+    sigma = jnp.asarray(sigma)
+    Y = (Z * D[..., None, :]) @ jnp.swapaxes(B, -1, -2)
+    X = m[..., None, :] + sigma[..., None, None] * Y
+    return Y, bbob.separable_eval(X, sep)
+
+
+def gen_sample_rng_eval(m: jnp.ndarray, sigma: jnp.ndarray, B: jnp.ndarray,
+                        D: jnp.ndarray, seeds: jnp.ndarray, lam: int, sep):
+    """Full residency ref: seeds → (Y, F), no host RNG and no X."""
+    n = B.shape[-1]
+    Z = sample_z_rng(seeds, lam, n, m.dtype)
+    return gen_sample_eval(m, sigma, B, D, Z, sep)
+
+
+def fused_update_from_gram(C: jnp.ndarray, B: jnp.ndarray, D: jnp.ndarray,
+                           p_sigma: jnp.ndarray, p_c: jnp.ndarray,
+                           gram: jnp.ndarray, y_w: jnp.ndarray,
+                           c_sigma, mu_eff, c_c, c_1, c_mu, chi_n, gen1):
+    """The post-dot half of ``fused_gen_update``: everything downstream of
+    the gram-family contraction, O(n²) elementwise + two B GEMVs.
+
+    Factored out so the cross-device strategies path (strategies.py
+    KDistributed/KReplicated) can psum ONE √w-factored ``[gram | y_w]``
+    tensor and run this epilogue replicated — the collectives path then
+    executes the same fused form as the dense path instead of the unfused
+    moments soup.  ``gram``/``y_w`` must already be normalized to unit
+    total weight (the dense caller's weights sum to 1 by construction; the
+    distributed caller divides the psum by the reduced weight total, which
+    is semantically identical because both are linear in w).
+    """
+    n = C.shape[-1]
+    dt = C.dtype
+    whiten = B @ ((B.T @ y_w) / jnp.maximum(D, 1e-300))
+    p_sigma_new = (1.0 - c_sigma) * p_sigma + jnp.sqrt(
+        c_sigma * (2.0 - c_sigma) * mu_eff) * whiten
+    ps_norm = jnp.linalg.norm(p_sigma_new)
+    gen1 = jnp.asarray(gen1, dt)       # 1-based generation counter, as float
+    h_sig_denom = jnp.sqrt(1.0 - (1.0 - c_sigma) ** (2.0 * gen1))
+    h_sigma = (ps_norm / h_sig_denom / chi_n
+               < 1.4 + 2.0 / (n + 1.0)).astype(dt)
+    p_c_new = (1.0 - c_c) * p_c + h_sigma * jnp.sqrt(
+        c_c * (2.0 - c_c) * mu_eff) * y_w
+    decay = 1.0 - c_1 - c_mu + (1.0 - h_sigma) * c_1 * c_c * (2.0 - c_c)
+    # gram and outer are symmetric by construction — no 0.5·(C + Cᵀ) pass
+    C_new = decay * C + c_mu * gram + c_1 * p_c_new[:, None] * p_c_new[None, :]
+    return C_new, p_sigma_new, p_c_new, y_w
+
+
 def fused_gen_update(C: jnp.ndarray, B: jnp.ndarray, D: jnp.ndarray,
                      p_sigma: jnp.ndarray, p_c: jnp.ndarray, Y: jnp.ndarray,
                      w: jnp.ndarray, c_sigma, mu_eff, c_c, c_1, c_mu, chi_n,
@@ -96,27 +251,15 @@ def fused_gen_update(C: jnp.ndarray, B: jnp.ndarray, D: jnp.ndarray,
     O(n) scalar updates (mean, σ, bookkeeping — cmaes._finish_update).
     """
     n = C.shape[-1]
-    dt = C.dtype
     # -- the one gram-family dot: rank-μ gram AND y_w ---------------------
     rw = jnp.sqrt(w)
     Ys = rw[:, None] * Y
     G = Ys.T @ jnp.concatenate([Ys, rw[:, None]], axis=1)  # (n, n+1)
     gram, y_w = G[:, :n], G[:, n]
-    # -- whitened step (old factorization, as in update_from_moments) -----
-    whiten = B @ ((B.T @ y_w) / jnp.maximum(D, 1e-300))
-    p_sigma_new = (1.0 - c_sigma) * p_sigma + jnp.sqrt(
-        c_sigma * (2.0 - c_sigma) * mu_eff) * whiten
-    ps_norm = jnp.linalg.norm(p_sigma_new)
-    gen1 = jnp.asarray(gen1, dt)       # 1-based generation counter, as float
-    h_sig_denom = jnp.sqrt(1.0 - (1.0 - c_sigma) ** (2.0 * gen1))
-    h_sigma = (ps_norm / h_sig_denom / chi_n
-               < 1.4 + 2.0 / (n + 1.0)).astype(dt)
-    p_c_new = (1.0 - c_c) * p_c + h_sigma * jnp.sqrt(
-        c_c * (2.0 - c_c) * mu_eff) * y_w
-    decay = 1.0 - c_1 - c_mu + (1.0 - h_sigma) * c_1 * c_c * (2.0 - c_c)
-    # gram and outer are symmetric by construction — no 0.5·(C + Cᵀ) pass
-    C_new = decay * C + c_mu * gram + c_1 * p_c_new[:, None] * p_c_new[None, :]
-    return C_new, p_sigma_new, p_c_new, y_w
+    # -- whitened step + paths + covariance (shared with strategies.py) ---
+    return fused_update_from_gram(C, B, D, p_sigma, p_c, gram, y_w,
+                                  c_sigma, mu_eff, c_c, c_1, c_mu, chi_n,
+                                  gen1)
 
 
 # ---------------------------------------------------------------------------

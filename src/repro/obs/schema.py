@@ -106,6 +106,13 @@ SCHEMA: Tuple[MetricSpec, ...] = (
                "core/bucketed.py:drive_segments",
                "Batched eigendecomposition blocks executed "
                "(seg_gens/eigen_interval per dispatched segment)."),
+    MetricSpec("bucketed_eval_fused_generations_total", COUNTER,
+               "generations", (),
+               "core/bucketed.py:run_campaign_bucketed",
+               "Generations dispatched through the eval-fused sample "
+               "epilogue (whole fid menu separable and REPRO_EVAL_FUSION "
+               "on): fitness computed in the sample kernel, X never "
+               "materialized in HBM."),
     # -- mesh engine S1/S2 (distributed/mesh_engine.py) ---------------------
     MetricSpec("mesh_island_dispatch_s", HISTOGRAM, "s",
                ("strategy", "island"),
@@ -118,8 +125,9 @@ SCHEMA: Tuple[MetricSpec, ...] = (
                "waits on its own running segment."),
     MetricSpec("mesh_exchange_s", HISTOGRAM, "s", ("strategy",),
                "distributed/mesh_engine.py:_drive_concurrent/_drive_ordered",
-               "Scalar exchange latency: S1 forces the psum'd "
-               "budget/best outputs, S2 folds the per-island host scalars."),
+               "Scalar exchange latency: S1 folds the psum'd budget/best "
+               "outputs lazily at the boundary pull (they are ready by "
+               "then), S2 folds the per-island host scalars."),
     MetricSpec("mesh_exchange_rounds_total", COUNTER, "rounds",
                ("strategy",),
                "distributed/mesh_engine.py:_drive_concurrent/_drive_ordered",

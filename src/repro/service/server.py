@@ -204,6 +204,7 @@ class _Lane:
                 tuple(self.server.domain), self.server.sigma0_frac,
                 self.server.impl, self.bbob_fids, self.custom_fns,
                 self.m_peaks, int(k), int(seg_gens),
+                bbob.eval_fusion_enabled(),
                 tuple((d.platform, d.id) for d in self.server.devices))
 
     def runner(self, k: int, seg_gens: int) -> Callable:
@@ -228,6 +229,11 @@ class _Lane:
                              for f in custom]
                 idx = jnp.clip(fn_idx, 0, len(branches) - 1)
                 return jax.lax.switch(idx, branches, X)
+            if bbob_fids and not custom:
+                # pure-BBOB menu: ride the eval-fused sample epilogue when
+                # the whole menu is separable (custom callables keep the
+                # two-program path — their branch can't carry SepCoeffs)
+                fit = bbob.fusable_fitness(inst, bbob_fids, fit)
             return eng.segment_scan(k, base_key, fit, carry, seg_gens,
                                     max_evals=budget)
 

@@ -1,0 +1,220 @@
+"""Eval-fused sample epilogue (PR 7): residency HLO pins + backend parity.
+
+For an all-separable BBOB fid menu (``bbob.FUSABLE_FIDS`` — f1 sphere, f2
+ellipsoid) the fitness fuses into the sample epilogue (``ref.gen_sample_eval``
+/ ``kernels/cma_gen.py``): segment programs return (Y, F) and the (λ, n) X
+tile never gets an HBM buffer.  Pinned here at the compiled-HLO level, and
+the fused programs must be TRAJECTORY-IDENTICAL to the dispatched two-program
+fallback (``REPRO_EVAL_FUSION=0``) across the bucketed / mesh / service
+backends — the separable algebra is IEEE-exact against ``evaluate_dynamic``
+on the same X, so fevals, best-f and ECDF agree bitwise.
+
+Also pins tentpole (c): the strategies collectives path lowers exactly one
+(n, n+1) gram-family dot per generation (``Ysᵀ·[Ys | √w]``), with the
+PR-6 moments soup's separate (n, n) gram dot gone.
+"""
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bucketed, strategies
+from repro.distributed import hlo_analyzer, mesh_engine
+from repro.fitness import bbob
+
+N, LAM = 6, 8
+LAMN = r"f64\[(?:\d+,)*8,6\]"          # any leading batch dims, then (λ, n)
+
+
+# ---------------------------------------------------------------------------
+# HLO pins
+# ---------------------------------------------------------------------------
+
+def _toplevel_instrs(txt):
+    """(comp, instr) pairs outside fusion bodies — the instructions that own
+    an HBM buffer (inner ops of a kLoop/kOutput fusion never materialize)."""
+    comps = hlo_analyzer.parse_module(txt)
+    bodies = set()
+    for c in comps.values():
+        for i in c.instrs:
+            m = re.search(r"calls=%?([\w.\-]+)", i.rest)
+            if i.opcode == "fusion" and m:
+                bodies.add(m.group(1))
+    return [(c, i) for c in comps.values() if c.name not in bodies
+            for i in c.instrs]
+
+
+def _fused_segment_hlo(monkeypatch, fusion: str):
+    monkeypatch.setenv("REPRO_EVAL_FUSION", fusion)
+    eng = bucketed.BucketedLadderEngine(n=N, lam_start=LAM, kmax_exp=0,
+                                        max_evals=10_000, impl="xla")
+    seg_gens = eng.bucket_seg_gens(0, need_gens=20)
+    runner = eng.segment_runner(0, (1, 2), seg_gens)
+    insts = bbob.stack_instances([bbob.make_instance(1, N, 1),
+                                  bbob.make_instance(2, N, 1)])
+    keys = jnp.stack([jax.random.PRNGKey(0), jax.random.PRNGKey(1)])
+    carry = eng._init_runner(keys)
+    return runner.lower(keys, insts, carry).compile().as_text()
+
+
+def test_fused_segment_zero_x_materialization(monkeypatch):
+    """The residency pin: in a fused-fid segment program the ONLY (λ, n)
+    tensors with HBM buffers are the Z draw (consumes raw u32 key material)
+    and the Y transform dot — nothing (λ, n)-shaped is computed FROM Y, so
+    X = m + σ·Y never materializes."""
+    top = _toplevel_instrs(_fused_segment_hlo(monkeypatch, "1"))
+    lam_n = [(c, i) for c, i in top if re.search(LAMN, i.shape)]
+    assert lam_n, "expected the Y transform in the segment body"
+    dots = [i.name for _, i in lam_n if i.opcode == "dot"]
+    assert dots, "the Y = (Z·D)·Bᵀ transform must be a materialized dot"
+    # no (λ, n) instruction consumes a (λ, n) dot output: X is never stored
+    for _, i in lam_n:
+        for d in dots:
+            assert not re.search(rf"%{re.escape(d)}\b", i.rest), (
+                f"(λ,n) instr {i.name} consumes Y dot {d} — X materialized")
+    # and every (λ, n) buffer is one of {Z draw, Y dot}: two per gen body
+    non_dot = [i for _, i in lam_n if i.opcode != "dot"]
+    for i in non_dot:
+        assert "u32[" in i.rest, (
+            f"unexpected (λ,n) producer {i.opcode} {i.name} (not the Z draw)")
+
+
+def test_dispatched_segment_keeps_two_program_shape(monkeypatch):
+    """The fallback still compiles and keeps the Y dot; the pin above is
+    about the fused program, not a claim the dispatched one is worse on
+    CPU (XLA may fuse X into the eval reduction there too)."""
+    top = _toplevel_instrs(_fused_segment_hlo(monkeypatch, "0"))
+    assert any(i.opcode == "dot" and re.search(LAMN, i.shape)
+               for _, i in top)
+
+
+FAM_DOT = r"f64\[(?:\d+,)*6,7\]\S* dot\b"     # (n, n+1) gram-family dot
+GRAM_DOT = r"f64\[(?:\d+,)*6,6\]\S* dot\b"    # PR-6 separate (n, n) gram
+
+
+def _kdist_chunk_hlo(impl: str, chunk: int = 8) -> str:
+    sphere = lambda X: jnp.sum(X ** 2, axis=-1)
+    kd = strategies.KDistributed(n=N, n_devices=3, lam_start=8, lam_slots=8,
+                                 kmax_exp=1, impl=impl, eigen_interval=8)
+    carry = kd.init_carry(jax.random.PRNGKey(0))
+    fn = jax.jit(jax.vmap(kd.chunk_fn(sphere, ("ev",), chunk),
+                          in_axes=(None, None), out_axes=0,
+                          axis_name="ev", axis_size=3))
+    keys = jax.random.split(jax.random.PRNGKey(1), chunk)
+    return fn.lower(carry, keys).compile().as_text()
+
+
+def test_strategies_one_gram_family_dot_per_generation():
+    """Tentpole (c): the collectives path executes ONE √w-factored
+    ``Ysᵀ·[Ys | √w]`` contraction per generation and the separate (n, n)
+    gram dot of the moments soup is gone."""
+    txt = _kdist_chunk_hlo("xla")
+    assert hlo_analyzer.count_instrs(txt, FAM_DOT) == 8
+    assert hlo_analyzer.count_instrs(txt, GRAM_DOT) == 0
+
+
+def test_strategies_unfused_baseline_keeps_moments_gram():
+    txt = _kdist_chunk_hlo("xla_unfused")
+    assert hlo_analyzer.count_instrs(txt, GRAM_DOT) == 8
+    assert hlo_analyzer.count_instrs(txt, FAM_DOT) == 0
+
+
+# ---------------------------------------------------------------------------
+# backend parity: fused vs dispatched must be trajectory-identical
+# ---------------------------------------------------------------------------
+
+TARGETS = np.array([1e2, 1e0, 1e-2, 1e-6])
+
+
+def _bucketed_campaign(monkeypatch, fusion: str):
+    monkeypatch.setenv("REPRO_EVAL_FUSION", fusion)
+    eng = bucketed.BucketedLadderEngine(n=4, lam_start=8, kmax_exp=2,
+                                        max_evals=4000, impl="xla")
+    return bucketed.run_campaign_bucketed(eng, fids=(1, 2), instances=(1,),
+                                          runs=2, seed=0)
+
+
+def test_bucketed_fused_matches_dispatched_bitwise(monkeypatch):
+    r_f = _bucketed_campaign(monkeypatch, "1")
+    r_d = _bucketed_campaign(monkeypatch, "0")
+    np.testing.assert_array_equal(r_f.total_fevals, r_d.total_fevals)
+    np.testing.assert_array_equal(r_f.best_f, r_d.best_f)
+    np.testing.assert_array_equal(r_f.best_x, r_d.best_x)
+    assert r_f.useful_evals == r_d.useful_evals
+    np.testing.assert_array_equal(r_f.hit_evals(TARGETS),
+                                  r_d.hit_evals(TARGETS))
+
+
+@pytest.mark.parametrize("strategy", ["ordered", "concurrent"])
+def test_mesh_fused_matches_dispatched_bitwise(strategy, monkeypatch):
+    def run(fusion):
+        monkeypatch.setenv("REPRO_EVAL_FUSION", fusion)
+        eng = mesh_engine.MeshCampaignEngine(strategy=strategy, n=4,
+                                             lam_start=8, kmax_exp=2,
+                                             max_evals=4000)
+        return mesh_engine.run_campaign_mesh(eng, fids=(1, 2),
+                                             instances=(1,), runs=2, seed=0)
+    r_f, r_d = run("1"), run("0")
+    np.testing.assert_array_equal(r_f.total_fevals, r_d.total_fevals)
+    np.testing.assert_array_equal(r_f.best_f, r_d.best_f)
+    np.testing.assert_array_equal(r_f.hit_evals(TARGETS),
+                                  r_d.hit_evals(TARGETS))
+    assert r_f.useful_evals == r_d.useful_evals
+
+
+def test_bucketed_counts_eval_fused_generations(monkeypatch):
+    from repro import obs
+    reg = obs.metrics()
+    before = reg.counter("bucketed_eval_fused_generations_total").value
+    _bucketed_campaign(monkeypatch, "1")
+    mid = reg.counter("bucketed_eval_fused_generations_total").value
+    assert mid > before                      # fused menu: generations counted
+    _bucketed_campaign(monkeypatch, "0")
+    assert reg.counter("bucketed_eval_fused_generations_total").value == mid
+
+
+# ---------------------------------------------------------------------------
+# service: same-fid jobs join running fused program families
+# ---------------------------------------------------------------------------
+
+def _make_server():
+    from repro.service import CampaignServer, FitnessRegistry
+    return CampaignServer(registry=FitnessRegistry(), bbob_fids=(1, 2),
+                          max_budget=5000, rows_per_island=2,
+                          lam_start=8, kmax_exp=2)
+
+
+def _run_service_jobs(monkeypatch, fusion: str):
+    from repro.service import CampaignRequest
+    monkeypatch.setenv("REPRO_EVAL_FUSION", fusion)
+    srv = _make_server()
+    t1 = srv.submit(CampaignRequest(dim=4, fid=1, budget=2000, seed=3))
+    t2 = srv.submit(CampaignRequest(dim=4, fid=2, budget=1500, seed=5))
+    for _ in range(2):
+        srv.step()                           # lane is mid-flight
+    # same-fid mid-flight arrival must JOIN the running program family
+    t3 = srv.submit(CampaignRequest(dim=4, fid=1, budget=1200, seed=13))
+    srv.drain()
+    compiles = srv.segment_compiles()
+    t4 = srv.submit(CampaignRequest(dim=4, fid=2, budget=1000, seed=17))
+    srv.drain()
+    assert t4.done
+    assert srv.segment_compiles() == compiles, "same-fid job added a program"
+    return [t.result for t in (t1, t2, t3, t4)]
+
+
+def test_service_fused_menu_joins_programs_and_matches_dispatched(
+        monkeypatch):
+    res_f = _run_service_jobs(monkeypatch, "1")
+    res_d = _run_service_jobs(monkeypatch, "0")
+    for rf, rd in zip(res_f, res_d):
+        assert rf.total_fevals == rd.total_fevals
+        assert len(rf.descents) == len(rd.descents)
+        for df, dd in zip(rf.descents, rd.descents):
+            assert df.k_exp == dd.k_exp and df.lam == dd.lam
+            np.testing.assert_array_equal(df.fevals, dd.fevals)
+            np.testing.assert_array_equal(df.best_f, dd.best_f)
+            assert df.stop_reason == dd.stop_reason
+        np.testing.assert_array_equal(rf.best_f, rd.best_f)

@@ -275,3 +275,132 @@ def test_backend_probe_cached():
     before = ops._on_tpu.cache_info().hits
     ops.resolve_impl("auto")
     assert ops._on_tpu.cache_info().hits > before
+
+
+# ---------------------------------------------------------------------------
+# in-kernel RNG tier (PR 7): cma_*_rng kernels ↔ the XLA threefry ref stream
+# ---------------------------------------------------------------------------
+
+from repro.kernels.cma_gen import (cma_gen_sample_eval,  # noqa: E402
+                                   cma_gen_sample_rng,
+                                   cma_gen_sample_rng_eval, cma_sample_z_rng)
+
+RNG_SHAPES = [(1, 8, 4), (3, 12, 10), (2, 6, 7), (2, 9, 130)]
+
+
+def _seeds(S, seed=0):
+    return jax.random.key_data(
+        jax.random.split(jax.random.PRNGKey(seed), S)).astype(jnp.uint32) \
+        if hasattr(jax.random, "key_data") else \
+        jnp.asarray(jax.random.split(jax.random.PRNGKey(seed), S), jnp.uint32)
+
+
+@pytest.mark.parametrize("S,lam,n", RNG_SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_rng_kernel_z_bit_exact_vs_xla_ref(S, lam, n, dtype):
+    """The acceptance pin of the pallas_rng tier: the in-kernel counter
+    stream and ``ref.sample_z_rng`` are the SAME bits (jitted both sides —
+    eager op-by-op execution may round transcendentals differently)."""
+    seeds = _seeds(S, seed=S * 100 + lam)
+    zk = jax.jit(lambda s: cma_sample_z_rng(s, lam=lam, n=n, dtype=dtype,
+                                            interpret=True))(seeds)
+    zr = jax.jit(lambda s: ref.sample_z_rng(s, lam, n, dtype))(seeds)
+    np.testing.assert_array_equal(np.asarray(zk), np.asarray(zr))
+
+
+def test_rng_stream_moments_and_slot_independence():
+    """Sanity on the distribution: the counter stream is ~N(0, 1) and
+    distinct (slot, row) seeds decorrelate."""
+    z = np.asarray(ref.sample_z_rng(_seeds(4, seed=9), 256, 64, jnp.float64))
+    assert abs(z.mean()) < 0.01 and abs(z.std() - 1.0) < 0.01
+    assert abs(np.corrcoef(z[0].ravel(), z[1].ravel())[0, 1]) < 0.05
+    # per-slot draws differ (seeded per slot)
+    assert np.abs(z[0] - z[1]).max() > 0.1
+
+
+@pytest.mark.parametrize("S,lam,n", [(2, 12, 10), (1, 8, 33)])
+def test_rng_gen_sample_kernel_matches_ref(S, lam, n):
+    m, sigma, B, D, *_ = _gen_inputs(S, lam, n, jnp.float64)
+    seeds = _seeds(S, seed=3)
+    Yk, Xk = cma_gen_sample_rng(m, sigma, B, D, seeds, lam=lam,
+                                interpret=True)
+    Yr, Xr = ref.gen_sample_rng(m, sigma, B, D, seeds, lam)
+    np.testing.assert_allclose(np.asarray(Yk), np.asarray(Yr),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(Xk), np.asarray(Xr),
+                               rtol=1e-5, atol=1e-5)
+
+
+def _sep_parts(fid, n, S, dtype):
+    from repro.fitness import bbob
+    sep = bbob.separable_coeffs(bbob.make_instance(fid, n, 1), (1, 2))
+    return ops._sep_slots(sep, S, n, dtype)
+
+
+@pytest.mark.parametrize("fid", [1, 2])
+def test_rng_eval_fused_kernel_matches_ref(fid):
+    """The full residency kernel (seeds → (Y, F)) against the XLA ref —
+    same counter stream, same separable fitness algebra."""
+    from repro.fitness import bbob
+    S, lam, n = 2, 12, 10
+    m, sigma, B, D, *_ = _gen_inputs(S, lam, n, jnp.float64)
+    seeds = _seeds(S, seed=7)
+    sep = bbob.separable_coeffs(bbob.make_instance(fid, n, 1), (1, 2))
+    Yk, Fk = cma_gen_sample_rng_eval(m, sigma, B, D, seeds,
+                                     *_sep_parts(fid, n, S, jnp.float64),
+                                     lam=lam, interpret=True)
+    Yr, Fr = ref.gen_sample_rng_eval(m, sigma, B, D, seeds, lam, sep)
+    np.testing.assert_allclose(np.asarray(Yk), np.asarray(Yr),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(Fk), np.asarray(Fr),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("fid", [1, 2])
+def test_rng_sample_eval_kernel_matches_ref(fid):
+    """Eval-fused epilogue with a host-provided Z (the non-RNG fused tier)."""
+    from repro.fitness import bbob
+    S, lam, n = 2, 9, 13
+    m, sigma, B, D, Z, *_ = _gen_inputs(S, lam, n, jnp.float64)
+    sep = bbob.separable_coeffs(bbob.make_instance(fid, n, 1), (1, 2))
+    Yk, Fk = cma_gen_sample_eval(m, sigma, B, D, Z,
+                                 *_sep_parts(fid, n, S, jnp.float64),
+                                 interpret=True)
+    Yr, Fr = ref.gen_sample_eval(m, sigma, B, D, Z, sep)
+    np.testing.assert_allclose(np.asarray(Yk), np.asarray(Yr),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(Fk), np.asarray(Fr),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_rng_dispatch_cpu_fallback_is_same_stream():
+    """Off TPU, ``impl="pallas_rng"`` must route the sample through the XLA
+    threefry ref — the BIT-exact same stream, so the fallback never changes
+    a trajectory — and the backend probe is a one-shot static False."""
+    S, lam, n = 2, 8, 6
+    m, sigma, B, D, *_ = _gen_inputs(S, lam, n, jnp.float64)
+    seeds = _seeds(S, seed=1)
+    if jax.default_backend() != "tpu":
+        assert not ops._rng_kernel_supported()
+        assert ops._rng_kernel_supported.cache_info().currsize == 1
+    got = jax.jit(lambda *a: ops.gen_sample_rng(*a, lam, impl="pallas_rng")
+                  )(m, sigma, B, D, seeds)
+    want = jax.jit(lambda *a: ref.gen_sample_rng(*a, lam)
+                   )(m, sigma, B, D, seeds)
+    for a, b in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_rng_tier_dispatch_semantics(monkeypatch):
+    """"auto" NEVER resolves to pallas_rng (switching the RNG stream is a
+    caller-level trajectory decision); explicit requests and the env
+    override are honored; the tier counts as fused and kernel-tier."""
+    assert ops.resolve_impl("auto") != "pallas_rng"
+    assert ops.resolve_impl("pallas_rng") == "pallas_rng"
+    assert ops.use_fused("pallas_rng")
+    assert ops._kernel_tier("pallas_rng")
+    monkeypatch.setenv("REPRO_KERNEL_IMPL", "pallas_rng")
+    assert ops.resolve_impl("auto") == "pallas_rng"
+    assert ops.resolve_impl("xla") == "pallas_rng"
+    monkeypatch.delenv("REPRO_KERNEL_IMPL")
+    assert ops.resolve_impl("auto") in ("xla", "pallas")

@@ -85,6 +85,33 @@ def test_run_ipop_mesh_backend_matches_bucketed(strategy):
     np.testing.assert_allclose(r_b.best_f, r_m.best_f, rtol=1e-5, atol=1e-7)
 
 
+def test_s1_speculative_overlap_trajectory_identity():
+    """Satellite (PR 7): with the S1 exchange scalars folded lazily at the
+    boundary pull, the ordered driver runs the PR-5 speculative
+    double-buffered dispatch (``overlap=True``, now the default).  A
+    speculative miss discards its output without touching the accepted
+    carry, so the trajectory must be IDENTICAL to the pinned
+    ``overlap=False`` driver — and the exchange records must still
+    reconcile segment-for-segment."""
+    eng_o, res_o = _mesh_campaign("ordered")                 # overlap default
+    assert eng_o.overlap
+    eng_p, res_p = _mesh_campaign("ordered", overlap=False)
+    np.testing.assert_array_equal(res_o.total_fevals, res_p.total_fevals)
+    np.testing.assert_array_equal(res_o.best_f, res_p.best_f)   # bitwise
+    for field in ("k_idx", "gen", "fevals", "stop_reason", "stopped", "ran"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(res_o.trace, field)),
+            np.asarray(getattr(res_p.trace, field)), err_msg=field)
+    # one exchange record per ACCEPTED segment, same fold sequence, and the
+    # budget scalar still converges to the campaign total in both drivers
+    assert len(res_o.exchange) == len(res_o.segments)
+    assert len(res_p.exchange) == len(res_p.segments)
+    assert [e["global_fevals"] for e in res_o.exchange] == \
+        [e["global_fevals"] for e in res_p.exchange]
+    assert res_o.exchange[-1]["global_fevals"] == int(
+        np.sum(res_o.total_fevals))
+
+
 def test_budget_below_one_generation_is_empty_progress():
     eng = mesh_engine.MeshCampaignEngine(n=3, lam_start=8, kmax_exp=1,
                                          max_evals=4)
