@@ -22,19 +22,38 @@ hardware scaling — same caveat as BENCH_mesh.json.
   PYTHONPATH=src python -m benchmarks.bench_service [--jobs 8] [--dims 4,6]
 
 ``--soak`` switches to the sustained-load harness instead of the A/B: a
-Poisson arrival trace of ``--soak-jobs`` mixed jobs streams through one
-long-lived server on ALL local devices (one island per device per lane —
-under the CI mesh-8dev job this exercises 8 islands), after a warm pass
-that populates the program cache (the steady state a real service runs in).
-The ``soak`` section merged into BENCH_service.json records p50/p95/p99
-completion latency, sustained useful-evals/s, max queue depth and rejected
-count; ``--slo-p99-s`` / ``--slo-min-evals-per-s`` turn it into an
-assertion (exit 1 on violation — the CI soak-smoke gate), and
-``--metrics-out`` tees the per-round ``repro.obs`` series to a JSONL file
-(docs/METRICS.md walks through reading one).
+Poisson arrival trace of ``--soak-jobs`` (default: ``--jobs``) mixed jobs
+streams through one long-lived server on ALL local devices (one island per
+device per lane — under the CI mesh-8dev job this exercises 8 islands),
+after a warm pass that populates the program cache (the steady state a real
+service runs in).  The arrival loop is O(1) in host memory regardless of
+the job count: specs are generated on the fly, finished tickets are
+released every round, and the latency percentiles come from the
+``service_time_to_completion_s`` histogram instead of a per-job list — so
+``--soak --jobs 5000`` holds thousands of jobs at resident-set cost, and
+the ``soak`` record's ``max_rss_mb`` proves it.  The section merged into
+BENCH_service.json records p50/p95/p99 completion latency, sustained
+useful-evals/s, max queue depth, rejected count and max-RSS;
+``--slo-p99-s`` / ``--slo-min-evals-per-s`` turn it into an assertion
+(exit 1 on violation — the CI soak-smoke gate), and ``--metrics-out`` tees
+the per-round ``repro.obs`` series to a JSONL file (docs/METRICS.md walks
+through reading one).
 
   PYTHONPATH=src python -m benchmarks.bench_service --soak \
       [--soak-jobs 24] [--arrive-every 1] [--slo-p99-s 60]
+
+``--chaos`` is the fleet-supervision gate: the same deterministic job set
+runs twice — fault-free, then under a ``FleetController`` with an injected
+kill schedule (``--chaos-plan "island:boundary[:down_for],..."``, or a
+schedule seeded from ``--seed``) and periodic snapshots — and the run
+FAILS (exit 1) unless every job's final evals match exactly and best_f to
+1e-12, and total recovery wall stays under ``--chaos-max-recovery-s``.
+The ``chaos`` section records completed-evals/s under faults plus the
+``fleet_*`` recovery accounting (failures, recovery modes, recovery wall,
+lost work).
+
+  PYTHONPATH=src python -m benchmarks.bench_service --chaos \
+      [--chaos-plan 0:3:2] [--snapshot-every 2] [--chaos-max-recovery-s 60]
 """
 from __future__ import annotations
 
@@ -60,14 +79,25 @@ def _parser():
     ap.add_argument("--soak", action="store_true",
                     help="run the sustained-load soak harness instead of "
                          "the service-vs-sequential A/B")
-    ap.add_argument("--soak-jobs", type=int, default=24,
-                    help="jobs in the soak arrival trace")
+    ap.add_argument("--soak-jobs", type=int, default=None,
+                    help="jobs in the soak arrival trace (default: --jobs)")
     ap.add_argument("--slo-p99-s", type=float, default=None,
                     help="assert soak p99 completion latency <= this")
     ap.add_argument("--slo-min-evals-per-s", type=float, default=None,
                     help="assert soak sustained useful-evals/s >= this")
     ap.add_argument("--metrics-out", default=None,
                     help="tee per-round obs metrics JSONL here (soak mode)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="run the fault-injection recovery gate instead of "
+                         "the service-vs-sequential A/B")
+    ap.add_argument("--chaos-plan", default=None,
+                    help="kill schedule 'island:boundary[:down_for],...' "
+                         "(default: one kill seeded from --seed)")
+    ap.add_argument("--snapshot-every", type=int, default=2,
+                    help="fleet snapshot cadence in service rounds "
+                         "(chaos mode)")
+    ap.add_argument("--chaos-max-recovery-s", type=float, default=None,
+                    help="assert total recovery wall <= this (chaos mode)")
     return ap
 
 
@@ -89,29 +119,42 @@ def _check_slo(soak: dict, p99_s, min_evals_per_s) -> list:
     return out
 
 
+def _max_rss_mb() -> float:
+    import resource
+    return round(resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+                 / 1024.0, 1)               # ru_maxrss is KB on Linux
+
+
 def _run_soak(args):
     """The sustained-load harness: Poisson arrivals through one long-lived
-    multi-island server; returns the BENCH_service.json ``soak`` record."""
+    multi-island server; returns the BENCH_service.json ``soak`` record.
+
+    O(1) host memory in the job count: arrivals are generated lazily,
+    finished tickets are released every round (``server.release_ticket``),
+    and percentiles come from the completion-latency histogram — nothing
+    here holds a per-job list."""
     import jax
     import numpy as np
 
+    from repro import obs
     from repro.service import (CampaignRequest, CampaignServer, QueueFull)
 
+    n_jobs = args.soak_jobs if args.soak_jobs is not None else args.jobs
     rng = np.random.default_rng(args.seed)
     dims = [int(d) for d in args.dims.split(",")]
     fids = tuple(int(f) for f in args.fids.split(","))
     kw = dict(lam_start=args.lam_start, kmax_exp=args.kmax)
-    gaps = rng.exponential(scale=float(args.arrive_every),
-                           size=args.soak_jobs)
-    arrive = np.floor(np.cumsum(gaps)).astype(int)
-    jobs = [{
-        "dim": int(rng.choice(dims)),
-        "fid": int(rng.choice(fids)),
-        "budget": int(args.budget * rng.uniform(0.5, 1.5)),
-        "seed": int(rng.integers(0, 2 ** 31)),
-        "arrive_round": int(arrive[j]),
-    } for j in range(args.soak_jobs)]
-    max_budget = max(j["budget"] for j in jobs)
+    max_budget = int(args.budget * 1.5)     # the draw's upper bound
+
+    def job_stream():
+        at = 0.0
+        for _ in range(n_jobs):
+            at += rng.exponential(scale=float(args.arrive_every))
+            yield {"dim": int(rng.choice(dims)),
+                   "fid": int(rng.choice(fids)),
+                   "budget": int(args.budget * rng.uniform(0.5, 1.5)),
+                   "seed": int(rng.integers(0, 2 ** 31)),
+                   "arrive_round": int(at)}
 
     def make_server(metrics_out=None):
         return CampaignServer(bbob_fids=fids, max_budget=max_budget,
@@ -127,47 +170,167 @@ def _run_soak(args):
         warm.submit(CampaignRequest(dim=d, fid=fids[0], budget=max_budget))
     warm.drain()
 
+    obs.reset_metrics()                     # measured pass owns the registry
     srv = make_server(metrics_out=args.metrics_out)
     t0 = time.perf_counter()
-    pending, tickets = list(jobs), []
-    rnd = rejected = max_depth = 0
+    stream = job_stream()
+    nxt = next(stream, None)
+    rnd = rejected = max_depth = completed = 0
+    useful = 0
     while True:
-        while pending and pending[0]["arrive_round"] <= rnd:
-            spec = pending[0]
+        while nxt is not None and nxt["arrive_round"] <= rnd:
             try:
-                tickets.append(srv.submit(CampaignRequest(
-                    dim=spec["dim"], fid=spec["fid"],
-                    budget=spec["budget"], seed=spec["seed"])))
-                pending.pop(0)
+                srv.submit(CampaignRequest(
+                    dim=nxt["dim"], fid=nxt["fid"],
+                    budget=nxt["budget"], seed=nxt["seed"]))
+                nxt = next(stream, None)
             except QueueFull:
                 rejected += 1       # backpressure observed; retry next round
                 break
         stats = srv.step()
         rnd += 1
         max_depth = max(max_depth, len(srv.queue))
-        if (not stats.progressed() and not pending
+        # release finished tickets: host state stays O(resident jobs)
+        for t in [t for t in srv.tickets.values() if t.done]:
+            if t.status == "done":
+                completed += 1
+                useful += t.fevals
+            srv.release_ticket(t.job_id)
+        if (not stats.progressed() and nxt is None
                 and not len(srv.queue) and not srv._resident_jobs()):
             break
     wall = time.perf_counter() - t0
-    lats = [t.latency_s() for t in tickets if t.latency_s() is not None]
-    useful = sum(t.fevals for t in tickets if t.done)
+    lat = obs.metrics().histogram("service_time_to_completion_s")
     return {
-        "jobs": args.soak_jobs,
+        "jobs": n_jobs,
         "dims": dims, "fids": list(fids), "budget": args.budget,
         "n_devices": len(jax.devices()),
         "rounds": rnd,
         "wall_s": round(wall, 4),
         "useful_evals": int(useful),
         "evals_per_s": round(useful / max(wall, 1e-9), 1),
-        "latency_p50_s": round(_percentile(lats, 50), 4),
-        "latency_p95_s": round(_percentile(lats, 95), 4),
-        "latency_p99_s": round(_percentile(lats, 99), 4),
+        "latency_p50_s": lat.quantile(0.50),
+        "latency_p95_s": lat.quantile(0.95),
+        "latency_p99_s": lat.quantile(0.99),
         "max_queue_depth": int(max_depth),
         "backpressure_rejects": int(rejected),
-        "completed": sum(t.done for t in tickets),
+        "completed": completed,
+        "max_rss_mb": _max_rss_mb(),
         "segment_compiles": srv.segment_compiles(),
         "lanes": len(srv.lanes),
     }
+
+
+def _run_chaos(args):
+    """The recovery gate: one deterministic job set, run fault-free and
+    then under an injected kill schedule with fleet supervision; returns
+    ``(chaos_record, violations)``."""
+    import tempfile
+
+    import jax
+    import numpy as np
+
+    from repro import obs
+    from repro.fleet import FaultPlan, FleetConfig
+    from repro.fleet.controller import FleetController
+    from repro.service import CampaignRequest, CampaignServer
+
+    rng = np.random.default_rng(args.seed)
+    dims = [int(d) for d in args.dims.split(",")]
+    fids = tuple(int(f) for f in args.fids.split(","))
+    kw = dict(lam_start=args.lam_start, kmax_exp=args.kmax)
+    jobs = [{
+        "dim": int(rng.choice(dims)),
+        "fid": int(rng.choice(fids)),
+        "budget": int(args.budget * rng.uniform(0.5, 1.5)),
+        "seed": int(rng.integers(0, 2 ** 31)),
+    } for _ in range(args.jobs)]
+    max_budget = max(j["budget"] for j in jobs)
+    n_islands = len(jax.devices())
+    if args.chaos_plan:
+        plan = FaultPlan.parse(args.chaos_plan)
+    else:
+        # single island has no survivor to host the rows: the kill must
+        # come back (down_for) or recovery would park forever
+        plan = FaultPlan.seeded(args.seed, n_islands, kills=1, horizon=6,
+                                min_boundary=2,
+                                down_for=3 if n_islands == 1 else 0)
+
+    def run(supervised: bool):
+        def submit_all(srv):
+            return [srv.submit(CampaignRequest(
+                dim=j["dim"], fid=j["fid"], budget=j["budget"],
+                seed=j["seed"])) for j in jobs]
+        if not supervised:
+            srv = CampaignServer(bbob_fids=fids, max_budget=max_budget,
+                                 rows_per_island=args.rows_per_island,
+                                 devices=jax.devices(), **kw)
+            tickets = submit_all(srv)
+            srv.drain()
+            return tickets, None
+        with tempfile.TemporaryDirectory() as td:
+            srv = CampaignServer(bbob_fids=fids, max_budget=max_budget,
+                                 rows_per_island=args.rows_per_island,
+                                 devices=jax.devices(), snapshot_dir=td,
+                                 snapshot_every=args.snapshot_every, **kw)
+            ctl = FleetController(srv, FleetConfig(
+                snapshot_every=args.snapshot_every, plan=plan))
+            tickets = submit_all(srv)
+            t0 = time.perf_counter()
+            ctl.drain()
+            return tickets, time.perf_counter() - t0
+
+    ref, _ = run(supervised=False)          # also the warm compile pass
+    obs.reset_metrics()                     # chaos pass owns the registry
+    got, wall = run(supervised=True)
+
+    divergences = []
+    for tr, tg in zip(ref, got):
+        if not tg.done:
+            divergences.append(f"job {tg.job_id} did not complete")
+            continue
+        if tg.fevals != tr.fevals:
+            divergences.append(f"job {tg.job_id} evals {tg.fevals} != "
+                               f"fault-free {tr.fevals}")
+        if not np.isclose(tg.best_f, tr.best_f, rtol=1e-12, atol=1e-12):
+            divergences.append(f"job {tg.job_id} best_f {tg.best_f!r} != "
+                               f"fault-free {tr.best_f!r} (rtol 1e-12)")
+
+    reg = obs.metrics()
+    rec_wall = reg.histogram("fleet_recovery_wall_s")
+    lost = reg.histogram("fleet_lost_work_evals")
+
+    def label_counts(name, label):
+        return {dict(lkey)[label]: s.value
+                for (n, lkey), s in reg._series.items() if n == name}
+
+    useful = sum(t.fevals for t in got if t.status == "done")
+    record = {
+        "jobs": args.jobs, "dims": dims, "fids": list(fids),
+        "n_devices": n_islands,
+        "plan": [f"{e.island}:{e.boundary}:{e.down_for}"
+                 for e in plan.events],
+        "snapshot_every": args.snapshot_every,
+        "wall_s": round(wall, 4),
+        "useful_evals": int(useful),
+        "evals_per_s": round(useful / max(wall, 1e-9), 1),
+        "completed": sum(t.status == "done" for t in got),
+        "failures": label_counts("fleet_failures_total", "reason"),
+        "recoveries": label_counts("fleet_recoveries_total", "mode"),
+        "recovery_wall_s_total": round(rec_wall.sum, 4),
+        "recovery_events": rec_wall.count,
+        "lost_work_evals_total": int(lost.sum),
+        "divergences": divergences,
+    }
+    violations = list(divergences)
+    if rec_wall.count == 0:
+        violations.append("kill schedule injected no recovery "
+                          "(plan never fired?)")
+    if (args.chaos_max_recovery_s is not None
+            and rec_wall.sum > args.chaos_max_recovery_s):
+        violations.append(f"total recovery wall {rec_wall.sum:.3f}s exceeds "
+                          f"bound {args.chaos_max_recovery_s}s")
+    return record, violations
 
 
 def _merge_out(path: str, key: str, section: dict):
@@ -190,6 +353,19 @@ def main(argv=None):
     import jax
 
     jax.config.update("jax_enable_x64", True)
+
+    if args.chaos:
+        record, violations = _run_chaos(args)
+        _merge_out(args.out, "chaos", record)
+        print(json.dumps({"chaos": record}, indent=2))
+        print(f"[bench_service] merged chaos results into {args.out}")
+        for v in violations:
+            print(f"[bench_service] CHAOS GATE FAILURE: {v}",
+                  file=sys.stderr)
+        if not violations:
+            print("[bench_service] chaos gate passed: recovery was "
+                  "deterministic")
+        return 1 if violations else 0
 
     if args.soak:
         soak = _run_soak(args)

@@ -290,7 +290,8 @@ def next_bucket(engine: BucketedLadderEngine, k_idx: np.ndarray,
 def drive_segments(engine: BucketedLadderEngine, carry: ladder.LadderCarry,
                    dispatch: Callable, max_segments: int = 10_000,
                    time_axis: int = 1, pull: Optional[Callable] = None,
-                   budgets=None, overlap: Optional[bool] = None):
+                   budgets=None, overlap: Optional[bool] = None,
+                   supervisor=None):
     """The host-side re-bucketing loop shared by campaign and single runs.
 
     ``dispatch(k, seg_gens, carry) -> (carry, trace)`` runs one jitted
@@ -323,6 +324,16 @@ def drive_segments(engine: BucketedLadderEngine, carry: ladder.LadderCarry,
     values that are ALREADY host-side here (the pull's np arrays and the
     perf_counter deltas), so instrumentation adds no device syncs and no
     recompiles (guarded in tests/test_obs.py).
+
+    ``supervisor`` (a ``repro.fleet`` ``IslandSupervisor``) adds fleet
+    supervision at three host-side points: a per-boundary snapshot/recovery
+    hook (restoring the carry and truncating the trace list on a death
+    verdict — replay regenerates the lost segments identically, since the
+    carry is the complete state and sampling is row-keyed prefix-stable),
+    a supervised pull (corruption retries + health grading), and a
+    pre-dispatch delay hook.  When ``supervisor is None`` (the default)
+    each hook site is one host ``if`` — no extra device syncs, no extra
+    programs (pinned in tests/test_obs.py and tests/test_fleet.py).
     """
     pull = pull_schedule if pull is None else pull
     overlap = bool(engine.overlap) if overlap is None else bool(overlap)
@@ -334,14 +345,30 @@ def drive_segments(engine: BucketedLadderEngine, carry: ladder.LadderCarry,
     k_prev: Optional[int] = None
     fev_prev: Optional[float] = None    # pulled-budget sum at the last boundary
 
-    for _ in range(max_segments):
+    for b in range(max_segments):
+        if supervisor is not None:
+            carry, keep, recovered = supervisor.segment_boundary(
+                b, carry, len(seg_traces))
+            if recovered:
+                # replay from the restored snapshot: drop post-snapshot
+                # traces and forget the stale speculation/progress anchors
+                del seg_traces[keep:]
+                del segments[keep:]
+                k_prev = None
+                fev_prev = None
         spec = None
         if overlap and k_prev is not None:
             # double-buffered carry: enqueue the likely next segment before
             # the host blocks on the schedule pull
+            if supervisor is not None:
+                supervisor.before_dispatch(0, b)
             spec = dispatch(k_prev, seg_len[k_prev], carry)
         t0 = time.perf_counter()
-        k_idx, active, fevals, best_f = pull(carry)
+        if supervisor is not None:
+            k_idx, active, fevals, best_f = supervisor.pull(
+                0, b, lambda: pull(carry))
+        else:
+            k_idx, active, fevals, best_f = pull(carry)
         sync_s = time.perf_counter() - t0
         reg.histogram("bucketed_sync_s").observe(sync_s)
         fev_sum = float(np.sum(fevals))
@@ -364,6 +391,8 @@ def drive_segments(engine: BucketedLadderEngine, carry: ladder.LadderCarry,
         if hit:
             carry, tr = spec
         else:
+            if supervisor is not None:
+                supervisor.before_dispatch(0, b)
             carry, tr = dispatch(k, seg_len[k], carry)
         if not overlap:
             jax.block_until_ready(carry.total_fevals)
@@ -424,7 +453,7 @@ def _empty_trace(carry: ladder.LadderCarry, time_axis: int) -> ladder.LadderTrac
 
 def run_bucketed_single(engine: BucketedLadderEngine, base_key: jax.Array,
                         fitness_fn: Callable,
-                        max_segments: int = 10_000):
+                        max_segments: int = 10_000, supervisor=None):
     """One (un-vmapped) problem through the segment driver — the bucketed
     backend behind ``ipop.run_ipop``.  Returns ``(carry, trace)`` shaped like
     ``LadderEngine.run``'s output (trace leaves (T, S)).
@@ -445,7 +474,8 @@ def run_bucketed_single(engine: BucketedLadderEngine, base_key: jax.Array,
         return cache[ck](base_key, c)
 
     carry, trace, _segs, _walls = drive_segments(engine, carry, dispatch,
-                                                 max_segments, time_axis=0)
+                                                 max_segments, time_axis=0,
+                                                 supervisor=supervisor)
     return carry, trace
 
 

@@ -89,6 +89,72 @@ def _result_from_ladder(engine: ladder_mod.LadderEngine,
                       descents=descents)
 
 
+def _fleet_supervisor(fleet):
+    """A fresh engine-level supervisor from a FleetConfig (None passes
+    through — the zero-overhead default)."""
+    if fleet is None:
+        return None
+    from repro.fleet.controller import IslandSupervisor
+    return IslandSupervisor(fleet)
+
+
+# ---------------------------------------------------------------------------
+# IPOPResult persistence (campaign-service snapshots carry full results)
+# ---------------------------------------------------------------------------
+
+def result_to_tree(res: IPOPResult):
+    """Split a result into ``(array_tree, json_meta)`` for the checkpoint
+    store: arrays (including the possibly-infinite ``best_f``, which JSON
+    meta must not hold) as leaves, static scalars in meta."""
+    tree = {"best_x": np.asarray(res.best_x),
+            "best_f": np.asarray(res.best_f, np.float64),
+            "total_fevals": np.asarray(res.total_fevals, np.int64),
+            "descents": {}}
+    meta = {"x_shape": [int(s) for s in np.shape(res.best_x)],
+            "x_dtype": str(np.asarray(res.best_x).dtype), "descents": []}
+    for di, d in enumerate(res.descents):
+        tree["descents"][str(di)] = {
+            "gens": np.asarray(d.gens, np.int64),
+            "fevals": np.asarray(d.fevals, np.int64),
+            "best_f": np.asarray(d.best_f, np.float64)}
+        meta["descents"].append({"k_exp": int(d.k_exp), "lam": int(d.lam),
+                                 "stop_reason": int(d.stop_reason),
+                                 "T": int(len(d.gens))})
+    return tree, meta
+
+
+def result_template(meta: dict) -> dict:
+    """Shape/dtype template matching ``result_to_tree``'s array tree."""
+    sds = jax.ShapeDtypeStruct
+    tree = {"best_x": sds(tuple(meta["x_shape"]),
+                          np.dtype(meta["x_dtype"])),
+            "best_f": sds((), np.float64),
+            "total_fevals": sds((), np.int64),
+            "descents": {}}
+    for di, dm in enumerate(meta["descents"]):
+        T = int(dm["T"])
+        tree["descents"][str(di)] = {"gens": sds((T,), np.int64),
+                                     "fevals": sds((T,), np.int64),
+                                     "best_f": sds((T,), np.float64)}
+    return tree
+
+
+def result_from_tree(tree: dict, meta: dict) -> IPOPResult:
+    descents = []
+    for di, dm in enumerate(meta["descents"]):
+        dt = tree["descents"][str(di)]
+        descents.append(DescentTrace(
+            k_exp=int(dm["k_exp"]), lam=int(dm["lam"]),
+            gens=np.asarray(dt["gens"], np.int64),
+            fevals=np.asarray(dt["fevals"], np.int64),
+            best_f=np.asarray(dt["best_f"], np.float64),
+            stop_reason=int(dm["stop_reason"])))
+    return IPOPResult(best_f=float(tree["best_f"]),
+                      best_x=np.asarray(tree["best_x"]),
+                      total_fevals=int(tree["total_fevals"]),
+                      descents=descents)
+
+
 def run_ipop(fitness_fn: Callable, n: int, key: jax.Array,
              lam_start: int = 12, kmax_exp: int = 8,
              max_evals: int = 200_000, domain=(-5.0, 5.0),
@@ -96,7 +162,8 @@ def run_ipop(fitness_fn: Callable, n: int, key: jax.Array,
              impl: str = "auto", dtype: str = "float64",
              total_gens: int | None = None,
              backend: str = "ladder",
-             mesh_strategy: str = "ordered") -> IPOPResult:
+             mesh_strategy: str = "ordered",
+             fleet=None) -> IPOPResult:
     """Paper Alg. 2 with multiplicative factor 2 and K_max = 2^kmax_exp.
 
     ``backend="ladder"`` (default) runs the whole restart ladder as one
@@ -119,9 +186,18 @@ def run_ipop(fitness_fn: Callable, n: int, key: jax.Array,
     regression baseline) or ``"pallas"`` — and is validated here, at entry,
     instead of failing deep inside a traced engine program
     (kernels/ops.py documents the semantics).
+
+    ``fleet`` (a ``repro.fleet.FleetConfig``) adds fault-tolerant fleet
+    supervision — periodic island snapshots, health monitoring, optional
+    injected faults, snapshot-replay recovery — to the segment-driven
+    backends (``bucketed``/``mesh``/``service``); the recovered result is
+    identical to the unsupervised run (tests/test_fleet.py).
     """
     from repro.kernels import ops as kops
     kops.validate_impl(impl)
+    if fleet is not None and backend not in ("bucketed", "mesh", "service"):
+        raise ValueError("fleet supervision applies to backend='bucketed', "
+                         f"'mesh' or 'service', not {backend!r}")
     if backend == "hostloop":
         if total_gens is not None:
             raise ValueError("total_gens only applies to backend='ladder'; "
@@ -138,8 +214,8 @@ def run_ipop(fitness_fn: Callable, n: int, key: jax.Array,
         engine_b = bucketed_mod.BucketedLadderEngine(
             n=n, lam_start=lam_start, kmax_exp=kmax_exp, max_evals=max_evals,
             domain=domain, sigma0_frac=sigma0_frac, impl=impl, dtype=dtype)
-        carry, trace = bucketed_mod.run_bucketed_single(engine_b, key,
-                                                        fitness_fn)
+        carry, trace = bucketed_mod.run_bucketed_single(
+            engine_b, key, fitness_fn, supervisor=_fleet_supervisor(fleet))
         return _result_from_ladder(engine_b.full, carry, trace)
     if backend == "service":
         from repro.service import run_service_single
@@ -149,7 +225,7 @@ def run_ipop(fitness_fn: Callable, n: int, key: jax.Array,
         return run_service_single(
             fitness_fn, n, key, lam_start=lam_start, kmax_exp=kmax_exp,
             max_evals=max_evals, domain=domain, sigma0_frac=sigma0_frac,
-            impl=impl, dtype=dtype)
+            impl=impl, dtype=dtype, fleet=fleet)
     if backend == "mesh":
         from repro.distributed import mesh_engine as mesh_mod
         if total_gens is not None:
@@ -159,7 +235,8 @@ def run_ipop(fitness_fn: Callable, n: int, key: jax.Array,
             n=n, lam_start=lam_start, kmax_exp=kmax_exp, max_evals=max_evals,
             domain=domain, sigma0_frac=sigma0_frac, impl=impl, dtype=dtype,
             strategy=mesh_strategy)
-        carry, trace = mesh_mod.run_mesh_single(engine_m, key, fitness_fn)
+        carry, trace = mesh_mod.run_mesh_single(
+            engine_m, key, fitness_fn, supervisor=_fleet_supervisor(fleet))
         return _result_from_ladder(engine_m.bucketed.full, carry, trace)
     if backend != "ladder":
         raise ValueError(f"unknown backend {backend!r}")

@@ -344,7 +344,7 @@ class MeshCampaignEngine:
 
     # -- drivers --------------------------------------------------------------
     def _drive_ordered(self, keys, insts, carry, branch_fids, fitness_fn,
-                       max_segments: int):
+                       max_segments: int, supervisor=None):
         """S1: the bucketed re-bucketing loop verbatim (``drive_segments``),
         with shard_map dispatch and the allgather pull.
 
@@ -404,16 +404,27 @@ class MeshCampaignEngine:
 
         # every accepted segment is folded: the loop always pulls the carry
         # it just accepted before deciding whether another bucket exists
+        # (a supervisor sees S1 as ONE island — its failure domain is the
+        # whole mesh program, so recovery restarts the whole-batch carry)
         carry, trace, segments, bucket_wall = bucketed.drive_segments(
             self.bucketed, carry, dispatch, max_segments,
-            time_axis=1, pull=pull, overlap=self.overlap)
+            time_axis=1, pull=pull, overlap=self.overlap,
+            supervisor=supervisor)
         return carry, trace, segments, bucket_wall, exchange, None
 
     def _drive_concurrent(self, keys, insts, carry, branch_fids, fitness_fn,
-                          max_segments: int):
+                          max_segments: int, supervisor=None):
         """S2: one island per device, each with its own re-bucketing loop;
         the host round-robins dispatches (async — islands overlap) and folds
-        the per-island budget/best scalars into the shared campaign view."""
+        the per-island budget/best scalars into the shared campaign view.
+
+        ``supervisor`` (``repro.fleet``) supervises each island: periodic
+        host snapshots of shard state, kill/delay/corrupt fault application,
+        health grading of the per-island pulls, and recovery by replay —
+        a killed shard's snapshot is device_put onto a surviving device and
+        re-driven (identical trajectories: shard state is complete and
+        sampling row-keyed).  ``None`` (default) costs one host ``if`` per
+        hook site."""
         eng = self.bucketed
         devs = list(self.mesh.devices.flat)
         P_n = len(devs)
@@ -440,14 +451,23 @@ class MeshCampaignEngine:
         bucket_wall: Dict[int, float] = {}
         exchange: List[dict] = []
         reg = obs.metrics()
+        if supervisor is not None:
+            supervisor.mesh_init(shards, devs)
         for rnd in range(max_segments):
+            if supervisor is not None:
+                supervisor.mesh_round(rnd, shards, devs)
             dispatched = retired = finished = 0
             for s, sh in enumerate(shards):
                 if sh["done"]:
                     continue
                 t0 = time.perf_counter()
-                k_idx, active, fevals, best_f = bucketed.pull_schedule(
-                    sh["carry"])                 # blocks on THIS island only
+                if supervisor is not None:
+                    k_idx, active, fevals, best_f = supervisor.pull(
+                        s, rnd,
+                        lambda _c=sh["carry"]: bucketed.pull_schedule(_c))
+                else:
+                    k_idx, active, fevals, best_f = bucketed.pull_schedule(
+                        sh["carry"])             # blocks on THIS island only
                 reg.histogram("mesh_island_block_s",
                               island=s).observe(time.perf_counter() - t0)
                 sh["best"] = float(best_f.min())
@@ -476,6 +496,8 @@ class MeshCampaignEngine:
                                             fitness_fn)
                 args = (sh["keys"], sh["carry"]) if sh["insts"] is None \
                     else (sh["keys"], sh["insts"], sh["carry"])
+                if supervisor is not None:
+                    supervisor.before_dispatch(s, rnd)
                 t0 = time.perf_counter()
                 sh["carry"], tr = runner(*args)   # async: no block here
                 wall = time.perf_counter() - t0
@@ -573,7 +595,8 @@ class MeshCampaignResult(bucketed.BucketedCampaignResult):
 
 def run_campaign_mesh(engine: MeshCampaignEngine, fids, instances=(1,),
                       runs: int = 1, seed: int = 0,
-                      max_segments: int = 10_000) -> MeshCampaignResult:
+                      max_segments: int = 10_000,
+                      supervisor=None) -> MeshCampaignResult:
     """Run a whole BBOB campaign through the mesh engine — same member
     layout, instance stacking and key schedule as ``run_campaign_bucketed``
     (and therefore the λ_max-padded engine), with the batch padded to the
@@ -595,7 +618,8 @@ def run_campaign_mesh(engine: MeshCampaignEngine, fids, instances=(1,),
     drive = (engine._drive_ordered if engine.strategy == "ordered"
              else engine._drive_concurrent)
     carry, trace, segments, bucket_wall, exchange, shard_segments = drive(
-        keys, stacked, carry, branch_fids, None, max_segments)
+        keys, stacked, carry, branch_fids, None, max_segments,
+        supervisor=supervisor)
 
     sl = lambda a: np.asarray(a)[:B]
     trace = jax.tree_util.tree_map(sl, trace)
@@ -623,7 +647,8 @@ def run_campaign_mesh(engine: MeshCampaignEngine, fids, instances=(1,),
 
 
 def run_mesh_single(engine: MeshCampaignEngine, base_key: jax.Array,
-                    fitness_fn: Callable, max_segments: int = 10_000):
+                    fitness_fn: Callable, max_segments: int = 10_000,
+                    supervisor=None):
     """One (un-vmapped) problem through the mesh engine — the ``mesh``
     backend behind ``ipop.run_ipop``.  The single member rides shard 0; the
     other shards carry inert padding rows.  Returns ``(carry, trace)`` with
@@ -640,7 +665,8 @@ def run_mesh_single(engine: MeshCampaignEngine, base_key: jax.Array,
     drive = (engine._drive_ordered if engine.strategy == "ordered"
              else engine._drive_concurrent)
     carry, trace, _segs, _walls, _exch, _ss = drive(
-        keys, None, carry, (), fitness_fn, max_segments)
+        keys, None, carry, (), fitness_fn, max_segments,
+        supervisor=supervisor)
     one = lambda a: np.asarray(a)[0]
     return (jax.tree_util.tree_map(one, carry),
             jax.tree_util.tree_map(one, trace))

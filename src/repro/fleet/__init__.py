@@ -1,0 +1,30 @@
+"""Fleet supervision: health monitoring, fault injection, recovery.
+
+The subsystem splits by dependency weight so chaos *plans* stay data:
+
+* ``faults.py``  — ``FaultPlan`` / ``FaultEvent`` (stdlib only)
+* ``health.py``  — per-island ALIVE/SUSPECT/DEAD detector (stdlib + obs)
+* ``controller.py`` — ``FleetConfig``, the engine-level
+  ``IslandSupervisor`` and the service-level ``FleetController``
+  (imports jax and the service — loaded lazily here so
+  ``from repro.fleet import FaultPlan`` stays light)
+"""
+from repro.fleet.faults import (CORRUPT, DELAY, KILL,          # noqa: F401
+                                FaultEvent, FaultPlan)
+from repro.fleet.health import (ALIVE, DEAD, SUSPECT,          # noqa: F401
+                                FleetHealth, HealthConfig, IslandHealth)
+
+_LAZY = ("FleetConfig", "FleetController", "IslandSupervisor",
+         "occupancy_skew")
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        from repro.fleet import controller
+        return getattr(controller, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+__all__ = ["FaultEvent", "FaultPlan", "KILL", "DELAY", "CORRUPT",
+           "FleetHealth", "HealthConfig", "IslandHealth",
+           "ALIVE", "SUSPECT", "DEAD", *_LAZY]

@@ -1,0 +1,562 @@
+"""The fleet recovery loop: supervision for engines and the service.
+
+Two supervisors share one failure model (fleet/health.py) and one fault
+schedule (fleet/faults.py):
+
+* ``IslandSupervisor`` — engine-level.  Hooks into the segment drivers
+  through three optional callbacks (``drive_segments(supervisor=...)``
+  and the mesh S2 round loop): a **supervised pull** that garbles/retries
+  boundary reads and feeds the health detector, a **pre-dispatch** hook
+  that injects scheduled delays, and a **boundary** hook that takes
+  periodic host snapshots of island state and — on a death verdict —
+  restores the last snapshot and replays.  Replay is exact: a carry is
+  the island's complete search state and sampling is row-keyed
+  prefix-stable, so re-running the lost segments regenerates the same
+  generations the dead island computed (the mesh path re-lands them on a
+  surviving device).
+* ``FleetController`` — service-level.  Wraps a ``CampaignServer``: the
+  server skips islands in ``server.down_islands`` and calls the
+  controller's pull/delay hooks (``server.fleet``); the controller's
+  ``step()`` applies due kills, converts health verdicts into failures,
+  recovers a dead island's rows from the last on-disk snapshot (a
+  PARTIAL ``checkpoint.store.restore`` — only the dead island's subtree
+  is read), re-places them on surviving islands through the existing
+  allocator (degraded mode; unplaceable rows park until a slot or the
+  island returns), re-admits returning islands, and schedules
+  ``repack``-based lane rebalancing when slot-occupancy skew between
+  islands exceeds a threshold — the same relocation mechanism recovery
+  uses, on a second trigger.
+
+Rows recovered from a snapshot resume bit-exactly (same state, same
+keys); a row that was admitted after the last snapshot replays from its
+request, which is equally deterministic (admission state is a pure
+function of the request).  Either way the final ``IPOPResult`` matches
+the fault-free run — the chaos gate in benchmarks/bench_service.py and
+tests/test_fleet.py assert it.
+
+Zero-overhead contract: nothing in the engines or the server imports
+this module; with no supervisor installed every hook site is a single
+host-side ``is None`` check (no device syncs, no extra programs —
+pinned in tests/test_obs.py and tests/test_fleet.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro import obs
+from repro.checkpoint import store
+from repro.fleet.faults import FaultPlan
+from repro.fleet.health import FleetHealth, HealthConfig
+
+
+@dataclasses.dataclass
+class FleetConfig:
+    """User surface of fleet supervision (``run_ipop(fleet=...)``,
+    ``serve_campaigns --fleet``)."""
+
+    snapshot_every: int = 4          # boundaries between snapshots
+    plan: Optional[FaultPlan] = None  # injected chaos schedule (tests/bench)
+    deadline_s: float = 30.0         # health: boundary-pull deadline
+    stall_boundaries: int = 3        # health: no-progress boundaries → dead
+    retries: int = 2                 # suspect pulls before dead; garbled-pull
+    backoff_s: float = 0.0           # re-reads share the same retry budget
+    skew_threshold: float = 0.5      # occupancy-fraction skew → lane repack
+
+    def health_config(self) -> HealthConfig:
+        return HealthConfig(deadline_s=self.deadline_s,
+                            stall_boundaries=self.stall_boundaries,
+                            retries=self.retries, backoff_s=self.backoff_s)
+
+
+def _host(tree):
+    return jax.tree_util.tree_map(np.asarray, tree)
+
+
+class IslandSupervisor:
+    """Engine-level supervision: snapshot / fault / health hooks for the
+    bucketed segment driver (one island) and the mesh S2 round loop (one
+    island per shard)."""
+
+    def __init__(self, cfg: Optional[FleetConfig] = None):
+        self.cfg = cfg or FleetConfig()
+        self.plan = self.cfg.plan
+        self.health = FleetHealth(self.cfg.health_config())
+        self._dispatched: set = set()   # islands with a segment in flight
+        self._snap: Dict[int, dict] = {}
+        self._statics: Dict[int, dict] = {}
+        self._shard_dev: Dict[int, object] = {}
+        self._dead_devs: set = set()
+
+    # -- shared hooks (service + both engine drivers) -----------------------
+
+    def pull(self, island: int, boundary: int, fn):
+        """Supervised boundary pull: apply scheduled corruption, retry
+        implausible (non-monotone budget) reads, grade health."""
+        t0 = time.perf_counter()
+        k_idx, active, fevals, best_f = fn()
+        if self.plan is not None and self.plan.corrupts(island, boundary):
+            fevals = np.zeros_like(fevals)      # garbled read, fired once
+        fev = float(np.sum(fevals))
+        tries = 0
+        while fev < self.health.last_fev(island) \
+                and tries < max(1, self.cfg.retries):
+            # budget counters are monotone by construction: a regressing
+            # sum can only be a corrupt read — re-pull, with backoff
+            tries += 1
+            obs.metrics().counter("fleet_pull_retries_total",
+                                  island=island).inc()
+            if self.cfg.backoff_s:
+                time.sleep(self.cfg.backoff_s * tries)
+            k_idx, active, fevals, best_f = fn()
+            fev = float(np.sum(fevals))
+        expect = island in self._dispatched
+        self._dispatched.discard(island)
+        self.health.observe(island, boundary, fev,
+                            time.perf_counter() - t0,
+                            expect_progress=expect)
+        return k_idx, active, fevals, best_f
+
+    def before_dispatch(self, island: int, boundary: int):
+        """Pre-dispatch hook: injected delay faults + the progress-expected
+        marker the stall detector keys on."""
+        if self.plan is not None:
+            d = self.plan.delay(island, boundary)
+            if d:
+                time.sleep(d)
+        self._dispatched.add(island)
+
+    # -- bucketed drive_segments (single island 0) --------------------------
+
+    def segment_boundary(self, b: int, carry, n_traces: int):
+        """Called at the top of every ``drive_segments`` iteration; returns
+        ``(carry, n_traces_to_keep, recovered)``.  On a death verdict the
+        last snapshot's carry is restored and the trace list truncated to
+        the snapshot point — replay regenerates the rest identically."""
+        ev = self.plan.kill_at(0, b) if self.plan is not None else None
+        if ev is not None or self.health.is_dead(0):
+            reason = ("killed" if ev is not None
+                      else self.health.island(0).reason or "deadline")
+            snap = self._snap.get(0)
+            if snap is None:
+                raise RuntimeError(
+                    f"island died at boundary {b} before the first snapshot")
+            t0 = time.perf_counter()
+            reg = obs.metrics()
+            reg.counter("fleet_failures_total", reason=reason).inc()
+            lost = max(0.0, self.health.last_fev(0) - snap["fev"])
+            carry = jax.device_put(snap["carry"])
+            self.health.revive(0, b)
+            self.health.reset_progress(0, snap["fev"])
+            self._dispatched.discard(0)
+            reg.counter("fleet_recoveries_total", mode="replayed").inc()
+            reg.histogram("fleet_recovery_wall_s").observe(
+                time.perf_counter() - t0)
+            reg.histogram("fleet_lost_work_evals").observe(lost)
+            return carry, snap["n_traces"], True
+        if self.cfg.snapshot_every and b % self.cfg.snapshot_every == 0:
+            self._snap[0] = {"carry": _host(carry),
+                             "n_traces": int(n_traces),
+                             "fev": self.health.last_fev(0), "boundary": b}
+        return carry, n_traces, False
+
+    # -- mesh S2 round loop (one island per shard) --------------------------
+
+    def mesh_init(self, shards: List[dict], devs: List):
+        """Record the per-shard static operands (keys/instances never change
+        mid-campaign) and take snapshot 0."""
+        for s, sh in enumerate(shards):
+            self._statics[s] = {
+                "keys": np.asarray(sh["keys"]),
+                "insts": (None if sh["insts"] is None
+                          else _host(sh["insts"])),
+            }
+            self._shard_dev[s] = devs[s % len(devs)]
+        self._mesh_snapshot(0, shards)
+
+    def _mesh_snapshot(self, rnd: int, shards: List[dict]):
+        for s, sh in enumerate(shards):
+            if sh["done"] and s in self._snap:
+                continue                # final state already captured
+            self._snap[s] = {
+                "carry": _host(sh["carry"]),
+                "traces": [_host(t) for t in sh["traces"]],
+                "segments": list(sh["segments"]),
+                "done": sh["done"], "best": sh["best"],
+                "fevals": sh["fevals"],
+                "fev": self.health.last_fev(s), "boundary": rnd,
+            }
+
+    def mesh_round(self, rnd: int, shards: List[dict], devs: List):
+        """Called at the top of every S2 round: apply due kills, convert
+        health verdicts, take the periodic snapshot."""
+        if self.plan is not None:
+            for ev in self.plan.kills_at(rnd):
+                if ev.island < len(shards):
+                    self._mesh_kill(ev.island, rnd, shards, devs, "killed")
+        for s in range(len(shards)):
+            if self.health.is_dead(s):
+                self._mesh_kill(s, rnd, shards, devs,
+                                self.health.island(s).reason or "deadline")
+        if self.cfg.snapshot_every and rnd \
+                and rnd % self.cfg.snapshot_every == 0:
+            self._mesh_snapshot(rnd, shards)
+
+    def _replacement_device(self, s: int, devs: List):
+        """Next device after the dead one, skipping known-dead devices;
+        falls back to the dead device itself when no healthy device is left
+        (simulated faults: the hardware is actually fine)."""
+        old = self._shard_dev[s]
+        self._dead_devs.add(old)
+        start = devs.index(old) if old in devs else s
+        for off in range(1, len(devs) + 1):
+            cand = devs[(start + off) % len(devs)]
+            if cand not in self._dead_devs:
+                return cand
+        return old
+
+    def _mesh_kill(self, s: int, rnd: int, shards: List[dict], devs: List,
+                   reason: str):
+        snap = self._snap.get(s)
+        if snap is None:
+            raise RuntimeError(
+                f"island {s} died at round {rnd} before the first snapshot")
+        t0 = time.perf_counter()
+        reg = obs.metrics()
+        reg.counter("fleet_failures_total", reason=reason).inc()
+        lost = max(0.0, self.health.last_fev(s) - snap["fev"])
+        dev = self._replacement_device(s, devs)
+        sh, stat = shards[s], self._statics[s]
+        sh["keys"] = jax.device_put(stat["keys"], dev)
+        sh["insts"] = (None if stat["insts"] is None
+                       else jax.device_put(stat["insts"], dev))
+        sh["carry"] = jax.device_put(snap["carry"], dev)
+        sh["traces"] = list(snap["traces"])   # host trees; assembly is host
+        sh["segments"] = list(snap["segments"])
+        sh["done"], sh["best"] = snap["done"], snap["best"]
+        sh["fevals"] = snap["fevals"]
+        self._shard_dev[s] = dev
+        self.health.revive(s, rnd)
+        self.health.reset_progress(s, snap["fev"])
+        self._dispatched.discard(s)
+        reg.counter("fleet_recoveries_total", mode="replayed").inc()
+        reg.histogram("fleet_recovery_wall_s").observe(
+            time.perf_counter() - t0)
+        reg.histogram("fleet_lost_work_evals").observe(lost)
+
+
+# ---------------------------------------------------------------------------
+# service-level controller
+# ---------------------------------------------------------------------------
+
+def occupancy_counts(al) -> List[int]:
+    """Occupied rows per island of one lane's allocator."""
+    return [al.rows_per_island - al.free_rows(i)
+            for i in range(al.n_islands)]
+
+
+def occupancy_skew(al) -> float:
+    """Max-min occupied-fraction spread across one lane's islands — the
+    ``service_slot_occupancy`` skew the rebalance trigger is written
+    against."""
+    counts = occupancy_counts(al)
+    return (max(counts) - min(counts)) / al.rows_per_island
+
+
+class FleetController:
+    """Fault-tolerant supervision loop around a ``CampaignServer``.
+
+    Install by construction: ``ctl = FleetController(server, config)``;
+    then drive the service through ``ctl.step()`` / ``ctl.drain()``
+    instead of the server's own.  The controller owns the snapshot
+    cadence (through the server's auto-snapshot path), fault application,
+    health verdicts, row recovery and skew rebalancing; the server only
+    carries two passive hook points (``down_islands`` and the
+    ``fleet.pull`` / ``fleet.before_dispatch`` callbacks).
+    """
+
+    def __init__(self, server, config: Optional[FleetConfig] = None):
+        from repro.service import server as server_mod   # no cycle: lazy
+        self._server_mod = server_mod
+        self.server = server
+        self.cfg = config or FleetConfig()
+        self.sup = IslandSupervisor(self.cfg)
+        self._pending: List[dict] = []       # parked recovered rows
+        self._down_until: Dict[int, int] = {}
+        server.fleet = self
+        if server.snapshot_dir and not server.snapshot_every:
+            server.snapshot_every = self.cfg.snapshot_every
+
+    # hook points the server calls (see server._island_boundary)
+    def pull(self, island: int, boundary: int, fn):
+        return self.sup.pull(island, boundary, fn)
+
+    def before_dispatch(self, island: int, boundary: int):
+        self.sup.before_dispatch(island, boundary)
+
+    # -- the supervised service loop ----------------------------------------
+
+    def step(self):
+        srv, b = self.server, self.server._boundary_n
+        rejoined = [i for i, until in list(self._down_until.items())
+                    if b >= until]
+        for i in rejoined:
+            self._rejoin(i, b)
+        if self.cfg.plan is not None:
+            for ev in self.cfg.plan.kills_at(b):
+                if (ev.island < len(srv.devices)
+                        and ev.island not in srv.down_islands):
+                    self._fail_island(ev.island, b, "killed",
+                                      down_for=ev.down_for)
+        for i in self.sup.health.dead_islands():
+            if i not in srv.down_islands and i < len(srv.devices):
+                self._fail_island(
+                    i, b, self.sup.health.island(i).reason or "deadline")
+        self._place_pending()
+        stats = srv.step()
+        if not srv.down_islands:
+            self._maybe_rebalance("rejoin" if rejoined else "skew")
+        return stats
+
+    def drain(self, max_steps: int = 10_000):
+        """Supervised ``server.drain``: also waits on parked recoveries
+        (rows that could not be re-placed yet)."""
+        import time as _t
+        from repro.service.queue import JOB_REJECTED
+        srv = self.server
+        for _ in range(max_steps):
+            stats = self.step()
+            if (not stats.progressed() and not srv._resident_jobs()
+                    and not self._pending and not len(srv.queue)):
+                break
+        else:
+            raise RuntimeError(
+                f"fleet did not drain in {max_steps} steps "
+                f"({len(self._pending)} recoveries still parked)")
+        while len(srv.queue):
+            item = srv.queue.take()
+            if item is None:
+                break
+            _req, t = item
+            t.status = JOB_REJECTED
+            t.done_s = _t.monotonic()
+            obs.metrics().counter("service_jobs_total",
+                                  event="rejected").inc()
+        return [t for t in srv.tickets.values() if t.done]
+
+    # -- failure + recovery --------------------------------------------------
+
+    def _fail_island(self, i: int, b: int, reason: str, down_for: int = 0):
+        """Declare island ``i`` dead and recover every row it held: restore
+        each resident job's state from the last on-disk snapshot (partial
+        read of exactly that island's subtree) — or replay from its request
+        if it was admitted after the snapshot — and re-place it on a
+        surviving island (or park it)."""
+        srv = self.server
+        t0 = time.perf_counter()
+        srv.down_islands.add(i)
+        self.sup.health.mark_dead(i, b, reason)
+        reg = obs.metrics()
+        reg.counter("fleet_failures_total", reason=reason).inc()
+        snap = self._open_snapshot()
+        lost = 0.0
+        for lane in srv.lanes.values():
+            al = lane.allocator
+            if i >= al.n_islands:
+                continue
+            for row in np.nonzero(al.row_jobs[i] >= 0)[0]:
+                job = int(al.row_jobs[i][row])
+                al.release(i, int(row))
+                t = srv.tickets[job]
+                vals, tr_row, own_row, fev_snap = self._recover_job(
+                    snap, lane, job, t)
+                lost += max(0.0, float(t.fevals) - fev_snap)
+                rec = {"lane_key": lane.key, "job": job, "vals": vals,
+                       "trace": tr_row, "own": own_row,
+                       "budget": int(t.request.budget)}
+                if not self._try_place(rec):
+                    self._pending.append(rec)
+                    t.island = t.row = None
+                    reg.counter("fleet_recoveries_total",
+                                mode="requeued").inc()
+        if down_for:
+            self._down_until[i] = b + down_for
+        reg.histogram("fleet_recovery_wall_s").observe(
+            time.perf_counter() - t0)
+        reg.histogram("fleet_lost_work_evals").observe(lost)
+
+    def _open_snapshot(self) -> Optional[dict]:
+        srv = self.server
+        if not srv.snapshot_dir:
+            return None
+        step = store.latest_step(srv.snapshot_dir)
+        if step is None:
+            return None
+        meta = store.load_meta(srv.snapshot_dir, step)
+        if meta is None:
+            return None
+        return {"step": step, "meta": meta, "cache": {}}
+
+    def _recover_job(self, snap: Optional[dict], lane, job: int, t):
+        """One job's recovered row: ``(vals, trace_row, own_row,
+        fev_at_snapshot)``.  ``vals`` matches ``_Lane._write_row``'s
+        structure; ``trace_row`` is the job's snapshot-era trace slice (or
+        None when it replays from scratch)."""
+        from repro.service.queue import JOB_RUNNING
+        meta = snap["meta"] if snap is not None else None
+        jm = meta["jobs"].get(str(job)) if meta is not None else None
+        if jm is not None and jm["status"] == JOB_RUNNING \
+                and jm.get("lane") == list(lane.key):
+            li = next((n for n, lm in enumerate(meta["lanes"])
+                       if tuple(lm["key"]) == lane.key), None)
+            if li is not None:
+                lmeta = meta["lanes"][li]
+                oi, orow = int(jm["island"]), int(jm["row"])
+                if lmeta["alloc"]["row_jobs"][oi][orow] == job:
+                    entry = self._load_island(snap, lane, li, lmeta, oi)
+                    vals = {
+                        "keys": entry["keys"][orow],
+                        "fn_idx": entry["fn_idx"][orow],
+                        "budgets": entry["budgets"][orow],
+                        "insts": jax.tree_util.tree_map(
+                            lambda a: a[orow], entry["insts"]),
+                        "carry": jax.tree_util.tree_map(
+                            lambda a: a[orow], entry["carry"]),
+                    }
+                    tr_row = own_row = None
+                    if "own" in entry:
+                        mask = entry["own"][orow] == job
+                        if mask.any():
+                            tr_row = jax.tree_util.tree_map(
+                                lambda a: a[orow][mask], entry["trace"])
+                            own_row = entry["own"][orow][mask]
+                    return vals, tr_row, own_row, float(jm["fevals"] or 0)
+        # admitted after the snapshot (or no snapshot): replay from the
+        # request — admission state is a pure function of it
+        return self.server._job_vals(lane, t.request), None, None, 0.0
+
+    def _load_island(self, snap: dict, lane, li: int, lmeta: dict,
+                     oi: int) -> dict:
+        """Partial snapshot read: exactly one (lane, island) subtree."""
+        ck = (li, oi)
+        if ck not in snap["cache"]:
+            tmpl = self._server_mod._lane_template(lane, lmeta)
+            template = {"lanes": {str(li): {"islands": {
+                str(oi): tmpl["islands"][str(oi)]}}}}
+            sub = store.restore(self.server.snapshot_dir, snap["step"],
+                                template)
+            snap["cache"][ck] = _host(
+                sub)["lanes"][str(li)]["islands"][str(oi)]
+        return snap["cache"][ck]
+
+    def _try_place(self, rec: dict) -> bool:
+        """Place one recovered row on the healthiest surviving island of
+        its lane; False parks it for a later boundary."""
+        srv = self.server
+        lane = srv.lanes[rec["lane_key"]]
+        al = lane.allocator
+        cands = [j for j in range(al.n_islands)
+                 if j not in srv.down_islands and al.free_rows(j) > 0]
+        if not cands:
+            return False
+        j = max(cands, key=lambda x: (al.free_rows(x), -x))
+        placed = al.alloc(rec["job"], rec["budget"], island=j)
+        assert placed is not None
+        _j, nr = placed
+        isl = lane.islands[j]
+        isl.arrays = lane._write_row(isl.arrays, rec["vals"], nr)
+        if rec["own"] is not None:
+            isl.traces.append(_expand_trace_row(
+                al.rows_per_island, nr, rec["trace"], rec["job"]))
+        t = srv.tickets[rec["job"]]
+        t.lane, t.island, t.row = lane.key, j, nr
+        obs.metrics().counter("fleet_recoveries_total",
+                              mode="reassigned").inc()
+        return True
+
+    def _place_pending(self):
+        still = []
+        for rec in self._pending:
+            if not self._try_place(rec):
+                still.append(rec)
+        self._pending = still
+
+    def _rejoin(self, i: int, b: int):
+        """Re-admit a returned island: blank state (its rows were recovered
+        elsewhere), alive again; the skew trigger repopulates it."""
+        srv = self.server
+        srv.down_islands.discard(i)
+        self._down_until.pop(i, None)
+        self.sup.health.revive(i, b)
+        for lane in srv.lanes.values():
+            if i < len(lane.islands):
+                isl = lane.islands[i]
+                isl.arrays = jax.device_put(lane._blank_arrays(), isl.device)
+                isl.traces = []
+        obs.metrics().counter("fleet_recoveries_total",
+                              mode="rejoined").inc()
+
+    # -- skew rebalancing ----------------------------------------------------
+
+    def _maybe_rebalance(self, trigger: str):
+        """Schedule a lane ``repack`` when slot occupancy is skewed beyond
+        the threshold AND a repack can actually improve it (spread of
+        occupied counts > 1 row).  Only with the whole fleet healthy —
+        degraded mode defers rebalancing until islands return."""
+        srv = self.server
+        for lane in srv.lanes.values():
+            al = lane.allocator
+            if al.n_islands < 2 or not al.occupied():
+                continue
+            counts = occupancy_counts(al)
+            if max(counts) - min(counts) <= 1:
+                continue
+            if occupancy_skew(al) <= self.cfg.skew_threshold:
+                continue
+            self._rebalance_lane(lane)
+            obs.metrics().counter("fleet_rebalances_total",
+                                  trigger=trigger).inc()
+
+    def _rebalance_lane(self, lane):
+        """Live repack: pull the lane's islands to host, lay the occupied
+        rows back out round-robin across all islands (the allocator's
+        repack order is island-major, hence balanced), and device_put each
+        island back — the elastic re-shard path restore() uses, applied to
+        a running lane."""
+        srv = self.server
+        ltree: dict = {"islands": {}}
+        trace_T = {}
+        for i, isl in enumerate(lane.islands):
+            entry = _host(dict(isl.arrays))
+            if isl.traces:
+                entry["trace"] = jax.tree_util.tree_map(
+                    lambda *xs: np.concatenate(
+                        [np.asarray(x) for x in xs], axis=1),
+                    *[t for t, _o in isl.traces])
+                entry["own"] = np.concatenate(
+                    [o for _t, o in isl.traces], axis=1)
+                trace_T[str(i)] = int(entry["own"].shape[1])
+            else:
+                trace_T[str(i)] = 0
+            ltree["islands"][str(i)] = entry
+        lmeta = {"alloc": lane.allocator.to_meta(), "trace_T": trace_T}
+        self._server_mod._repack_lane(srv, lane, lmeta, ltree)
+
+
+def _expand_trace_row(Bl: int, row: int, tr_row, job: int):
+    """Blow a recovered single-row trace slice back up to an island-shaped
+    ``(trace, own)`` entry: row ``row`` carries the job's generations, every
+    other row is inert (``own=-1`` → never sliced into any result)."""
+    T = jax.tree_util.tree_leaves(tr_row)[0].shape[0]
+    tr = jax.tree_util.tree_map(
+        lambda a: np.zeros((Bl,) + a.shape, a.dtype), tr_row)
+    for d, s in zip(jax.tree_util.tree_leaves(tr),
+                    jax.tree_util.tree_leaves(tr_row)):
+        d[row] = s
+    own = np.full((Bl, T), -1, np.int64)
+    own[row] = job
+    return tr, own

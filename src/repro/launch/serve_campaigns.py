@@ -3,12 +3,22 @@
   PYTHONPATH=src python -m repro.launch.serve_campaigns \
       [--requests reqs.json | --synthetic 8] [--devices 4] \
       [--snapshot-dir ckpt --snapshot-every 4] [--resume] [--out results.json] \
-      [--metrics-out metrics.jsonl] [--metrics-port 9100]
+      [--fleet] [--chaos-kills "0:3:2"] [--metrics-out metrics.jsonl] \
+      [--metrics-port 9100]
 
 ``--metrics-out`` appends one JSONL record of every live ``repro.obs``
 series per service round (docs/METRICS.md documents the series and how to
 read a run); ``--metrics-port`` additionally serves the prometheus-style
 text exposition at ``GET /metrics`` for dashboards to scrape.
+
+``--fleet`` wraps the service in a ``repro.fleet.FleetController``:
+boundary pulls are health-graded (deadline/stall detection), dead islands
+are recovered from the last snapshot onto survivors, returning islands are
+re-admitted, and lanes repack when slot-occupancy skew exceeds
+``--fleet-skew``.  Supervision wants a ``--snapshot-dir`` (recovery
+restores from it; without one, rows replay from their requests).
+``--chaos-kills "island:boundary[:down_for],..."`` injects a deterministic
+kill schedule through the same controller — the operational fire drill.
 
 ``--requests`` takes a JSON list of CampaignRequest dicts, each optionally
 carrying an ``arrival_s`` wall-clock offset; ``--synthetic N`` generates a
@@ -56,6 +66,18 @@ def _parser():
                     help="snapshot cadence in service rounds")
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--max-steps", type=int, default=10_000)
+    ap.add_argument("--fleet", action="store_true",
+                    help="supervise the service with a FleetController "
+                         "(health monitoring + snapshot recovery)")
+    ap.add_argument("--fleet-deadline-s", type=float, default=30.0,
+                    help="boundary-pull deadline before an island is "
+                         "suspect")
+    ap.add_argument("--fleet-skew", type=float, default=0.5,
+                    help="slot-occupancy skew that triggers a lane repack")
+    ap.add_argument("--chaos-kills", default=None,
+                    help="injected kill schedule "
+                         "'island:boundary[:down_for],...' (implies "
+                         "--fleet)")
     ap.add_argument("--out", default=None, help="write results JSON here")
     ap.add_argument("--metrics-out", default=None,
                     help="append a metrics JSONL record every service round")
@@ -143,6 +165,20 @@ def _serve(args):
         print(f"[serve] metrics at http://127.0.0.1:{port}/metrics",
               flush=True)
 
+    ctl = None
+    if args.fleet or args.chaos_kills:
+        from repro.fleet import FaultPlan, FleetConfig
+        from repro.fleet.controller import FleetController
+        plan = FaultPlan.parse(args.chaos_kills) if args.chaos_kills else None
+        ctl = FleetController(srv, FleetConfig(
+            snapshot_every=args.snapshot_every or 4, plan=plan,
+            deadline_s=args.fleet_deadline_s,
+            skew_threshold=args.fleet_skew))
+        print(f"[serve] fleet supervision on "
+              f"(snapshot_every={srv.snapshot_every or ctl.cfg.snapshot_every}"
+              f"{', chaos plan ' + args.chaos_kills if plan else ''})",
+              flush=True)
+
     t0 = time.monotonic()
     tickets = []
     for step_i in range(args.max_steps):
@@ -159,7 +195,7 @@ def _serve(args):
             except QueueFull:
                 raw.insert(0, spec)             # backpressure: retry later
                 break
-        stats = srv.step()
+        stats = ctl.step() if ctl is not None else srv.step()
         for t in srv.tickets.values():
             if t.done and not getattr(t, "_printed", False):
                 t._printed = True
@@ -168,7 +204,8 @@ def _serve(args):
                 print(f"[serve] -job {t.job_id} done best_f={t.best_f:.6g} "
                       f"fevals={t.fevals} latency={lat_s}", flush=True)
         if (not stats.progressed() and not raw and not len(srv.queue)
-                and not srv._resident_jobs()):
+                and not srv._resident_jobs()
+                and not (ctl is not None and ctl._pending)):
             break
     wall = time.monotonic() - t0
 

@@ -17,7 +17,7 @@ Naming follows the prometheus conventions production governance services
 front their metrics with: snake_case, ``_total`` suffix on counters,
 ``_s`` suffix on second-valued series, subsystem prefix first
 (``bucketed_`` the segment driver, ``mesh_`` the S1/S2 mesh engine,
-``service_`` the campaign server).  Restart-policy-adjacent names carry a
+``service_`` the campaign server, ``fleet_`` the supervision layer).  Restart-policy-adjacent names carry a
 ``policy``-free shape on purpose: when BIPOP & friends (arXiv 1207.0206)
 and large-scale strategy tiers (arXiv 2310.05377) land as per-row restart
 policies, they extend these series with a ``policy`` label instead of
@@ -51,6 +51,11 @@ def log_buckets(lo: float, hi: float, per_decade: int = 2,
 #: wide enough to hold a sub-ms host sync and a multi-minute soak job in
 #: the same fixed table (values beyond the last edge land in +Inf).
 TIME_BUCKETS_S = log_buckets(1e-5, 1e3, per_decade=2)
+
+#: edges for evaluation-count histograms (fleet lost-work accounting):
+#: 1 .. 1e6 evals, one edge per decade — recovery loses whole segments, so
+#: decade resolution is plenty and the table stays 7 cells wide.
+EVAL_BUCKETS = log_buckets(1, 1e6, per_decade=1)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -178,6 +183,41 @@ SCHEMA: Tuple[MetricSpec, ...] = (
                "service/server.py:step",
                "Completed service rounds (one segment boundary per island "
                "per round)."),
+    # -- fleet supervision (fleet/health.py, fleet/controller.py) -----------
+    MetricSpec("fleet_island_state", GAUGE, "state", ("island",),
+               "fleet/health.py:FleetHealth._set",
+               "Island health state gauge: 0=alive, 1=suspect, 2=dead "
+               "(emitted on every state transition)."),
+    MetricSpec("fleet_failures_total", COUNTER, "islands", ("reason",),
+               "fleet/controller.py:IslandSupervisor/_fail_island",
+               "Island failure events, reason=killed (fault plan) | "
+               "deadline (pull wall over budget) | stalled (no eval "
+               "progress while dispatched)."),
+    MetricSpec("fleet_recoveries_total", COUNTER, "recoveries", ("mode",),
+               "fleet/controller.py:IslandSupervisor/_fail_island/_rejoin",
+               "Recovery actions: mode=replayed (engine restored from "
+               "snapshot in place) | reassigned (row re-placed on a "
+               "survivor) | requeued (no capacity, parked for later) | "
+               "rejoined (island re-admitted after down_for)."),
+    MetricSpec("fleet_recovery_wall_s", HISTOGRAM, "s", (),
+               "fleet/controller.py:IslandSupervisor/_fail_island",
+               "Wall time of one failure-to-recovered handling pass "
+               "(snapshot load + re-placement)."),
+    MetricSpec("fleet_lost_work_evals", HISTOGRAM, "evaluations", (),
+               "fleet/controller.py:IslandSupervisor/_fail_island",
+               "Fitness evaluations discarded per failure: progress past "
+               "the last snapshot that must be re-run (bounds the "
+               "snapshot-cadence / lost-work trade).",
+               buckets=EVAL_BUCKETS),
+    MetricSpec("fleet_pull_retries_total", COUNTER, "retries", ("island",),
+               "fleet/controller.py:IslandSupervisor.pull",
+               "Boundary pulls re-issued after a corrupt read (regressed "
+               "eval counters)."),
+    MetricSpec("fleet_rebalances_total", COUNTER, "repacks", ("trigger",),
+               "fleet/controller.py:FleetController._maybe_rebalance",
+               "Cross-island lane repacks scheduled by the controller, "
+               "trigger=skew (occupancy imbalance) | rejoin (island "
+               "re-admitted)."),
 )
 
 SPECS: Dict[str, MetricSpec] = {s.name: s for s in SCHEMA}

@@ -302,6 +302,12 @@ class CampaignServer:
         self.lanes: Dict[tuple, _Lane] = {}
         self._completed: set = set()
         self._boundary_n = 0
+        # fleet supervision hook points (repro.fleet.FleetController): the
+        # server never imports the fleet — a controller installs itself on
+        # ``fleet`` and marks failed islands in ``down_islands``; without
+        # one, both stay empty and every hook site is a host-side no-op
+        self.fleet = None
+        self.down_islands: set = set()
 
     # -- config round-trip (snapshots) ----------------------------------------
     _CONFIG_FIELDS = ("bbob_fids", "lam_start", "kmax_exp", "dtype", "impl",
@@ -373,6 +379,8 @@ class CampaignServer:
         self._create_lanes()
         for lane in self.lanes.values():
             for i, isl in enumerate(lane.islands):
+                if i in self.down_islands:
+                    continue            # dead island: no pull, no dispatch
                 self._island_boundary(lane, i, isl, stats)
         self._boundary_n += 1
         reg = obs.metrics()
@@ -415,6 +423,17 @@ class CampaignServer:
                                   event="rejected").inc()
         return [t for t in self.tickets.values() if t.done]
 
+    def release_ticket(self, job_id: int) -> Optional[CampaignTicket]:
+        """Pop a finished ticket and return it (``None`` if unknown or still
+        running).  Long-running callers (the soak harness) release tickets as
+        jobs finish so host memory stays O(resident), not O(total jobs); the
+        job id remains in ``_completed`` so trace pruning still recognises
+        the retired rows."""
+        t = self.tickets.get(job_id)
+        if t is None or not t.done:
+            return None
+        return self.tickets.pop(job_id)
+
     def _resident_jobs(self) -> int:
         return sum(len(lane.allocator.occupied())
                    for lane in self.lanes.values())
@@ -425,8 +444,13 @@ class CampaignServer:
         reg = obs.metrics()
         lbl = _lane_label(lane.key)
         t0 = time.perf_counter()
-        k_idx, active, fevals, best_f = bucketed.pull_schedule(
-            isl.arrays["carry"])
+        if self.fleet is not None:
+            k_idx, active, fevals, best_f = self.fleet.pull(
+                i, self._boundary_n,
+                lambda: bucketed.pull_schedule(isl.arrays["carry"]))
+        else:
+            k_idx, active, fevals, best_f = bucketed.pull_schedule(
+                isl.arrays["carry"])
         reg.histogram("service_boundary_pull_s",
                       lane=lbl).observe(time.perf_counter() - t0)
         k_idx, active, fevals = k_idx.copy(), active.copy(), fevals.copy()
@@ -480,6 +504,8 @@ class CampaignServer:
         if k is None:
             return
         runner = lane.runner(k, lane.seg_len[k])
+        if self.fleet is not None:
+            self.fleet.before_dispatch(i, self._boundary_n)
         a = isl.arrays
         carry, tr = runner(a["keys"], a["fn_idx"], a["budgets"], a["insts"],
                            a["carry"])
@@ -490,12 +516,12 @@ class CampaignServer:
         reg.counter("service_segments_total", lane=lbl, bucket=k).inc()
         stats.dispatched += 1
 
-    def _admit(self, lane: _Lane, i: int, isl: _Island,
-               req: CampaignRequest, t: CampaignTicket) -> int:
-        al = lane.allocator
-        placed = al.alloc(t.job_id, req.budget, island=i)
-        assert placed is not None, "admission called without a free row"
-        _i, row = placed
+    def _job_vals(self, lane: _Lane, req: CampaignRequest) -> dict:
+        """A job's full row state as a pure function of its request —
+        matching ``_Lane._write_row``'s structure.  Admission writes it; the
+        fleet controller rebuilds it to replay a job whose island died
+        before a snapshot captured its progress (same key, same init: the
+        replayed trajectory is the one the dead island was computing)."""
         base_key = (jnp.asarray(req.key, jnp.uint32) if req.key is not None
                     else jax.random.PRNGKey(req.seed))
         if req.fid is not None:
@@ -507,8 +533,16 @@ class CampaignServer:
         else:
             fn_idx = 1 + self.registry.index(req.fitness)
             inst = lane.filler_inst
-        vals = {"keys": base_key, "fn_idx": fn_idx, "budgets": req.budget,
+        return {"keys": base_key, "fn_idx": fn_idx, "budgets": req.budget,
                 "insts": inst, "carry": lane._row_init(base_key)}
+
+    def _admit(self, lane: _Lane, i: int, isl: _Island,
+               req: CampaignRequest, t: CampaignTicket) -> int:
+        al = lane.allocator
+        placed = al.alloc(t.job_id, req.budget, island=i)
+        assert placed is not None, "admission called without a free row"
+        _i, row = placed
+        vals = self._job_vals(lane, req)
         isl.arrays = lane._write_row(isl.arrays, vals, row)
         t.status = JOB_RUNNING
         t.lane, t.island, t.row = lane.key, i, row
@@ -621,6 +655,7 @@ class CampaignServer:
                 "trace_T": trace_T,
             })
         jobs_meta = {}
+        tree["results"] = {}
         for jid, t in self.tickets.items():
             jobs_meta[str(jid)] = {
                 "status": t.status, "request": t.request.to_meta(),
@@ -628,7 +663,16 @@ class CampaignServer:
                 "fevals": t.fevals, "island": t.island, "row": t.row,
                 "lane": None if t.lane is None else list(t.lane),
                 "admit_boundary": t.admit_boundary,
+                # full ticket persistence: the streamed-update tail (already
+                # bounded by CampaignTicket.TAIL_CAP) and, for completed
+                # jobs, the full IPOPResult (arrays as checkpoint leaves) —
+                # a post-crash --resume streams identical tickets
+                "updates": list(t.updates),
             }
+            if t.result is not None:
+                rtree, rmeta = ipop_mod.result_to_tree(t.result)
+                tree["results"][str(jid)] = rtree
+                jobs_meta[str(jid)]["result"] = rmeta
         meta = {"config": self.config_meta(), "boundary": self._boundary_n,
                 "lanes": lanes_meta, "jobs": jobs_meta,
                 "next_job_id": max(self.tickets, default=-1) + 1}
@@ -674,7 +718,9 @@ class CampaignServer:
         srv.queue._ids = itertools.count(int(meta["next_job_id"]))
         srv.queue._seq = itertools.count(int(meta["next_job_id"]))
 
-        # tickets (completed jobs keep their summary; traces not persisted)
+        # tickets: full persistence — streamed-update tails always, and the
+        # complete IPOPResult for finished jobs (array leaves under
+        # tree["results"]), so a resumed server streams identical tickets
         for jid_s, jm in meta["jobs"].items():
             req = CampaignRequest.from_meta(jm["request"])
             t = CampaignTicket(job_id=int(jid_s), request=req,
@@ -683,18 +729,30 @@ class CampaignServer:
                                        else jm["best_f"]),
                                fevals=jm["fevals"],
                                admit_boundary=jm["admit_boundary"])
+            t.updates = list(jm.get("updates", []))
             srv.tickets[t.job_id] = t
             if t.status == JOB_DONE:
                 srv._completed.add(t.job_id)
 
-        template_tree = {"lanes": {}}
+        template_tree = {"lanes": {}, "results": {}}
         for li, lmeta in enumerate(meta["lanes"]):
             key = tuple(lmeta["key"])
             lane = srv._get_lane(key)
             lane.seg_len = {int(k): v for k, v in lmeta["seg_len"].items()}
             template_tree["lanes"][str(li)] = _lane_template(lane, lmeta)
+        for jid_s, jm in meta["jobs"].items():
+            if jm.get("result") is not None:
+                template_tree["results"][jid_s] = ipop_mod.result_template(
+                    jm["result"])
+        if not template_tree["results"]:     # pre-results snapshot layout
+            del template_tree["results"]
         restored = store.restore(ckpt_dir, step, template_tree)
         restored = jax.tree_util.tree_map(np.asarray, restored)
+
+        for jid_s, jm in meta["jobs"].items():
+            if jm.get("result") is not None:
+                srv.tickets[int(jid_s)].result = ipop_mod.result_from_tree(
+                    restored["results"][jid_s], jm["result"])
 
         for li, lmeta in enumerate(meta["lanes"]):
             lane = srv.lanes[tuple(lmeta["key"])]
@@ -805,9 +863,14 @@ def run_service_single(fitness_fn: Callable, n: int, key,
                        lam_start: int = 12, kmax_exp: int = 8,
                        max_evals: int = 200_000, domain=(-5.0, 5.0),
                        sigma0_frac: float = 0.25, impl: str = "auto",
-                       dtype: str = "float64"):
+                       dtype: str = "float64", fleet=None):
     """One problem through a single-row campaign service — trajectory parity
-    with ``backend="bucketed"`` on the same key (tests/test_service.py)."""
+    with ``backend="bucketed"`` on the same key (tests/test_service.py).
+
+    ``fleet`` (a ``repro.fleet.FleetConfig``) wraps the run in a
+    ``FleetController`` with a throwaway snapshot store, so fault plans can
+    be exercised through the public ``run_ipop`` surface.
+    """
     reg = FitnessRegistry()
     reg.register("job", fitness_fn)
     srv = CampaignServer(registry=reg, bbob_fids=(), lam_start=lam_start,
@@ -817,5 +880,14 @@ def run_service_single(fitness_fn: Callable, n: int, key,
                          devices=[jax.devices()[0]])
     ticket = srv.submit(CampaignRequest(dim=n, budget=max_evals,
                                         fitness="job", key=key))
-    srv.drain()
+    if fleet is None:
+        srv.drain()
+        return ticket.result
+    import tempfile
+
+    from repro.fleet.controller import FleetController
+    with tempfile.TemporaryDirectory() as td:
+        srv.snapshot_dir = td
+        ctl = FleetController(srv, fleet)
+        ctl.drain()
     return ticket.result

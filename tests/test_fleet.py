@@ -1,0 +1,417 @@
+"""Fleet supervision (src/repro/fleet/) — PR 8.
+
+The acceptance bar, in the fast tier:
+
+* **recovery determinism** — a seeded ``FaultPlan`` that kills an island
+  mid-campaign yields a final ``IPOPResult`` identical to the fault-free
+  run on every backend (bucketed / mesh-S2 / service): exact eval counts
+  and descent structure, best_f to the repo's 1e-12 relocation bar
+  (bit-exact on the single-island engine paths, where recovery is pure
+  replay of the same programs on the same state);
+* **fault-injection coverage** — corrupt boundary reads are retried (and
+  counted), delay faults only cost wall time, kills are recovered from
+  the last snapshot, down_for islands rejoin and get repopulated;
+* **health detector semantics** — deadline → suspect → dead with a retry
+  budget, stalls need an expected-progress marker, revive resets;
+* **job persistence** — snapshots round-trip finished jobs' full results
+  and every ticket's streamed-update tail (``--resume`` streams identical
+  tickets);
+* **zero overhead when disabled** — no supervisor ⇒ no new device syncs,
+  no fleet_* series, no new segment programs (extends the pins in
+  tests/test_obs.py).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import store
+from repro.core.ipop import run_ipop
+from repro.fleet import (CORRUPT, DELAY, KILL, FaultEvent, FaultPlan,
+                         FleetConfig, FleetHealth, HealthConfig)
+from repro.fleet.controller import (FleetController, occupancy_skew)
+from repro.obs import registry as reg_mod
+from repro.obs.registry import MetricsRegistry
+from repro.service import (CampaignRequest, CampaignServer, FitnessRegistry,
+                           SlotAllocator)
+
+KW = dict(lam_start=8, kmax_exp=2)
+
+
+def sphere(X):
+    return jnp.sum(X * X, axis=-1)
+
+
+@pytest.fixture
+def fresh_metrics():
+    prev = reg_mod.set_metrics(MetricsRegistry())
+    yield reg_mod.metrics()
+    reg_mod.set_metrics(prev)
+
+
+def series(reg, name):
+    return {lkey: s for (n, lkey), s in reg._series.items() if n == name}
+
+
+def counter_sum(reg, name, **labels):
+    return sum(s.value for lkey, s in series(reg, name).items()
+               if all(dict(lkey).get(k) == v for k, v in labels.items()))
+
+
+def assert_same_result(ref, got, exact=True):
+    """The recovery-determinism bar: exact descent structure and eval
+    counts always; best_f bit-exact on pure-replay paths, 1e-12 on
+    relocation paths (the repo's established per-shape-fusion bar)."""
+    assert got.total_fevals == ref.total_fevals
+    assert len(got.descents) == len(ref.descents)
+    for a, b in zip(ref.descents, got.descents):
+        assert a.k_exp == b.k_exp and a.lam == b.lam
+        assert a.stop_reason == b.stop_reason
+        np.testing.assert_array_equal(np.asarray(a.fevals),
+                                      np.asarray(b.fevals))
+        np.testing.assert_array_equal(np.asarray(a.gens), np.asarray(b.gens))
+        if exact:
+            np.testing.assert_array_equal(np.asarray(a.best_f),
+                                          np.asarray(b.best_f))
+        else:
+            np.testing.assert_allclose(a.best_f, b.best_f,
+                                       rtol=1e-12, atol=1e-12)
+    if exact:
+        assert got.best_f == ref.best_f
+    else:
+        np.testing.assert_allclose(got.best_f, ref.best_f,
+                                   rtol=1e-12, atol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# fault plans (pure)
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_validation_and_lookup():
+    with pytest.raises(ValueError):
+        FaultEvent("explode", island=0, boundary=1)
+    with pytest.raises(ValueError):
+        FaultEvent(KILL, island=0, boundary=0)   # nothing to recover yet
+    with pytest.raises(ValueError):
+        FaultEvent(DELAY, island=-1, boundary=1)
+    p = FaultPlan([FaultEvent(KILL, island=1, boundary=3, down_for=2),
+                   FaultEvent(DELAY, island=0, boundary=2, delay_s=0.1),
+                   FaultEvent(DELAY, island=0, boundary=2, delay_s=0.2),
+                   FaultEvent(CORRUPT, island=0, boundary=4)])
+    assert [e.boundary for e in p.kills_at(3)] == [3]
+    assert p.kill_at(1, 3) is not None and p.kill_at(0, 3) is None
+    assert p.delay(0, 2) == pytest.approx(0.3)      # delays accumulate
+    assert p.corrupts(0, 4) and not p.corrupts(0, 3)
+    assert p.max_boundary() == 4
+
+
+def test_fault_plan_seeded_and_parse():
+    a = FaultPlan.seeded(11, 4, kills=2, delays=1, corrupts=1)
+    b = FaultPlan.seeded(11, 4, kills=2, delays=1, corrupts=1)
+    assert [(e.kind, e.island, e.boundary) for e in a.events] == \
+           [(e.kind, e.island, e.boundary) for e in b.events]
+    kills = [e for e in a.events if e.kind == KILL]
+    assert len(kills) == 2
+    assert len({e.island for e in kills}) == 2       # one kill per island
+    assert all(e.boundary >= 1 for e in kills)
+
+    p = FaultPlan.parse("0:2,1:5:3", down_for=1)
+    ks = [e for e in p.events if e.kind == KILL]
+    assert [(e.island, e.boundary, e.down_for) for e in ks] == \
+           [(0, 2, 1), (1, 5, 3)]                    # per-cell down_for wins
+
+
+# ---------------------------------------------------------------------------
+# health detector (pure)
+# ---------------------------------------------------------------------------
+
+def test_health_deadline_suspect_then_dead(fresh_metrics):
+    h = FleetHealth(HealthConfig(deadline_s=1.0, retries=1))
+    h.observe(0, 0, 100.0, wall_s=0.1)
+    assert h.state(0) == "alive"
+    h.observe(0, 1, 200.0, wall_s=2.0)               # over deadline
+    assert h.state(0) == "suspect"
+    h.observe(0, 2, 300.0, wall_s=0.1)               # fast pull clears it
+    assert h.state(0) == "alive"
+    h.observe(0, 3, 400.0, wall_s=2.0)
+    h.observe(0, 4, 500.0, wall_s=2.0)               # retry budget exhausted
+    assert h.is_dead(0) and h.island(0).reason == "deadline"
+    assert h.dead_islands() == [0]
+    h.revive(0, 5)
+    assert h.state(0) == "alive" and not h.dead_islands()
+    # the state gauge followed the transitions
+    g = fresh_metrics.gauge("fleet_island_state", island=0)
+    assert g.value == 0.0
+
+
+def test_health_stall_needs_expected_progress():
+    h = FleetHealth(HealthConfig(deadline_s=10.0, stall_boundaries=2))
+    h.observe(0, 0, 50.0, wall_s=0.01)
+    for b in range(1, 5):                            # idle: no dispatch
+        h.observe(0, b, 50.0, wall_s=0.01, expect_progress=False)
+    assert h.state(0) == "alive"
+    h.observe(0, 5, 50.0, wall_s=0.01)               # dispatched, no progress
+    assert not h.is_dead(0)
+    h.observe(0, 6, 50.0, wall_s=0.01)
+    assert h.is_dead(0) and h.island(0).reason == "stalled"
+    # progress watermark rebases after a restore (no false stall verdicts)
+    h.revive(0, 7)
+    h.reset_progress(0, 20.0)
+    h.observe(0, 8, 30.0, wall_s=0.01)
+    assert h.state(0) == "alive"
+
+
+def test_occupancy_skew_is_the_rebalance_signal():
+    al = SlotAllocator(2, 4)
+    for j in range(4):
+        al.alloc(j, 100, island=0)                   # all on island 0
+    assert occupancy_skew(al) == 1.0
+    al.release(0, 3)
+    al.alloc(9, 100, island=1)
+    assert occupancy_skew(al) == 0.5
+    balanced, _moves, _layout = al.repack(2)
+    assert occupancy_skew(balanced) == 0.0           # repack balances
+
+
+# ---------------------------------------------------------------------------
+# recovery determinism: every backend vs its fault-free run
+# ---------------------------------------------------------------------------
+
+RUN_KW = dict(max_evals=3000, **KW)
+
+
+def test_bucketed_kill_recovery_bit_identical(fresh_metrics):
+    key = jax.random.PRNGKey(0)
+    ref = run_ipop(sphere, 6, key, backend="bucketed", **RUN_KW)
+    plan = FaultPlan([FaultEvent(KILL, island=0, boundary=3)])
+    got = run_ipop(sphere, 6, key, backend="bucketed",
+                   fleet=FleetConfig(snapshot_every=2, plan=plan), **RUN_KW)
+    assert_same_result(ref, got, exact=True)
+    reg = fresh_metrics
+    assert counter_sum(reg, "fleet_failures_total", reason="killed") == 1
+    assert counter_sum(reg, "fleet_recoveries_total", mode="replayed") == 1
+    assert reg.histogram("fleet_recovery_wall_s").count == 1
+    assert reg.histogram("fleet_lost_work_evals").count == 1
+
+
+def test_bucketed_corrupt_and_delay_faults_are_absorbed(fresh_metrics):
+    key = jax.random.PRNGKey(0)
+    ref = run_ipop(sphere, 6, key, backend="bucketed", **RUN_KW)
+    plan = FaultPlan([FaultEvent(CORRUPT, island=0, boundary=2),
+                      FaultEvent(DELAY, island=0, boundary=1, delay_s=0.01)])
+    got = run_ipop(sphere, 6, key, backend="bucketed",
+                   fleet=FleetConfig(snapshot_every=2, plan=plan), **RUN_KW)
+    assert_same_result(ref, got, exact=True)
+    # the garbled read was re-pulled, not believed (and not a death)
+    assert counter_sum(fresh_metrics, "fleet_pull_retries_total") >= 1
+    assert counter_sum(fresh_metrics, "fleet_failures_total") == 0
+
+
+def test_mesh_kill_recovery_bit_identical(fresh_metrics):
+    key = jax.random.PRNGKey(0)
+    ref = run_ipop(sphere, 6, key, backend="mesh", **RUN_KW)
+    plan = FaultPlan([FaultEvent(KILL, island=0, boundary=2)])
+    got = run_ipop(sphere, 6, key, backend="mesh",
+                   fleet=FleetConfig(snapshot_every=2, plan=plan), **RUN_KW)
+    assert_same_result(ref, got, exact=True)
+    assert counter_sum(fresh_metrics, "fleet_recoveries_total",
+                       mode="replayed") == 1
+
+
+def test_service_kill_park_and_rejoin_identical(fresh_metrics):
+    """Single-island service: the kill parks the row (no survivor has
+    capacity), the island rejoins after ``down_for`` boundaries and the
+    row replays — same final result as the fault-free run."""
+    key = jax.random.PRNGKey(0)
+    ref = run_ipop(sphere, 6, key, backend="service", **RUN_KW)
+    plan = FaultPlan([FaultEvent(KILL, island=0, boundary=2, down_for=2)])
+    got = run_ipop(sphere, 6, key, backend="service",
+                   fleet=FleetConfig(snapshot_every=2, plan=plan), **RUN_KW)
+    assert_same_result(ref, got, exact=False)
+    reg = fresh_metrics
+    assert counter_sum(reg, "fleet_recoveries_total", mode="requeued") == 1
+    assert counter_sum(reg, "fleet_recoveries_total", mode="rejoined") == 1
+    assert counter_sum(reg, "fleet_recoveries_total", mode="reassigned") == 1
+
+
+# ---------------------------------------------------------------------------
+# service-level controller: reassignment onto survivors + rebalancing
+# ---------------------------------------------------------------------------
+
+def shifted_sphere(X):
+    return jnp.sum((X - 1.2) ** 2, axis=-1)
+
+
+def make_registry():
+    reg = FitnessRegistry()
+    reg.register("shifted_sphere", shifted_sphere)
+    return reg
+
+
+def make_server(n_islands=2, **extra):
+    dev = jax.devices()[0]
+    kw = dict(registry=make_registry(), bbob_fids=(1, 8), max_budget=5000,
+              rows_per_island=2, devices=[dev] * n_islands, **KW)
+    kw.update(extra)
+    return CampaignServer(**kw)
+
+
+def _submit_pair(srv):
+    return [srv.submit(CampaignRequest(dim=4, fid=8, budget=3000, seed=7)),
+            srv.submit(CampaignRequest(dim=4, fitness="shifted_sphere",
+                                       budget=2000, seed=3))]
+
+
+def test_service_kill_reassigns_rows_to_survivor(fresh_metrics, tmp_path):
+    ref_srv = make_server()
+    ref = _submit_pair(ref_srv)
+    ref_srv.drain()
+
+    srv = make_server(snapshot_dir=str(tmp_path / "ckpt"))
+    ts = _submit_pair(srv)
+    ctl = FleetController(srv, FleetConfig(
+        snapshot_every=2,
+        plan=FaultPlan([FaultEvent(KILL, island=1, boundary=3)])))
+    assert srv.snapshot_every == 2          # controller owns the cadence
+    ctl.drain()
+
+    assert 1 in srv.down_islands            # never came back (down_for=0)
+    reg = fresh_metrics
+    assert counter_sum(reg, "fleet_failures_total", reason="killed") == 1
+    assert counter_sum(reg, "fleet_recoveries_total", mode="reassigned") == 1
+    for tr, tg in zip(ref, ts):
+        assert tg.done
+        assert tg.island == 0               # relocated onto the survivor
+        assert tg.fevals == tr.fevals
+        assert_same_result(tr.result, tg.result, exact=False)
+
+
+def test_rejoin_triggers_rebalance_back_onto_returned_island(fresh_metrics,
+                                                             tmp_path):
+    """down_for kill on a 2-island lane with survivor head-room: the dead
+    island's rows are REASSIGNED onto the survivor (it has free rows), so
+    the island rejoins empty — and the rejoin-triggered repack spreads the
+    lane across both islands again."""
+    srv = make_server(rows_per_island=4, snapshot_dir=str(tmp_path / "ckpt"))
+    ts = [srv.submit(CampaignRequest(dim=4, fid=1, budget=5000, seed=s))
+          for s in range(4)]                # 2 rows per island, 2 free each
+    ctl = FleetController(srv, FleetConfig(
+        snapshot_every=2, skew_threshold=0.4,
+        plan=FaultPlan([FaultEvent(KILL, island=1, boundary=3,
+                                   down_for=1)])))
+    lane = None
+    for _ in range(5):                      # kill at b=3, rejoin at b=4
+        ctl.step()
+        if lane is None:
+            lane = next(iter(srv.lanes.values()))
+    reg = fresh_metrics
+    assert counter_sum(reg, "fleet_recoveries_total", mode="reassigned") == 2
+    assert counter_sum(reg, "fleet_recoveries_total", mode="rejoined") == 1
+    assert counter_sum(reg, "fleet_rebalances_total", trigger="rejoin") >= 1
+    assert occupancy_skew(lane.allocator) <= 0.25   # repacked across both
+    ctl.drain()
+    assert not srv.down_islands
+    for t in ts:
+        assert t.done
+
+
+def test_load_skew_triggers_rebalance_without_any_failure(fresh_metrics):
+    """Satellite: the repack trigger fires on plain load imbalance — short
+    jobs retire one island's rows while the other stays full — with no
+    fault anywhere in the run."""
+    srv = make_server(rows_per_island=4)
+    # admission balances islands round-robin: even submissions land on
+    # island 0, odd on island 1 — so the short jobs all retire from one side
+    ts = [srv.submit(CampaignRequest(dim=4, fid=1, budget=b, seed=s))
+          for s, b in enumerate([600, 5000, 600, 5000])]
+    ctl = FleetController(srv, FleetConfig(skew_threshold=0.4))
+    for _ in range(30):
+        ctl.step()
+        if counter_sum(fresh_metrics, "fleet_rebalances_total",
+                       trigger="skew"):
+            break
+    assert counter_sum(fresh_metrics, "fleet_rebalances_total",
+                       trigger="skew") >= 1
+    assert counter_sum(fresh_metrics, "fleet_failures_total") == 0
+    ctl.drain()
+    for t in ts:
+        assert t.done
+
+
+# ---------------------------------------------------------------------------
+# satellite: full job persistence across snapshots
+# ---------------------------------------------------------------------------
+
+def test_snapshot_persists_results_and_update_tails(tmp_path):
+    d = str(tmp_path / "ckpt")
+    srv = make_server(n_islands=1, snapshot_dir=d)
+    t_done = srv.submit(CampaignRequest(dim=4, fid=1, budget=1500, seed=5))
+    srv.drain()
+    t_live = srv.submit(CampaignRequest(dim=4, fid=8, budget=3000, seed=7))
+    for _ in range(3):
+        srv.step()                          # t_live mid-flight, streaming
+    assert t_done.done and t_done.result is not None
+    assert t_live.updates
+    srv.snapshot()
+    del srv
+
+    srv2 = CampaignServer.restore(d, registry=make_registry())
+    r_done = srv2.tickets[t_done.job_id]
+    assert r_done.done
+    # the FULL result rode the snapshot: scalars, descents, best_x arrays
+    assert_same_result(t_done.result, r_done.result, exact=True)
+    np.testing.assert_array_equal(np.asarray(t_done.result.best_x),
+                                  np.asarray(r_done.result.best_x))
+    # streamed ticket tails are identical after resume
+    assert srv2.tickets[t_live.job_id].updates == t_live.updates
+    assert r_done.updates == t_done.updates
+    srv2.drain()
+    assert srv2.tickets[t_live.job_id].done
+
+
+def test_release_ticket_frees_host_memory_only_when_done():
+    srv = make_server(n_islands=1)
+    t = srv.submit(CampaignRequest(dim=4, fid=1, budget=1200, seed=0))
+    assert srv.release_ticket(t.job_id) is None      # still running
+    srv.drain()
+    released = srv.release_ticket(t.job_id)
+    assert released is t and t.job_id not in srv.tickets
+    assert srv.release_ticket(t.job_id) is None      # idempotent
+    # retired rows stay recognised: a follow-up job still drains cleanly
+    t2 = srv.submit(CampaignRequest(dim=4, fid=1, budget=1000, seed=1))
+    srv.drain()
+    assert t2.done
+
+
+# ---------------------------------------------------------------------------
+# zero overhead when disabled / no new programs when enabled
+# ---------------------------------------------------------------------------
+
+def test_supervision_adds_no_segment_programs(fresh_metrics, tmp_path):
+    """The recovery path replays EXISTING programs: a supervised server
+    (with a kill) compiles exactly what the plain server compiled."""
+    plain = make_server()
+    _submit_pair(plain)
+    plain.drain()
+    baseline = plain.segment_compiles()
+
+    srv = make_server(snapshot_dir=str(tmp_path / "ckpt"))
+    _submit_pair(srv)
+    ctl = FleetController(srv, FleetConfig(
+        snapshot_every=2,
+        plan=FaultPlan([FaultEvent(KILL, island=1, boundary=3)])))
+    ctl.drain()
+    assert srv.segment_compiles() == baseline
+
+
+def test_no_supervisor_means_no_fleet_series(fresh_metrics):
+    run_ipop(sphere, 4, jax.random.PRNGKey(0), backend="bucketed",
+             max_evals=1500, fleet=None, **KW)
+    assert not any(n.startswith("fleet_")
+                   for (n, _l) in fresh_metrics._series)
+
+
+def test_fleet_rejects_engineless_backends():
+    with pytest.raises(ValueError, match="fleet supervision"):
+        run_ipop(sphere, 4, jax.random.PRNGKey(0), backend="hostloop",
+                 fleet=FleetConfig(), max_evals=1000, **KW)

@@ -101,11 +101,18 @@ def test_emission_is_schema_validated():
 def test_schema_table_conventions():
     assert len(schema_mod.SPECS) == len(schema_mod.SCHEMA)
     for s in schema_mod.SCHEMA:
-        assert s.name.split("_")[0] in ("bucketed", "mesh", "service")
+        assert s.name.split("_")[0] in ("bucketed", "mesh", "service",
+                                        "fleet")
         if s.kind == schema_mod.COUNTER:
             assert s.name.endswith("_total"), s.name
         if s.kind == schema_mod.HISTOGRAM:
-            assert s.name.endswith("_s") and s.unit == "s", s.name
+            # second-valued by default; eval-count histograms (fleet lost
+            # work) carry the _evals suffix and explicit decade buckets
+            if s.name.endswith("_evals"):
+                assert s.unit == "evaluations", s.name
+                assert s.buckets == schema_mod.EVAL_BUCKETS, s.name
+            else:
+                assert s.name.endswith("_s") and s.unit == "s", s.name
             assert list(s.buckets) == sorted(s.buckets) and s.buckets
         else:
             assert not s.buckets
