@@ -54,6 +54,23 @@ lost work).
 
   PYTHONPATH=src python -m benchmarks.bench_service --chaos \
       [--chaos-plan 0:3:2] [--snapshot-every 2] [--chaos-max-recovery-s 60]
+
+``--poison`` / ``--overload`` (combinable) are the request-lifecycle gate:
+a protected set of healthy jobs streams through a fleet-supervised server
+while the lifecycle machinery is attacked on the same lanes — ``--poison``
+injects NaN-fitness jobs, a zero-headroom run deadline, a zero queue-TTL
+and a mid-run cancel; ``--overload`` shrinks the admission queue and floods
+it with low-priority jobs (priority sheds, backpressure rejects, and one
+dedup-keyed resubmit per shed job).  The run FAILS (exit 1) unless every
+submitted ticket reaches a terminal status, no island is ever graded dead,
+every protected job finishes with evals exactly equal and best_f within
+1e-12 of a fault-free reference, quarantines are exactly the injected
+poison jobs, and compiles stay ≤ #buckets × #dim-classes.  The
+``lifecycle`` section merged into the artifact records the terminal-status
+census, lifecycle transition edges and shed/quarantine accounting.
+
+  PYTHONPATH=src python -m benchmarks.bench_service --poison --overload \
+      [--flood-jobs 12] [--snapshot-every 2]
 """
 from __future__ import annotations
 
@@ -98,6 +115,16 @@ def _parser():
                          "(chaos mode)")
     ap.add_argument("--chaos-max-recovery-s", type=float, default=None,
                     help="assert total recovery wall <= this (chaos mode)")
+    ap.add_argument("--poison", action="store_true",
+                    help="lifecycle gate: inject NaN-fitness jobs, a "
+                         "zero-headroom deadline, a zero queue-TTL and a "
+                         "mid-run cancel alongside protected healthy jobs")
+    ap.add_argument("--overload", action="store_true",
+                    help="lifecycle gate: shrink the admission queue and "
+                         "flood it with low-priority jobs (sheds + "
+                         "backpressure + dedup resubmits)")
+    ap.add_argument("--flood-jobs", type=int, default=12,
+                    help="flood size for --overload")
     return ap
 
 
@@ -190,8 +217,9 @@ def _run_soak(args):
         stats = srv.step()
         rnd += 1
         max_depth = max(max_depth, len(srv.queue))
-        # release finished tickets: host state stays O(resident jobs)
-        for t in [t for t in srv.tickets.values() if t.done]:
+        # release every terminal ticket (done or lifecycle-retired): host
+        # state stays O(resident jobs)
+        for t in [t for t in srv.tickets.values() if t.terminal]:
             if t.status == "done":
                 completed += 1
                 useful += t.fevals
@@ -333,6 +361,243 @@ def _run_chaos(args):
     return record, violations
 
 
+def _run_lifecycle(args):
+    """The request-lifecycle gate (``--poison`` / ``--overload``): healthy
+    protected jobs stream through a fleet-supervised server while poison
+    jobs and/or an admission flood attack the same lanes; returns
+    ``(lifecycle_record, violations)``."""
+    import tempfile
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro import obs
+    from repro.fleet import FleetConfig
+    from repro.fleet.controller import FleetController
+    from repro.service import (CampaignRequest, CampaignServer,
+                               FitnessRegistry, QueueFull)
+
+    rng = np.random.default_rng(args.seed)
+    dims = [int(d) for d in args.dims.split(",")]
+    fids = tuple(int(f) for f in args.fids.split(","))
+    kw = dict(lam_start=args.lam_start, kmax_exp=args.kmax)
+
+    # protected set: these jobs must be untouched by everything below —
+    # priority 5 outranks the flood, dedup keys make retries idempotent
+    protected = [{
+        "dim": int(rng.choice(dims)),
+        "fid": int(rng.choice(fids)),
+        "budget": int(args.budget * rng.uniform(0.5, 1.5)),
+        "seed": int(rng.integers(0, 2 ** 31)),
+        "priority": 5,
+        "dedup_key": f"prot-{j}",
+    } for j in range(args.jobs)]
+    cancel_budget = args.budget * 2         # long enough to still be running
+    max_budget = max(max(j["budget"] for j in protected),
+                     cancel_budget, args.budget)
+
+    def nan_fn(X):
+        return jnp.full(X.shape[:-1], jnp.nan, X.dtype)
+
+    def registry():
+        reg = FitnessRegistry()
+        reg.register("nan_fn", nan_fn)
+        return reg
+
+    def make_server(**extra):
+        return CampaignServer(registry=registry(), bbob_fids=fids,
+                              max_budget=max_budget,
+                              rows_per_island=args.rows_per_island,
+                              devices=jax.devices(), **kw, **extra)
+
+    # fault-free reference: the protected set alone, unsupervised (also
+    # the warm compile pass for its lanes)
+    ref_srv = make_server()
+    ref = [ref_srv.submit(CampaignRequest(**s)) for s in protected]
+    ref_srv.drain()
+
+    obs.reset_metrics()                     # measured pass owns the registry
+    flood = [{
+        "dim": int(rng.choice(dims)),
+        "fid": int(rng.choice(fids)),
+        "budget": int(args.budget * 0.5),
+        "seed": int(rng.integers(0, 2 ** 31)),
+        "priority": int(rng.integers(0, 3)),
+        "dedup_key": f"flood-{j}",
+    } for j in range(args.flood_jobs)] if args.overload else []
+
+    with tempfile.TemporaryDirectory() as td:
+        srv = make_server(snapshot_dir=td, snapshot_every=args.snapshot_every,
+                          max_pending=4 if args.overload else 256)
+        ctl = FleetController(srv, FleetConfig(
+            snapshot_every=args.snapshot_every))
+        t0 = time.perf_counter()
+        pending_prot = list(protected)
+        pending_poison, pending_flood = [], []
+        prot, resubmitted, rejects = [], set(), 0
+        nan_ids, t_cancel = [], None
+        cancel_ok, cancel_rnd = None, None
+        rnd = 0
+        violations = []
+        while True:
+            while pending_prot:             # arrivals retry on backpressure
+                try:
+                    prot.append(srv.submit(CampaignRequest(**pending_prot[0])))
+                    pending_prot.pop(0)
+                except QueueFull:
+                    rejects += 1
+                    break
+            if args.poison and rnd == 1:
+                pending_poison = (
+                    [("nan", {"dim": d, "fitness": "nan_fn",
+                              "budget": args.budget, "seed": i,
+                              "priority": 5})
+                     for i, d in enumerate(dims)]
+                    # expires in the queue / expires while running
+                    + [("ttl", {"dim": dims[0], "fid": fids[0],
+                                "budget": args.budget, "seed": 101,
+                                "priority": 5, "queue_ttl_s": 0.0}),
+                       ("deadline", {"dim": dims[0], "fid": fids[0],
+                                     "budget": args.budget, "seed": 102,
+                                     "priority": 5, "deadline_s": 1e-3}),
+                       ("cancel", {"dim": dims[0], "fid": fids[0],
+                                   "budget": cancel_budget, "seed": 103,
+                                   "priority": 5})])
+            while pending_poison:           # injections also retry
+                kind, spec = pending_poison[0]
+                try:
+                    t = srv.submit(CampaignRequest(**spec))
+                except QueueFull:
+                    rejects += 1
+                    break
+                pending_poison.pop(0)
+                if kind == "nan":
+                    nan_ids.append(t.job_id)
+                elif kind == "cancel":
+                    t_cancel, cancel_rnd = t, rnd + 2
+            if (cancel_rnd is not None and rnd >= cancel_rnd
+                    and cancel_ok is None):
+                cancel_ok = srv.cancel(t_cancel.job_id)
+            if args.overload and rnd == 2:
+                pending_flood = flood
+                flood = []
+            remaining = []
+            for spec in pending_flood:
+                try:
+                    srv.submit(CampaignRequest(**spec))
+                except QueueFull:
+                    rejects += 1
+                    remaining.append(spec)
+            pending_flood = remaining
+            # the resubmit contract: each shed flood job retries exactly
+            # once with its original dedup key
+            for t in list(srv.tickets.values()):
+                k = t.request.dedup_key
+                if (t.status == "shed" and k and k.startswith("flood-")
+                        and k not in resubmitted):
+                    resubmitted.add(k)
+                    pending_flood.append({
+                        "dim": t.request.dim, "fid": t.request.fid,
+                        "budget": t.request.budget, "seed": t.request.seed,
+                        "priority": t.request.priority, "dedup_key": k})
+            stats = ctl.step()
+            rnd += 1
+            if rnd > 2000:
+                violations.append("run did not terminate in 2000 rounds")
+                break
+            if (not stats.progressed() and not pending_prot
+                    and not pending_poison and not pending_flood
+                    and not len(srv.queue)
+                    and not srv._resident_jobs() and not ctl._pending):
+                break
+        wall = time.perf_counter() - t0
+
+        reg = obs.metrics()
+
+        def label_counts(name, *labels):
+            return {"|".join(dict(lkey)[l] for l in labels): s.value
+                    for (n, lkey), s in reg._series.items() if n == name}
+
+        statuses = {}
+        for t in srv.tickets.values():
+            statuses[t.status] = statuses.get(t.status, 0) + 1
+
+        # -- the gates ------------------------------------------------------
+        stuck = [t.job_id for t in srv.tickets.values() if not t.terminal]
+        if stuck:
+            violations.append(f"non-terminal tickets after drain: {stuck}")
+        dead = [i for i in range(len(jax.devices()))
+                if ctl.sup.health.state(i) != "alive"]
+        if dead or label_counts("fleet_failures_total", "reason"):
+            violations.append(
+                f"lifecycle faults were graded as island faults: "
+                f"dead={dead} "
+                f"failures={label_counts('fleet_failures_total', 'reason')}")
+        for tr, tg in zip(ref, prot):
+            if tg.status != "done":
+                violations.append(f"protected job {tg.job_id} ended "
+                                  f"{tg.status!r}: {tg.reason}")
+            elif tg.fevals != tr.fevals or not np.isclose(
+                    tg.best_f, tr.best_f, rtol=1e-12, atol=1e-12):
+                violations.append(
+                    f"protected job {tg.job_id} diverged: evals "
+                    f"{tg.fevals} vs {tr.fevals}, best_f {tg.best_f!r} "
+                    f"vs {tr.best_f!r}")
+        if args.poison:
+            quarantined = [t for t in srv.tickets.values()
+                           if t.status == "quarantined"]
+            if sorted(t.job_id for t in quarantined) != sorted(nan_ids):
+                violations.append(
+                    f"quarantine set {[t.job_id for t in quarantined]} != "
+                    f"injected poison jobs {nan_ids}")
+            for t in quarantined:
+                if "non-finite" not in t.reason or t.result is None:
+                    violations.append(f"quarantined job {t.job_id} lacks "
+                                      f"reason/partial result: {t.reason!r}")
+            if statuses.get("expired", 0) < 2:
+                violations.append("expected a queue-TTL and a run-deadline "
+                                  f"expiry, saw {statuses.get('expired', 0)}")
+            if cancel_ok is not True or t_cancel.status != "cancelled":
+                violations.append(
+                    f"mid-run cancel not honored (accepted={cancel_ok}, "
+                    f"status={t_cancel.status if t_cancel else None})")
+        if args.overload:
+            if statuses.get("shed", 0) < 1:
+                violations.append("overload produced no sheds")
+            if not resubmitted:
+                violations.append("no shed job exercised the dedup resubmit")
+        n_buckets = args.kmax + 1
+        if srv.segment_compiles() > n_buckets * len(srv.lanes):
+            violations.append(
+                f"compiles {srv.segment_compiles()} exceed bound "
+                f"{n_buckets}*{len(srv.lanes)}")
+
+        record = {
+            "jobs": args.jobs, "dims": dims, "fids": list(fids),
+            "poison": bool(args.poison), "overload": bool(args.overload),
+            "flood_jobs": args.flood_jobs if args.overload else 0,
+            "n_devices": len(jax.devices()),
+            "rounds": rnd,
+            "wall_s": round(wall, 4),
+            "statuses": statuses,
+            "lifecycle_edges": label_counts("service_job_lifecycle_total",
+                                            "from", "to"),
+            "quarantined": label_counts("service_quarantine_total",
+                                        "reason"),
+            "shed": statuses.get("shed", 0),
+            "backpressure_rejects": int(rejects),
+            "resubmits": len(resubmitted),
+            "useful_evals": int(sum(t.fevals for t in srv.tickets.values()
+                                    if t.status == "done")),
+            "segment_compiles": srv.segment_compiles(),
+            "lanes": len(srv.lanes),
+            "protected_divergences": [v for v in violations
+                                      if "protected job" in v],
+        }
+    return record, violations
+
+
 def _merge_out(path: str, key: str, section: dict):
     """Merge one section into the (possibly existing) BENCH json so the A/B
     and soak results ride the same artifact file."""
@@ -353,6 +618,19 @@ def main(argv=None):
     import jax
 
     jax.config.update("jax_enable_x64", True)
+
+    if args.poison or args.overload:
+        record, violations = _run_lifecycle(args)
+        _merge_out(args.out, "lifecycle", record)
+        print(json.dumps({"lifecycle": record}, indent=2))
+        print(f"[bench_service] merged lifecycle results into {args.out}")
+        for v in violations:
+            print(f"[bench_service] LIFECYCLE GATE FAILURE: {v}",
+                  file=sys.stderr)
+        if not violations:
+            print("[bench_service] lifecycle gate passed: every ticket "
+                  "terminal, no island faulted, protected jobs exact")
+        return 1 if violations else 0
 
     if args.chaos:
         record, violations = _run_chaos(args)

@@ -253,6 +253,32 @@ class IslandSupervisor:
 # service-level controller
 # ---------------------------------------------------------------------------
 
+def _rows_regressed(prev, jobs, fevals) -> bool:
+    """True when some row STILL HOLDING the job it held at the last pull
+    reads fewer evaluations — impossible for a monotone counter, so it can
+    only be a garbled read.  Rows whose job changed (retired + re-used
+    slot) are excluded: their reset-to-zero is legitimate."""
+    if prev is None:
+        return False
+    pjobs, pfev = prev
+    same = (pjobs == jobs) & (jobs >= 0)
+    return bool(np.any(np.asarray(fevals)[same] < pfev[same]))
+
+
+def _rows_advanced(prev, jobs, fevals) -> bool:
+    """True when the island did real work since the last pull: a same-job
+    row's counter advanced, or a freshly admitted row (job changed since
+    the last pull) evaluated anything at all."""
+    if prev is None:
+        return True                     # first pull: nothing to compare
+    pjobs, pfev = prev
+    fevals = np.asarray(fevals)
+    same = (pjobs == jobs) & (jobs >= 0)
+    fresh = (pjobs != jobs) & (jobs >= 0)
+    return bool(np.any(fevals[same] > pfev[same])
+                or np.any(fevals[fresh] > 0))
+
+
 def occupancy_counts(al) -> List[int]:
     """Occupied rows per island of one lane's allocator."""
     return [al.rows_per_island - al.free_rows(i)
@@ -287,16 +313,83 @@ class FleetController:
         self.sup = IslandSupervisor(self.cfg)
         self._pending: List[dict] = []       # parked recovered rows
         self._down_until: Dict[int, int] = {}
+        # service-level progress attribution: the summed-feval watermark the
+        # engine supervisor uses is wrong for a multi-tenant island — lanes
+        # share the island index (their pulls would fight over one
+        # watermark) and a retired slot's re-use legitimately REGRESSES the
+        # sum (new job restarts at 0).  So the controller keeps per-(lane,
+        # island) row records keyed by job id, grades corrupt reads and
+        # progress per same-job row, and feeds the health core ONE
+        # aggregated observation per island per round.
+        self._lane_rows: Dict[tuple, tuple] = {}  # (lane,isl)->(jobs,fevals)
+        self._round: Dict[int, dict] = {}         # isl -> this round's obs
+        self._live_next: Dict[int, int] = {}      # isl -> live rows dispatched
+        self._expect: Dict[int, bool] = {}        # isl -> expect progress
         server.fleet = self
         if server.snapshot_dir and not server.snapshot_every:
             server.snapshot_every = self.cfg.snapshot_every
 
     # hook points the server calls (see server._island_boundary)
-    def pull(self, island: int, boundary: int, fn):
-        return self.sup.pull(island, boundary, fn)
+    def pull(self, island: int, boundary: int, fn, lane=None, jobs=None):
+        """Supervised boundary pull.  With ``lane``/``jobs`` (the service
+        path) the monotonicity retry and the progress verdict are per
+        same-job row: only a row still holding the job it held at the last
+        pull can regress (corrupt read) or advance (progress) — slot re-use
+        and multi-lane islands never alias.  Without them (engine paths)
+        this defers to the island supervisor's summed-watermark pull."""
+        if lane is None:
+            return self.sup.pull(island, boundary, fn)
+        t0 = time.perf_counter()
+        k_idx, active, fevals, best_f = fn()
+        if self.sup.plan is not None \
+                and self.sup.plan.corrupts(island, boundary):
+            fevals = np.zeros_like(fevals)      # garbled read, fired once
+        jobs = np.asarray(jobs)
+        prev = self._lane_rows.get((lane, island))
+        tries = 0
+        while prev is not None \
+                and _rows_regressed(prev, jobs, fevals) \
+                and tries < max(1, self.cfg.retries):
+            tries += 1
+            obs.metrics().counter("fleet_pull_retries_total",
+                                  island=island).inc()
+            if self.cfg.backoff_s:
+                time.sleep(self.cfg.backoff_s * tries)
+            k_idx, active, fevals, best_f = fn()
+        rec = self._round.setdefault(island,
+                                     {"wall": 0.0, "progressed": False})
+        rec["wall"] = max(rec["wall"], time.perf_counter() - t0)
+        rec["progressed"] = (rec["progressed"]
+                             or _rows_advanced(prev, jobs, fevals))
+        self._lane_rows[(lane, island)] = (jobs.copy(),
+                                           np.asarray(fevals).copy())
+        return k_idx, active, fevals, best_f
 
-    def before_dispatch(self, island: int, boundary: int):
-        self.sup.before_dispatch(island, boundary)
+    def before_dispatch(self, island: int, boundary: int,
+                        live_rows: Optional[int] = None):
+        if live_rows is None:
+            return self.sup.before_dispatch(island, boundary)
+        if self.sup.plan is not None:
+            d = self.sup.plan.delay(island, boundary)
+            if d:
+                time.sleep(d)
+        # the island is only EXPECTED to progress next round if some live,
+        # non-retired row was actually dispatched — an island whose only
+        # residents are quarantined/finished rows dispatches nothing and
+        # must never be graded "stalled"
+        self._live_next[island] = (self._live_next.get(island, 0)
+                                   + int(live_rows))
+
+    def _grade_round(self, boundary: int):
+        """Fold this round's per-lane pull records into one health
+        observation per island, then roll the dispatch expectations."""
+        for island, rec in self._round.items():
+            self.sup.health.observe_progress(
+                island, boundary, rec["progressed"], rec["wall"],
+                expect_progress=self._expect.get(island, False))
+        self._expect = {i: n > 0 for i, n in self._live_next.items()}
+        self._round = {}
+        self._live_next = {}
 
     # -- the supervised service loop ----------------------------------------
 
@@ -318,6 +411,7 @@ class FleetController:
                     i, b, self.sup.health.island(i).reason or "deadline")
         self._place_pending()
         stats = srv.step()
+        self._grade_round(b)
         if not srv.down_islands:
             self._maybe_rebalance("rejoin" if rejoined else "skew")
         return stats
@@ -342,8 +436,8 @@ class FleetController:
             if item is None:
                 break
             _req, t = item
-            t.status = JOB_REJECTED
             t.done_s = _t.monotonic()
+            srv._transition(t, JOB_REJECTED, "unplaceable at idle")
             obs.metrics().counter("service_jobs_total",
                                   event="rejected").inc()
         return [t for t in srv.tickets.values() if t.done]
@@ -360,6 +454,13 @@ class FleetController:
         t0 = time.perf_counter()
         srv.down_islands.add(i)
         self.sup.health.mark_dead(i, b, reason)
+        # drop the island's pull records + expectations: the recovered rows
+        # re-land elsewhere and the rejoined island comes back blank
+        self._lane_rows = {k: v for k, v in self._lane_rows.items()
+                           if k[1] != i}
+        self._round.pop(i, None)
+        self._live_next.pop(i, None)
+        self._expect.pop(i, None)
         reg = obs.metrics()
         reg.counter("fleet_failures_total", reason=reason).inc()
         snap = self._open_snapshot()

@@ -90,9 +90,17 @@ class FleetHealth:
 
     # -- observations -------------------------------------------------------
 
-    def observe(self, i: int, boundary: int, fev_sum: float, wall_s: float,
-                expect_progress: bool = True) -> str:
-        """Grade one boundary pull; returns the island's new state."""
+    def observe_progress(self, i: int, boundary: int, progressed: bool,
+                         wall_s: float, expect_progress: bool = True) -> str:
+        """Grade one boundary with an EXPLICIT progress verdict; returns the
+        island's new state.  This is the detector core: callers that can
+        attribute progress precisely — the service-level controller knows
+        per-row, per-job feval deltas and which rows were actually
+        dispatched — pass their own ``progressed``/``expect_progress``
+        booleans, so job-level pathology (a quarantined poison row, a
+        retired slot being re-used) never reads as island stall.  The
+        engine-level ``observe`` wraps this with the summed-counter
+        watermark."""
         rec = self.island(i)
         if rec.state == DEAD:
             return DEAD
@@ -104,7 +112,7 @@ class FleetHealth:
             self._set(i, SUSPECT, boundary)
         else:
             rec.slow_pulls = 0
-        if expect_progress and fev_sum <= rec.last_fev:
+        if expect_progress and not progressed:
             rec.stalled_for += 1
             if rec.stalled_for >= self.cfg.stall_boundaries:
                 self._set(i, DEAD, boundary, reason="stalled")
@@ -115,8 +123,19 @@ class FleetHealth:
             rec.stalled_for = 0
             if rec.state == SUSPECT and rec.slow_pulls == 0:
                 self._set(i, ALIVE, boundary)
-        rec.last_fev = max(rec.last_fev, fev_sum)
         return rec.state
+
+    def observe(self, i: int, boundary: int, fev_sum: float, wall_s: float,
+                expect_progress: bool = True) -> str:
+        """Grade one boundary pull; returns the island's new state.
+        Progress is the summed budget counter advancing past its watermark
+        (the single-tenant engine view — one island, one monotone sum)."""
+        rec = self.island(i)
+        state = self.observe_progress(i, boundary, fev_sum > rec.last_fev,
+                                      wall_s, expect_progress=expect_progress)
+        if state != DEAD:
+            rec.last_fev = max(rec.last_fev, fev_sum)
+        return state
 
     def last_fev(self, i: int) -> float:
         return self.island(i).last_fev

@@ -61,6 +61,12 @@ def _parser():
     ap.add_argument("--rows-per-island", type=int, default=4)
     ap.add_argument("--arrival-gap-s", type=float, default=0.0,
                     help="synthetic inter-arrival gap (0 = all at t=0)")
+    ap.add_argument("--queue-ttl-s", type=float, default=None,
+                    help="per-request queue TTL stamped on synthetic "
+                         "requests (expired while queued -> status=expired)")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request run deadline stamped on synthetic "
+                         "requests (enforced at segment boundaries)")
     ap.add_argument("--snapshot-dir", default=None)
     ap.add_argument("--snapshot-every", type=int, default=0,
                     help="snapshot cadence in service rounds")
@@ -107,7 +113,7 @@ def _synthetic_requests(args):
     fids = [int(f) for f in args.fids.split(",")]
     reqs = []
     for j in range(args.synthetic):
-        reqs.append({
+        spec = {
             "dim": int(rng.choice(dims)),
             "fid": int(rng.choice(fids)),
             "instance": 1,
@@ -116,7 +122,15 @@ def _synthetic_requests(args):
             "priority": int(rng.integers(0, 3)),
             "arrival_s": round(j * args.arrival_gap_s, 4),
             "tag": f"synthetic-{j}",
-        })
+            # stable dedup key: resubmits after shed/backpressure are
+            # idempotent — a live or completed ticket is returned as-is
+            "dedup_key": f"syn-{args.seed}-{j}",
+        }
+        if args.queue_ttl_s is not None:
+            spec["queue_ttl_s"] = args.queue_ttl_s
+        if args.deadline_s is not None:
+            spec["deadline_s"] = args.deadline_s
+        reqs.append(spec)
     return reqs
 
 
@@ -181,6 +195,8 @@ def _serve(args):
 
     t0 = time.monotonic()
     tickets = []
+    specs_by_job = {}
+    resubmitted = set()
     for step_i in range(args.max_steps):
         now = time.monotonic() - t0
         while raw and raw[0].get("arrival_s", 0.0) <= now:
@@ -189,6 +205,7 @@ def _serve(args):
             try:
                 t = srv.submit(CampaignRequest(**spec))
                 tickets.append(t)
+                specs_by_job[t.job_id] = spec
                 print(f"[serve] +job {t.job_id} dim={t.request.dim} "
                       f"fid={t.request.fid} budget={t.request.budget} "
                       f"prio={t.request.priority}", flush=True)
@@ -203,6 +220,20 @@ def _serve(args):
                 lat_s = f"{lat:.3f}s" if lat is not None else "n/a (resumed)"
                 print(f"[serve] -job {t.job_id} done best_f={t.best_f:.6g} "
                       f"fevals={t.fevals} latency={lat_s}", flush=True)
+            elif t.terminal and not getattr(t, "_printed", False):
+                t._printed = True
+                print(f"[serve] -job {t.job_id} {t.status}"
+                      f"{': ' + t.reason if t.reason else ''}", flush=True)
+            # resubmit contract: a shed ticket is re-queued once with its
+            # original spec — the dedup key makes the retry idempotent
+            if (t.status == "shed" and t.job_id in specs_by_job
+                    and t.job_id not in resubmitted):
+                resubmitted.add(t.job_id)
+                retry = dict(specs_by_job[t.job_id])
+                retry["arrival_s"] = now
+                raw.insert(0, retry)
+                print(f"[serve] ~job {t.job_id} shed, resubmitting "
+                      f"(dedup_key={retry.get('dedup_key')})", flush=True)
         if (not stats.progressed() and not raw and not len(srv.queue)
                 and not srv._resident_jobs()
                 and not (ctl is not None and ctl._pending)):
@@ -210,10 +241,14 @@ def _serve(args):
     wall = time.monotonic() - t0
 
     done = [t for t in srv.tickets.values() if t.done]
+    statuses = {}
+    for t in srv.tickets.values():
+        statuses[t.status] = statuses.get(t.status, 0) + 1
     summary = {
         "wall_s": round(wall, 3),
         "jobs": len(srv.tickets),
         "done": len(done),
+        "statuses": statuses,
         "useful_evals": int(sum(t.fevals for t in done)),
         "stats": srv.stats(),
         "results": [{"job_id": t.job_id, "tag": t.request.tag,

@@ -145,7 +145,31 @@ SCHEMA: Tuple[MetricSpec, ...] = (
     MetricSpec("service_jobs_total", COUNTER, "jobs", ("event",),
                "service/server.py:submit/_admit/_finalize/drain",
                "Job lifecycle events: event=submitted|admitted|completed|"
-               "rejected (backpressure or unplaceable)."),
+               "rejected|cancelled|expired|quarantined|shed."),
+    MetricSpec("service_job_lifecycle_total", COUNTER, "transitions",
+               ("from", "to"),
+               "service/server.py:_transition/submit/_settle_shed",
+               "Request state-machine edges (new->queued, queued->running, "
+               "running->done/cancelled/expired/quarantined, "
+               "queued->shed/...): every transition increments exactly one "
+               "(from, to) series."),
+    MetricSpec("service_shed_total", COUNTER, "jobs", (),
+               "service/server.py:_settle_shed",
+               "Pending tickets evicted by priority-aware load shedding (a "
+               "full queue displaced its lowest-priority entry for a "
+               "strictly higher-priority submit)."),
+    MetricSpec("service_quarantine_total", COUNTER, "jobs", ("reason",),
+               "service/server.py:_finalize",
+               "Poison jobs quarantined at a boundary pull, reason="
+               "nonfinite (NaN/inf best_f after real evaluations) | "
+               "no_progress (flat per-row feval watermark over dispatched "
+               "boundaries)."),
+    MetricSpec("service_registry_generation", GAUGE, "generation", (),
+               "service/server.py:step",
+               "Current FitnessRegistry generation: bumps when a callable "
+               "is registered on a live server (versioned rollout; new "
+               "lanes compile against the new generation, resident lanes "
+               "keep running untouched)."),
     MetricSpec("service_queue_depth", GAUGE, "jobs", (),
                "service/server.py:step",
                "Pending admission-queue depth at the end of a service "

@@ -8,6 +8,9 @@ crashes through periodic snapshots (README "Campaign service").
 """
 from repro.service.allocator import SlotAllocator, lane_key          # noqa: F401
 from repro.service.queue import (AdmissionQueue, CampaignRequest,    # noqa: F401
-                                 CampaignTicket, QueueFull)
+                                 CampaignTicket, QueueFull,
+                                 JOB_CANCELLED, JOB_DONE, JOB_EXPIRED,
+                                 JOB_QUARANTINED, JOB_QUEUED, JOB_REJECTED,
+                                 JOB_RUNNING, JOB_SHED, TERMINAL_STATUSES)
 from repro.service.server import (CampaignServer, FitnessRegistry,   # noqa: F401
                                   run_service_single)

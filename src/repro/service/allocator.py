@@ -27,14 +27,19 @@ from repro.service.queue import CampaignRequest
 
 
 def lane_key(req: CampaignRequest, *, lam_start: int, kmax_exp: int,
-             dtype: str) -> tuple:
+             dtype: str, reg_gen: int = 0) -> tuple:
     """Dim-class routing key: requests sharing it run in one lane (one
     compiled program family).  Request fields override the server defaults
-    passed as keywords."""
+    passed as keywords.  ``reg_gen`` is the fitness-registry *generation* the
+    lane's programs are traced against (service/server.py): registering a new
+    callable on a live server opens generation g+1 — new lanes key against
+    it and compile fresh program families, while resident generation-g lanes
+    keep running their already-compiled programs untouched."""
     return (int(req.dim),
             int(req.lam_start if req.lam_start is not None else lam_start),
             int(req.kmax_exp if req.kmax_exp is not None else kmax_exp),
-            str(req.dtype if req.dtype is not None else dtype))
+            str(req.dtype if req.dtype is not None else dtype),
+            int(reg_gen))
 
 
 class SlotAllocator:

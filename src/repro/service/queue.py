@@ -8,11 +8,23 @@ immediately — the job's streaming handle: per-boundary progress updates
 while it runs, and the full ``IPOPResult`` once it completes.
 
 The ``AdmissionQueue`` is the service's front door: priority-ordered pending
-requests with *backpressure* — beyond ``max_pending`` the queue refuses new
-work (``QueueFull``) instead of growing without bound, so a drowning service
-degrades by rejecting rather than by dying.  Admission itself (taking a
-request out of the queue and packing it into a running lane) only ever
-happens at segment boundaries (service/server.py).
+requests with *backpressure* — beyond ``max_pending`` the queue sheds the
+lowest-priority pending ticket to make room for a strictly higher-priority
+submit (``status="shed"``, a terminal state the client can retry against),
+and refuses the submit itself (``QueueFull``) when nothing pending ranks
+below it — so a drowning service degrades by priority, not by dying.
+Admission itself (taking a request out of the queue and packing it into a
+running lane) only ever happens at segment boundaries (service/server.py).
+
+Every ticket ends in exactly one terminal state::
+
+    queued ──────────────▶ running ──▶ done
+       │                     │  │
+       ├─▶ expired (TTL)     │  ├─▶ expired (deadline)
+       ├─▶ cancelled         │  ├─▶ cancelled
+       ├─▶ shed              │  └─▶ quarantined (poison)
+       └─▶ rejected          ▼
+                           (island recovery re-places, state unchanged)
 """
 from __future__ import annotations
 
@@ -25,10 +37,21 @@ JOB_QUEUED = "queued"
 JOB_RUNNING = "running"
 JOB_DONE = "done"
 JOB_REJECTED = "rejected"
+JOB_CANCELLED = "cancelled"
+JOB_EXPIRED = "expired"
+JOB_QUARANTINED = "quarantined"
+JOB_SHED = "shed"
+
+#: Statuses a ticket can never leave; every submitted job reaches exactly one.
+TERMINAL_STATUSES = frozenset({
+    JOB_DONE, JOB_REJECTED, JOB_CANCELLED, JOB_EXPIRED, JOB_QUARANTINED,
+    JOB_SHED,
+})
 
 
 class QueueFull(RuntimeError):
-    """Admission backpressure: the pending queue is at capacity."""
+    """Admission backpressure: the pending queue is at capacity and nothing
+    pending ranks strictly below the incoming request's priority."""
 
 
 @dataclasses.dataclass
@@ -46,6 +69,15 @@ class CampaignRequest:
     server's configuration; together with ``dim`` they form the dim-class
     routing key (service/allocator.py) — requests in the same class share one
     compiled program family.
+
+    Lifecycle knobs (all optional, all host-side — none is a row operand, so
+    none costs a sync or a compile): ``queue_ttl_s`` expires the job if it is
+    still queued that long after submit; ``deadline_s`` bounds the job's
+    total submit→done age (queued *or* running — enforced at the next segment
+    boundary); ``dedup_key`` makes resubmits idempotent — a submit whose key
+    maps to a live or completed ticket returns that ticket instead of
+    enqueueing a duplicate, while a key whose job ended ``shed``/``expired``/
+    ``cancelled`` admits the retry fresh.
     """
 
     dim: int
@@ -60,6 +92,9 @@ class CampaignRequest:
     kmax_exp: Optional[int] = None
     dtype: Optional[str] = None
     tag: str = ""
+    queue_ttl_s: Optional[float] = None
+    deadline_s: Optional[float] = None
+    dedup_key: Optional[str] = None
     key: Any = None                     # explicit jax PRNG key (overrides seed)
 
     def validate(self):
@@ -69,6 +104,10 @@ class CampaignRequest:
             raise ValueError(f"dim must be >= 1, got {self.dim}")
         if self.budget < 0:
             raise ValueError(f"budget must be >= 0, got {self.budget}")
+        for name in ("queue_ttl_s", "deadline_s"):
+            v = getattr(self, name)
+            if v is not None and v < 0:
+                raise ValueError(f"{name} must be >= 0, got {v}")
 
     def to_meta(self) -> dict:
         """JSON-able form for snapshots (the explicit key is host-encoded)."""
@@ -83,7 +122,10 @@ class CampaignRequest:
     def from_meta(cls, d: dict) -> "CampaignRequest":
         d = dict(d)
         raw = d.pop("_key", None)
-        req = cls(**d)
+        # pre-lifecycle snapshots lack fields added later; dataclass defaults
+        # cover them, and unknown future fields are dropped
+        names = {f.name for f in dataclasses.fields(cls)}
+        req = cls(**{k: v for k, v in d.items() if k in names})
         if raw is not None:
             import jax.numpy as jnp
             req.key = jnp.asarray(raw, jnp.uint32)
@@ -97,7 +139,9 @@ class CampaignTicket:
     ``updates`` is the trajectory tail: one record per segment boundary while
     the job is resident ({boundary, fevals, best_f, k}), capped at
     ``TAIL_CAP`` most-recent entries.  ``result`` (an ``ipop.IPOPResult``
-    with the full per-descent trajectory) lands when status turns "done".
+    with the full per-descent trajectory) lands when status turns "done" —
+    and, partially, when a running job is cancelled/expired/quarantined (the
+    trajectory up to the retirement boundary, with ``reason`` saying why).
     """
 
     TAIL_CAP = 512
@@ -105,6 +149,7 @@ class CampaignTicket:
     job_id: int
     request: CampaignRequest
     status: str = JOB_QUEUED
+    reason: str = ""
     best_f: float = float("inf")
     fevals: int = 0
     updates: List[dict] = dataclasses.field(default_factory=list)
@@ -118,6 +163,19 @@ class CampaignTicket:
     admit_s: Optional[float] = None
     done_s: Optional[float] = None
     admit_boundary: Optional[int] = None
+    # absolute (monotonic-clock) expiry instants, armed from queue_ttl_s /
+    # deadline_s at submit and RE-armed with the full allowance on restore
+    # (a restored server has no past wall clock to charge against)
+    ttl_at: Optional[float] = None
+    deadline_at: Optional[float] = None
+
+    def arm(self, now_s: float):
+        """(Re)compute the absolute expiry instants from the request's
+        relative allowances, charging from ``now_s``."""
+        if self.request.queue_ttl_s is not None:
+            self.ttl_at = now_s + self.request.queue_ttl_s
+        if self.request.deadline_s is not None:
+            self.deadline_at = now_s + self.request.deadline_s
 
     def push(self, rec: dict):
         """Append one boundary update, dropping the oldest beyond
@@ -131,6 +189,11 @@ class CampaignTicket:
         """True once the full result landed (status ``"done"``)."""
         return self.status == JOB_DONE
 
+    @property
+    def terminal(self) -> bool:
+        """True once the ticket reached any terminal lifecycle state."""
+        return self.status in TERMINAL_STATUSES
+
     def latency_s(self) -> Optional[float]:
         """submit → done wall-clock latency (the quantity the soak SLO is
         written against); None while running or on a snapshot-restored
@@ -140,13 +203,29 @@ class CampaignTicket:
         return self.done_s - self.submit_s
 
 
-class AdmissionQueue:
-    """Priority-ordered pending requests with backpressure.
+def _heap_remove_at(heap: list, i: int):
+    """Remove and return ``heap[i]`` in O(log n), preserving the invariant:
+    replace with the last element and sift it in whichever direction the
+    ordering demands (no full re-heapify)."""
+    item = heap[i]
+    last = heap.pop()
+    if i < len(heap):
+        heap[i] = last
+        if last < item:
+            heapq._siftdown(heap, 0, i)     # may need to rise toward the root
+        else:
+            heapq._siftup(heap, i)          # may need to sink into the subtree
+    return item
 
-    ``submit`` is O(log n); ``take`` pops the highest-priority request (ties
-    broken FIFO) matching a predicate — the server's admission pass calls it
-    with "fits a lane with a free row" so a blocked wide job never starves
-    narrower ones behind it.
+
+class AdmissionQueue:
+    """Priority-ordered pending requests with priority-aware backpressure.
+
+    ``submit`` is O(log n); ``take`` scans for the highest-priority request
+    (ties broken FIFO) matching a predicate — the server's admission pass
+    calls it with "fits a lane with a free row" so a blocked wide job never
+    starves narrower ones behind it — and removes just that entry without
+    disturbing the rest of the heap.
     """
 
     def __init__(self, max_pending: int = 256):
@@ -154,6 +233,9 @@ class AdmissionQueue:
         self._heap: List[Tuple[int, int, CampaignRequest, CampaignTicket]] = []
         self._seq = itertools.count()
         self._ids = itertools.count()
+        #: tickets evicted by priority shedding since the last ``drain_shed``
+        #: (the server drains these to emit metrics / settle dedup keys)
+        self._shed: List[CampaignTicket] = []
 
     def __len__(self) -> int:
         return len(self._heap)
@@ -161,15 +243,30 @@ class AdmissionQueue:
     def submit(self, req: CampaignRequest, *,
                now_s: float = 0.0) -> CampaignTicket:
         """Validate and enqueue ``req``; returns its fresh ticket (job id
-        assigned here).  Raises ``QueueFull`` at ``max_pending`` — the
-        backpressure contract — and ``ValueError`` on an invalid request.
-        ``now_s`` stamps ``ticket.submit_s`` (queue-wait measurements)."""
+        assigned here).  At ``max_pending`` the *lowest*-priority pending
+        ticket is shed — terminal ``status="shed"`` — iff it ranks strictly
+        below ``req``; otherwise ``QueueFull`` (the backpressure contract is
+        unchanged for equal-or-higher-priority traffic).  ``ValueError`` on
+        an invalid request.  ``now_s`` stamps ``ticket.submit_s`` and arms
+        the TTL/deadline clocks."""
         req.validate()
         if len(self._heap) >= self.max_pending:
-            raise QueueFull(
-                f"admission queue at capacity ({self.max_pending} pending)")
+            victim_i = max(range(len(self._heap)),
+                           key=lambda i: self._heap[i][:2])
+            # heap entries sort (-priority, seq): the max is the lowest
+            # priority, youngest.  Shed only on a STRICT priority win.
+            if self._heap[victim_i][0] <= -req.priority:
+                raise QueueFull(
+                    f"admission queue at capacity "
+                    f"({self.max_pending} pending)")
+            victim = _heap_remove_at(self._heap, victim_i)[3]
+            victim.status = JOB_SHED
+            victim.reason = ("displaced by a priority-"
+                             f"{req.priority} submit")
+            self._shed.append(victim)
         ticket = CampaignTicket(job_id=next(self._ids), request=req,
                                 submit_s=now_s)
+        ticket.arm(now_s)
         heapq.heappush(self._heap,
                        (-req.priority, next(self._seq), req, ticket))
         return ticket
@@ -177,16 +274,48 @@ class AdmissionQueue:
     def take(self, match: Optional[Callable[[CampaignRequest], bool]] = None,
              ) -> Optional[Tuple[CampaignRequest, CampaignTicket]]:
         """Remove and return the best-priority (request, ticket) for which
-        ``match`` holds (None matches everything); None if nothing matches."""
-        kept, out = [], None
-        while self._heap:
-            item = heapq.heappop(self._heap)
-            if out is None and (match is None or match(item[2])):
-                out = (item[2], item[3])
-            else:
-                kept.append(item)
-        for item in kept:
-            heapq.heappush(self._heap, item)
+        ``match`` holds (None matches everything); None if nothing matches.
+        One O(n) scan + one O(log n) removal — the heap order survives."""
+        best = -1
+        for i, item in enumerate(self._heap):
+            if match is None or match(item[2]):
+                if best < 0 or item[:2] < self._heap[best][:2]:
+                    best = i
+        if best < 0:
+            return None
+        item = _heap_remove_at(self._heap, best)
+        return (item[2], item[3])
+
+    def remove(self, job_id: int) -> Optional[CampaignTicket]:
+        """Pull one still-queued ticket out by job id (cancellation path);
+        None if the id is not pending.  Status is left to the caller."""
+        for i, item in enumerate(self._heap):
+            if item[3].job_id == job_id:
+                return _heap_remove_at(self._heap, i)[3]
+        return None
+
+    def expire(self, now_s: float) -> List[CampaignTicket]:
+        """Retire every pending ticket whose queue-TTL or total deadline has
+        passed (terminal ``status="expired"``); returns the expired tickets.
+        Host-side bookkeeping only — never touches a device."""
+        hit = [item[3] for item in self._heap
+               if (item[3].ttl_at is not None and now_s >= item[3].ttl_at)
+               or (item[3].deadline_at is not None
+                   and now_s >= item[3].deadline_at)]
+        for t in hit:                   # re-scan per removal: each removal
+            for i, item in enumerate(self._heap):   # re-sifts the heap, so
+                if item[3] is t:                    # indices don't survive
+                    _heap_remove_at(self._heap, i)
+                    break
+            t.status = JOB_EXPIRED
+            t.reason = ("queue TTL exceeded"
+                        if t.ttl_at is not None and now_s >= t.ttl_at
+                        else "deadline exceeded while queued")
+        return hit
+
+    def drain_shed(self) -> List[CampaignTicket]:
+        """Tickets shed since the last drain (server bookkeeping hook)."""
+        out, self._shed = self._shed, []
         return out
 
     def pending(self) -> List[CampaignTicket]:

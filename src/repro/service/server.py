@@ -57,8 +57,10 @@ from repro.distributed.mesh_engine import ProgramCache
 from repro.fitness import bbob
 from repro.service import queue as qmod
 from repro.service.allocator import SlotAllocator, lane_key
-from repro.service.queue import (JOB_DONE, JOB_QUEUED, JOB_REJECTED,
-                                 JOB_RUNNING, CampaignRequest, CampaignTicket)
+from repro.service.queue import (JOB_CANCELLED, JOB_DONE, JOB_EXPIRED,
+                                 JOB_QUARANTINED, JOB_QUEUED, JOB_REJECTED,
+                                 JOB_RUNNING, JOB_SHED, CampaignRequest,
+                                 CampaignTicket)
 
 
 class FitnessRegistry:
@@ -66,32 +68,75 @@ class FitnessRegistry:
 
     Branch 0 of a lane program is always the BBOB traced-fid dispatch over
     the server's configured ``bbob_fids``; custom callables occupy branches
-    1..N in registration order.  The registry is FROZEN once a server starts
-    (the branches are part of the compiled programs); register everything up
-    front.  Callables must be pure jnp batch evaluators ``f(X: (lam, n)) ->
-    (lam,)`` and total (under vmap the switch evaluates every branch and
-    selects, exactly like the campaign engines' fid dispatch).
+    1..N in registration order.  Callables must be pure jnp batch evaluators
+    ``f(X: (lam, n)) -> (lam,)`` and total (under vmap the switch evaluates
+    every branch and selects, exactly like the campaign engines' fid
+    dispatch).
+
+    The branch list is part of every compiled lane program, so the registry
+    is *versioned* rather than frozen-forever: starting a server freezes the
+    current **generation**, and registering a callable on a live server opens
+    generation g+1.  Lanes are keyed by the generation they were traced
+    against (``allocator.lane_key``): resident generation-g lanes keep their
+    compiled programs and their prefix ``fns_at(g)`` of the branch list
+    untouched, while new jobs route to generation-g+1 lanes whose programs
+    include the new branch.  Registration is append-only, so a callable's
+    branch index (``1 + index(name)``) is identical in every generation that
+    contains it — fn_idx row operands stay valid across rollouts.
     """
 
     def __init__(self):
         self._names: List[str] = []
         self._fns: List[Callable] = []
+        self._gens: List[int] = []      # birth generation per callable
+        self._gen = 0                   # current (newest) generation
         self._frozen = False
 
     def register(self, name: str, fn: Callable):
-        if self._frozen:
-            raise RuntimeError("registry is frozen once a server starts")
         if name in self._names:
             raise ValueError(f"fitness {name!r} already registered")
+        if self._frozen:
+            # live rollout: open a new program-family generation instead of
+            # refusing — existing lanes never see the grown branch list
+            self._gen += 1
+            self._frozen = False
         self._names.append(name)
         self._fns.append(fn)
+        self._gens.append(self._gen)
         return fn
 
     def freeze(self):
         self._frozen = True
 
+    @property
+    def generation(self) -> int:
+        return self._gen
+
     def index(self, name: str) -> int:
         return self._names.index(name)
+
+    def gen_added(self, name: str) -> int:
+        """The generation a callable first appeared in — the *minimum* lane
+        generation that can run a job naming it."""
+        return self._gens[self._names.index(name)]
+
+    def fns_at(self, gen: int) -> Tuple[Callable, ...]:
+        """The branch list of generation ``gen`` (a prefix of ``fns``)."""
+        return tuple(f for f, g in zip(self._fns, self._gens) if g <= gen)
+
+    def names_at(self, gen: int) -> Tuple[str, ...]:
+        return tuple(n for n, g in zip(self._names, self._gens) if g <= gen)
+
+    def align_generations(self, names: Sequence[str], gens: Sequence[int],
+                          gen: int):
+        """Snapshot-restore hook: stamp re-registered callables with their
+        original birth generations (callables cannot be persisted, so the
+        restoring process re-registers them by name and this restores the
+        generation structure the snapshot's lane keys refer to)."""
+        for n, g in zip(names, gens):
+            if n in self._names:
+                self._gens[self._names.index(n)] = int(g)
+        self._gen = max(self._gen, int(gen))
 
     @property
     def names(self) -> Tuple[str, ...]:
@@ -113,9 +158,12 @@ _SEGMENT_CACHE = ProgramCache()
 
 def _lane_label(key: tuple) -> str:
     """Metric label of a lane key: ``d<dim>.l<lam_start>.k<kmax_exp>.<dtype>``
-    (stable, low-cardinality — one value per dim-class)."""
-    dim, lam, kmax, dtype = key
-    return f"d{dim}.l{lam}.k{kmax}.{dtype}"
+    plus ``.g<gen>`` for post-rollout registry generations (stable,
+    low-cardinality — one value per dim-class per generation)."""
+    dim, lam, kmax, dtype = key[:4]
+    gen = key[4] if len(key) > 4 else 0
+    base = f"d{dim}.l{lam}.k{kmax}.{dtype}"
+    return f"{base}.g{gen}" if gen else base
 
 
 def program_cache_stats() -> dict:
@@ -142,8 +190,9 @@ class _Lane:
     """One dim-class: engine + islands + allocator + program bookkeeping."""
 
     def __init__(self, key: tuple, server: "CampaignServer"):
-        dim, lam_start, kmax_exp, dtype = key
+        dim, lam_start, kmax_exp, dtype, reg_gen = key
         self.key = key
+        self.reg_gen = int(reg_gen)
         self.server = server
         self.engine = bucketed.BucketedLadderEngine(
             n=dim, lam_start=lam_start, kmax_exp=kmax_exp,
@@ -152,7 +201,10 @@ class _Lane:
             eigen_interval=server.eigen_interval,
             seg_blocks=server.seg_blocks, policy=server.policy)
         self.bbob_fids = tuple(server.bbob_fids)
-        self.custom_fns = server.registry.fns
+        # the branch list of THIS lane's registry generation: a later
+        # rollout grows the registry but never this tuple, so the lane's
+        # compiled programs (keyed on it) stay valid and untouched
+        self.custom_fns = server.registry.fns_at(self.reg_gen)
         self.m_peaks = (101 if 21 in self.bbob_fids
                         else 21 if 22 in self.bbob_fids else 1)
         fill_fid = self.bbob_fids[0] if self.bbob_fids else 1
@@ -246,10 +298,12 @@ class StepStats:
     admitted: int = 0
     finalized: int = 0
     rejected: int = 0
+    expired: int = 0                    # queue-TTL/deadline retirements
+    shed: int = 0                       # priority-shed settlements
 
     def progressed(self) -> bool:
         return bool(self.dispatched or self.admitted or self.finalized
-                    or self.rejected)
+                    or self.rejected or self.expired or self.shed)
 
 
 class CampaignServer:
@@ -275,7 +329,9 @@ class CampaignServer:
                  rows_per_island: int = 4, max_pending: int = 256,
                  max_lanes: int = 16, snapshot_dir: Optional[str] = None,
                  snapshot_every: int = 0,
-                 metrics_out: Optional[str] = None):
+                 metrics_out: Optional[str] = None,
+                 quarantine_nonfinite: bool = True,
+                 quarantine_stall_boundaries: int = 0):
         if devices is not None:
             self.devices = list(devices)
         elif mesh is not None:
@@ -297,11 +353,24 @@ class CampaignServer:
         # _CONFIG_FIELDS member — where metrics go is a property of the
         # serving process, not of the snapshot-persisted service config
         self.metrics_out = metrics_out
+        # poison policy: quarantine a job whose best_f is non-finite after
+        # real evaluations, and/or whose fevals watermark stays flat for N
+        # consecutive boundaries it was actually dispatched (0 = off).  Both
+        # are host-side checks on the already-pulled schedule arrays — no
+        # new syncs, no row operands, no programs.
+        self.quarantine_nonfinite = bool(quarantine_nonfinite)
+        self.quarantine_stall_boundaries = int(quarantine_stall_boundaries)
         self.queue = qmod.AdmissionQueue(max_pending=max_pending)
         self.tickets: Dict[int, CampaignTicket] = {}
         self.lanes: Dict[tuple, _Lane] = {}
         self._completed: set = set()
         self._boundary_n = 0
+        # request lifecycle state (all host-side)
+        self._cancels: set = set()      # running job ids to retire at boundary
+        self._dedup: Dict[str, int] = {}        # dedup_key -> job id
+        self._noprog: Dict[int, Tuple[int, int]] = {}   # job -> (fev, flats)
+        self._seg_jobs: Dict[tuple, set] = {}   # (lane key, island) -> jobs
+        #                                         in the last dispatched set
         # fleet supervision hook points (repro.fleet.FleetController): the
         # server never imports the fleet — a controller installs itself on
         # ``fleet`` and marks failed islands in ``down_islands``; without
@@ -313,7 +382,8 @@ class CampaignServer:
     _CONFIG_FIELDS = ("bbob_fids", "lam_start", "kmax_exp", "dtype", "impl",
                       "policy", "eigen_interval", "seg_blocks", "domain",
                       "sigma0_frac", "max_budget", "rows_per_island",
-                      "max_lanes")
+                      "max_lanes", "quarantine_nonfinite",
+                      "quarantine_stall_boundaries")
 
     def config_meta(self) -> dict:
         out = {f: getattr(self, f) for f in self._CONFIG_FIELDS}
@@ -336,8 +406,19 @@ class CampaignServer:
         ``IPOPResult`` when it completes; ``now_s`` overrides the submit
         timestamp (``time.monotonic()``) for replayed arrival traces — the
         soak harness uses it to measure queue wait under a synthetic load.
+
+        A ``req.dedup_key`` makes the submit idempotent: if the key maps to
+        a ticket that is still live (queued/running) or completed, THAT
+        ticket is returned and nothing is enqueued — so a client retrying
+        with backoff after a ``shed``/``expired`` outcome never double-runs
+        a job that actually made it in.  A key whose previous attempt ended
+        shed/cancelled/expired/rejected/quarantined admits the retry fresh.
         """
         req.validate()
+        if req.dedup_key is not None:
+            prev = self.tickets.get(self._dedup.get(req.dedup_key, -1))
+            if prev is not None and (not prev.terminal or prev.done):
+                return prev             # idempotent resubmit
         if req.budget > self.max_budget:
             raise ValueError(f"budget {req.budget} exceeds the service "
                              f"max_budget {self.max_budget}")
@@ -347,16 +428,95 @@ class CampaignServer:
         if req.fitness is not None and req.fitness not in self.registry.names:
             raise ValueError(f"unknown fitness {req.fitness!r}; registered: "
                              f"{self.registry.names}")
+        self.registry.freeze()          # pin the current generation
         t = self.queue.submit(
             req, now_s=time.monotonic() if now_s is None else now_s)
         self.tickets[t.job_id] = t
-        obs.metrics().counter("service_jobs_total", event="submitted").inc()
+        if req.dedup_key is not None:
+            self._dedup[req.dedup_key] = t.job_id
+        reg = obs.metrics()
+        reg.counter("service_jobs_total", event="submitted").inc()
+        reg.counter("service_job_lifecycle_total",
+                    **{"from": "new", "to": JOB_QUEUED}).inc()
+        self._settle_shed()             # the submit may have evicted a victim
         return t
+
+    def cancel(self, job_id: int) -> bool:
+        """Cancel one job.  A queued job is retired immediately (terminal
+        ``status="cancelled"``); a running job is retired at its island's
+        next segment boundary — the partial result up to that boundary lands
+        on the ticket.  Returns False for unknown or already-terminal jobs
+        (cancellation is idempotent, not an error)."""
+        t = self.tickets.get(job_id)
+        if t is None or t.terminal:
+            return False
+        if t.status == JOB_QUEUED:
+            if self.queue.remove(job_id) is None:
+                return False
+            t.done_s = time.monotonic()
+            self._transition(t, JOB_CANCELLED, "cancelled by client")
+            obs.metrics().counter("service_jobs_total",
+                                  event="cancelled").inc()
+            return True
+        self._cancels.add(job_id)       # honored at the next boundary pull
+        return True
+
+    # -- lifecycle bookkeeping ------------------------------------------------
+    def _transition(self, t: CampaignTicket, status: str, reason: str = ""):
+        """Move a ticket to ``status``, recording the edge in the lifecycle
+        counter (every state-machine transition is observable)."""
+        frm = t.status
+        t.status = status
+        if reason:
+            t.reason = reason
+        obs.metrics().counter("service_job_lifecycle_total",
+                              **{"from": frm, "to": status}).inc()
+
+    def _settle_shed(self, stats: Optional[StepStats] = None):
+        """Account tickets the queue shed since the last settle: lifecycle +
+        shed counters, terminal timestamps (the queue already set status)."""
+        reg = obs.metrics()
+        for t in self.queue.drain_shed():
+            t.done_s = time.monotonic()
+            reg.counter("service_job_lifecycle_total",
+                        **{"from": JOB_QUEUED, "to": JOB_SHED}).inc()
+            reg.counter("service_shed_total").inc()
+            reg.counter("service_jobs_total", event="shed").inc()
+            if stats is not None:
+                stats.shed += 1
+
+    def _expire_queued(self, stats: Optional[StepStats] = None):
+        """Retire pending tickets whose queue-TTL or total deadline passed
+        (host clock check; the queue sets terminal ``status="expired"``)."""
+        reg = obs.metrics()
+        for t in self.queue.expire(time.monotonic()):
+            t.done_s = time.monotonic()
+            reg.counter("service_job_lifecycle_total",
+                        **{"from": JOB_QUEUED, "to": JOB_EXPIRED}).inc()
+            reg.counter("service_jobs_total", event="expired").inc()
+            if stats is not None:
+                stats.expired += 1
 
     # -- lanes ----------------------------------------------------------------
     def _lane_key(self, req: CampaignRequest) -> tuple:
-        return lane_key(req, lam_start=self.lam_start,
-                        kmax_exp=self.kmax_exp, dtype=self.dtype)
+        """Routing: the request's dim-class at the right registry generation.
+
+        A request needs at least the generation its fitness callable was born
+        in (BBOB requests run in any generation).  It routes to the *newest*
+        existing lane of its dim-class that satisfies that floor — resident
+        older-generation lanes are never grown — and, when no lane fits, keys
+        a fresh lane at the registry's current generation, so post-rollout
+        lanes compile against the full branch list exactly once.
+        """
+        need = (0 if req.fitness is None
+                else self.registry.gen_added(req.fitness))
+        base = lane_key(req, lam_start=self.lam_start, kmax_exp=self.kmax_exp,
+                        dtype=self.dtype)[:4]
+        fits = [k for k in self.lanes
+                if k[:4] == base and k[4] >= need]
+        if fits:
+            return max(fits, key=lambda k: k[4])
+        return base + (max(need, self.registry.generation),)
 
     def _get_lane(self, key: tuple, create: bool = True) -> Optional[_Lane]:
         lane = self.lanes.get(key)
@@ -376,6 +536,8 @@ class CampaignServer:
         """One service round: every island gets a segment boundary —
         pull, stream, retire, admit, dispatch (async)."""
         stats = StepStats()
+        self._settle_shed(stats)        # submits between steps may have shed
+        self._expire_queued(stats)      # queue-TTL/deadline, host clock only
         self._create_lanes()
         for lane in self.lanes.values():
             for i, isl in enumerate(lane.islands):
@@ -396,6 +558,8 @@ class CampaignServer:
         if pc["hits"] + pc["traces"]:
             reg.gauge("service_program_cache_hit_rate").set(
                 pc["hits"] / (pc["hits"] + pc["traces"]))
+        reg.gauge("service_registry_generation").set(
+            self.registry.generation)
         if self.metrics_out:
             reg.flush_jsonl(self.metrics_out)
         if (self.snapshot_dir and self.snapshot_every
@@ -417,21 +581,26 @@ class CampaignServer:
             if item is None:
                 break
             _req, t = item
-            t.status = JOB_REJECTED
             t.done_s = time.monotonic()
+            self._transition(t, JOB_REJECTED, "unplaceable at idle")
             obs.metrics().counter("service_jobs_total",
                                   event="rejected").inc()
         return [t for t in self.tickets.values() if t.done]
 
     def release_ticket(self, job_id: int) -> Optional[CampaignTicket]:
-        """Pop a finished ticket and return it (``None`` if unknown or still
-        running).  Long-running callers (the soak harness) release tickets as
-        jobs finish so host memory stays O(resident), not O(total jobs); the
-        job id remains in ``_completed`` so trace pruning still recognises
-        the retired rows."""
+        """Pop a *terminal* ticket and return it (``None`` if unknown or
+        still live).  Long-running callers (the soak harness) release
+        tickets as jobs reach any terminal state — done, shed, expired,
+        cancelled, quarantined — so host memory stays O(resident), not
+        O(total jobs); the job id remains in ``_completed`` so trace
+        pruning still recognises the retired rows, and the job's dedup key
+        (if any) is unpinned so a later resubmit starts fresh."""
         t = self.tickets.get(job_id)
-        if t is None or not t.done:
+        if t is None or not t.terminal:
             return None
+        dk = t.request.dedup_key
+        if dk is not None and self._dedup.get(dk) == job_id:
+            del self._dedup[dk]
         return self.tickets.pop(job_id)
 
     def _resident_jobs(self) -> int:
@@ -447,7 +616,8 @@ class CampaignServer:
         if self.fleet is not None:
             k_idx, active, fevals, best_f = self.fleet.pull(
                 i, self._boundary_n,
-                lambda: bucketed.pull_schedule(isl.arrays["carry"]))
+                lambda: bucketed.pull_schedule(isl.arrays["carry"]),
+                lane=lane.key, jobs=al.row_jobs[i].copy())
         else:
             k_idx, active, fevals, best_f = bucketed.pull_schedule(
                 isl.arrays["carry"])
@@ -456,8 +626,14 @@ class CampaignServer:
         k_idx, active, fevals = k_idx.copy(), active.copy(), fevals.copy()
         lam_cur = lane.engine.lam_start * (2 ** k_idx)
 
-        # -- stream + collect finished rows -------------------------------
-        finish: List[Tuple[int, int]] = []          # (row, job_id)
+        # -- stream + enforce lifecycle + collect finished rows -----------
+        # every verdict below is a host-side decision on the arrays the
+        # boundary ALREADY pulled plus the host clock: retiring a row for
+        # deadline/cancel/poison costs zero extra syncs and zero programs
+        # (it rides the same _deactivate mask as target retirement)
+        now = time.monotonic()
+        ran = self._seg_jobs.get((lane.key, i), ())
+        finish: List[Tuple[int, int, Optional[Tuple[str, str]]]] = []
         deact = np.zeros(len(k_idx), bool)
         for row in np.nonzero(al.row_jobs[i] >= 0)[0]:
             job = int(al.row_jobs[i][row])
@@ -473,17 +649,24 @@ class CampaignServer:
             hit = target is not None and best_f[row] <= target
             done = (not active[row]
                     or fevals[row] + lam_cur[row] > al.budgets[i][row])
-            if hit and not done:
-                deact[row] = True                   # early retirement
+            verdict = None if done else self._row_verdict(
+                t, job, int(fevals[row]), float(best_f[row]), job in ran,
+                now)
+            if (hit or verdict is not None) and not done:
+                deact[row] = True       # early/lifecycle retirement
                 active[row] = False
                 done = True
             if done:
-                finish.append((int(row), job))
+                finish.append((int(row), job, None if hit else verdict))
         if deact.any():
             isl.arrays["carry"] = lane._deactivate(
                 isl.arrays["carry"], jax.device_put(deact, isl.device))
-        for row, job in finish:
-            self._finalize(lane, i, isl, row, job)
+        for row, job, verdict in finish:
+            if verdict is None:
+                self._finalize(lane, i, isl, row, job)
+            else:
+                self._finalize(lane, i, isl, row, job,
+                               status=verdict[0], reason=verdict[1])
             stats.finalized += 1
         self._prune_traces(isl)
 
@@ -499,13 +682,22 @@ class CampaignServer:
             stats.admitted += 1
 
         # -- dispatch the island's next segment (async) -------------------
-        _live, k = bucketed.next_bucket(lane.engine, k_idx, active, fevals,
-                                        lane.seg_len, budgets=al.budgets[i])
+        live, k = bucketed.next_bucket(lane.engine, k_idx, active, fevals,
+                                       lane.seg_len, budgets=al.budgets[i])
         if k is None:
+            self._seg_jobs[(lane.key, i)] = set()
             return
+        # the jobs whose rows actually run this segment: the no-progress
+        # watermark only charges flat boundaries against these, and the
+        # fleet health detector only expects island progress when some
+        # live, non-quarantined row was dispatched
+        self._seg_jobs[(lane.key, i)] = {
+            int(al.row_jobs[i][r]) for r in np.nonzero(live)[0]
+            if al.row_jobs[i][r] >= 0}
         runner = lane.runner(k, lane.seg_len[k])
         if self.fleet is not None:
-            self.fleet.before_dispatch(i, self._boundary_n)
+            self.fleet.before_dispatch(i, self._boundary_n,
+                                       live_rows=int(np.sum(live)))
         a = isl.arrays
         carry, tr = runner(a["keys"], a["fn_idx"], a["budgets"], a["insts"],
                            a["carry"])
@@ -515,6 +707,37 @@ class CampaignServer:
         isl.traces.append((tr, own))
         reg.counter("service_segments_total", lane=lbl, bucket=k).inc()
         stats.dispatched += 1
+
+    def _row_verdict(self, t: CampaignTicket, job: int, fevals: int,
+                     best_f: float, ran: bool,
+                     now: float) -> Optional[Tuple[str, str]]:
+        """Lifecycle verdict for one running row at a boundary: ``(status,
+        reason)`` to retire it with, or None to keep running.  Order:
+        explicit cancel beats deadline beats poison."""
+        if job in self._cancels:
+            return (JOB_CANCELLED, "cancelled by client")
+        if t.deadline_at is not None and now >= t.deadline_at:
+            return (JOB_EXPIRED, "deadline exceeded while running")
+        if self.quarantine_nonfinite and fevals > 0 \
+                and not np.isfinite(best_f):
+            # NaN/inf fitness never improves best_f (NaN comparisons are
+            # False in the ladder's best update), so a poison callable
+            # shows up here as best_f == inf after real evaluations
+            return (JOB_QUARANTINED,
+                    "non-finite fitness after "
+                    f"{fevals} evaluations")
+        if self.quarantine_stall_boundaries > 0:
+            last, flats = self._noprog.get(job, (-1, 0))
+            if ran and fevals == last:
+                flats += 1
+                if flats >= self.quarantine_stall_boundaries:
+                    self._noprog.pop(job, None)
+                    return (JOB_QUARANTINED,
+                            f"no progress for {flats} dispatched boundaries")
+            elif fevals != last:
+                flats = 0
+            self._noprog[job] = (fevals, flats)
+        return None
 
     def _job_vals(self, lane: _Lane, req: CampaignRequest) -> dict:
         """A job's full row state as a pure function of its request —
@@ -556,7 +779,13 @@ class CampaignServer:
         return row
 
     def _finalize(self, lane: _Lane, i: int, isl: _Island, row: int,
-                  job: int):
+                  job: int, status: str = JOB_DONE, reason: str = ""):
+        """Retire one resident row: slice its carry + owned trace pieces into
+        an ``IPOPResult`` on the ticket, free the slot.  ``status`` is the
+        terminal state — ``done`` for a normally-finished job, or a
+        lifecycle state (cancelled/expired/quarantined), in which case the
+        result is the *partial* trajectory up to this boundary and
+        ``reason`` says why it stopped there."""
         carry_row = jax.tree_util.tree_map(
             lambda a: np.asarray(a[row]), isl.arrays["carry"])
         pieces = []
@@ -573,17 +802,29 @@ class CampaignServer:
         t = self.tickets[job]
         t.result = ipop_mod._result_from_ladder(lane.engine.full, carry_row,
                                                 trace)
-        t.status = JOB_DONE
+        self._transition(t, status, reason)
         t.best_f = t.result.best_f
         t.fevals = t.result.total_fevals
         t.done_s = time.monotonic()
         lane.allocator.release(i, row)
+        # every terminal resident job joins _completed so trace pruning
+        # recognises its retired rows, whatever state it ended in
         self._completed.add(job)
+        self._cancels.discard(job)
+        self._noprog.pop(job, None)
         reg = obs.metrics()
-        reg.counter("service_jobs_total", event="completed").inc()
-        if t.submit_s is not None:
-            reg.histogram("service_time_to_completion_s").observe(
-                t.done_s - t.submit_s)
+        if status == JOB_DONE:
+            reg.counter("service_jobs_total", event="completed").inc()
+            if t.submit_s is not None:
+                reg.histogram("service_time_to_completion_s").observe(
+                    t.done_s - t.submit_s)
+        else:
+            reg.counter("service_jobs_total",
+                        event=status).inc()
+            if status == JOB_QUARANTINED:
+                kind = ("nonfinite" if "non-finite" in reason
+                        else "no_progress")
+                reg.counter("service_quarantine_total", reason=kind).inc()
 
     def _prune_traces(self, isl: _Island):
         def live(own):
@@ -658,7 +899,8 @@ class CampaignServer:
         tree["results"] = {}
         for jid, t in self.tickets.items():
             jobs_meta[str(jid)] = {
-                "status": t.status, "request": t.request.to_meta(),
+                "status": t.status, "reason": t.reason,
+                "request": t.request.to_meta(),
                 "best_f": None if not np.isfinite(t.best_f) else t.best_f,
                 "fevals": t.fevals, "island": t.island, "row": t.row,
                 "lane": None if t.lane is None else list(t.lane),
@@ -675,7 +917,17 @@ class CampaignServer:
                 jobs_meta[str(jid)]["result"] = rmeta
         meta = {"config": self.config_meta(), "boundary": self._boundary_n,
                 "lanes": lanes_meta, "jobs": jobs_meta,
-                "next_job_id": max(self.tickets, default=-1) + 1}
+                "next_job_id": max(self.tickets, default=-1) + 1,
+                # lifecycle state: pending cancels (honored after resume),
+                # dedup pins, and the registry's generation structure (the
+                # restoring process re-registers callables by name; this
+                # re-stamps their birth generations so 5-tuple lane keys
+                # resolve identically)
+                "cancels": sorted(self._cancels),
+                "dedup": dict(self._dedup),
+                "registry": {"names": list(self.registry.names),
+                             "gens": list(self.registry._gens),
+                             "gen": self.registry.generation}}
         store.save(self.snapshot_dir, step, tree, meta=meta)
         obs.metrics().histogram("service_snapshot_s").observe(
             time.perf_counter() - t0)
@@ -717,26 +969,44 @@ class CampaignServer:
         # make heap ordering fall through to CampaignRequest comparison)
         srv.queue._ids = itertools.count(int(meta["next_job_id"]))
         srv.queue._seq = itertools.count(int(meta["next_job_id"]))
+        # lifecycle state (absent in pre-lifecycle snapshots: empty defaults)
+        srv._cancels = set(int(j) for j in meta.get("cancels", []))
+        srv._dedup = {k: int(v) for k, v in meta.get("dedup", {}).items()}
+        rmeta = meta.get("registry")
+        if rmeta is not None:
+            srv.registry.align_generations(rmeta["names"], rmeta["gens"],
+                                           rmeta["gen"])
+            srv.registry.freeze()
 
         # tickets: full persistence — streamed-update tails always, and the
         # complete IPOPResult for finished jobs (array leaves under
-        # tree["results"]), so a resumed server streams identical tickets
+        # tree["results"]), so a resumed server streams identical tickets.
+        # TTL/deadline clocks are RE-armed with the full allowance: a
+        # restored server has no past wall clock to charge against.
+        now = time.monotonic()
         for jid_s, jm in meta["jobs"].items():
             req = CampaignRequest.from_meta(jm["request"])
             t = CampaignTicket(job_id=int(jid_s), request=req,
                                status=jm["status"],
+                               reason=jm.get("reason", ""),
                                best_f=(float("inf") if jm["best_f"] is None
                                        else jm["best_f"]),
                                fevals=jm["fevals"],
                                admit_boundary=jm["admit_boundary"])
             t.updates = list(jm.get("updates", []))
+            if not t.terminal:
+                t.arm(now)
             srv.tickets[t.job_id] = t
-            if t.status == JOB_DONE:
+            if t.terminal and t.status != JOB_REJECTED:
+                # any terminal resident job must be recognised by trace
+                # pruning; never-resident terminal jobs are harmless here
                 srv._completed.add(t.job_id)
 
         template_tree = {"lanes": {}, "results": {}}
         for li, lmeta in enumerate(meta["lanes"]):
             key = tuple(lmeta["key"])
+            if len(key) == 4:           # pre-generation snapshot lane key
+                key = key + (0,)
             lane = srv._get_lane(key)
             lane.seg_len = {int(k): v for k, v in lmeta["seg_len"].items()}
             template_tree["lanes"][str(li)] = _lane_template(lane, lmeta)
@@ -755,8 +1025,11 @@ class CampaignServer:
                     restored["results"][jid_s], jm["result"])
 
         for li, lmeta in enumerate(meta["lanes"]):
-            lane = srv.lanes[tuple(lmeta["key"])]
-            _repack_lane(srv, lane, lmeta, restored["lanes"][str(li)])
+            key = tuple(lmeta["key"])
+            if len(key) == 4:
+                key = key + (0,)
+            _repack_lane(srv, srv.lanes[key], lmeta,
+                         restored["lanes"][str(li)])
 
         # re-queue pending jobs (preserving ids and priority order)
         for jid, t in sorted(srv.tickets.items()):

@@ -15,6 +15,10 @@ Asserts, all under one 8-device XLA environment:
   mid-flight, kill it, restore onto ALL 8 devices (the allocator re-packs
   resident rows across the doubled island grid), drain, and reproduce the
   uninterrupted reference per job to float64 checkpoint exactness;
+* lifecycle states ride the elastic re-shard: quarantined / cancelled
+  tickets (reasons, partial results) and dedup pins restored from a
+  4-device snapshot onto 8 devices intact, with the surviving job
+  draining to completion;
 * ``checkpoint/store.restore(shardings=...)`` re-places a stacked campaign
   carry written from a 4-device mesh onto an 8-device mesh (the store-level
   elastic re-shard the service layers on);
@@ -144,6 +148,44 @@ def main():
     assert_jobs_equal(ts_4, srv_8)                    # vs uninterrupted run
     print(f"elastic-resume[4→8] OK  step={step} "
           f"resident_at_kill={resident_at_kill}")
+
+    # -- lifecycle states ride the elastic re-shard --------------------------
+    def nan_fn(X):
+        return jnp.full(X.shape[:-1], jnp.nan, X.dtype)
+
+    def lc_registry():
+        reg = FitnessRegistry()
+        reg.register("shifted_sphere", shifted_sphere)
+        reg.register("nan_fn", nan_fn)
+        return reg
+
+    ck2 = tempfile.mkdtemp(prefix="svc_lc_")
+    srv_l = make_server(devs[:4], registry=lc_registry(), snapshot_dir=ck2)
+    t_ok = srv_l.submit(CampaignRequest(dim=4, fid=8, budget=3000, seed=7,
+                                        dedup_key="keep"))
+    t_bad = srv_l.submit(CampaignRequest(dim=4, fitness="nan_fn",
+                                         budget=2000, seed=1))
+    srv_l.step()
+    srv_l.step()
+    assert t_bad.status == "quarantined", t_bad.status
+    t_c = srv_l.submit(CampaignRequest(dim=6, fid=1, budget=1000, seed=2))
+    assert srv_l.cancel(t_c.job_id)
+    srv_l.snapshot()
+    del srv_l                                         # the kill
+
+    srv_l8 = CampaignServer.restore(ck2, registry=lc_registry(),
+                                    devices=devs)
+    rb = srv_l8.tickets[t_bad.job_id]
+    assert rb.status == "quarantined" and "non-finite" in rb.reason
+    assert rb.result is not None and rb.fevals > 0
+    assert srv_l8.tickets[t_c.job_id].status == "cancelled"
+    assert srv_l8._dedup == {"keep": t_ok.job_id}
+    ro = srv_l8.tickets[t_ok.job_id]
+    assert srv_l8.submit(CampaignRequest(dim=4, fid=8, budget=3000, seed=7,
+                                         dedup_key="keep")) is ro
+    srv_l8.drain()
+    assert ro.done, ro.status
+    print("lifecycle-reshard[4→8] OK")
 
     # -- store-level elastic re-shard of a stacked campaign carry ------------
     eng = bucketed.BucketedLadderEngine(n=4, max_evals=4000, **KW)

@@ -1,0 +1,552 @@
+"""Request-lifecycle hardening (service/queue.py + service/server.py) — PR 9.
+
+The acceptance bar, in the fast tier:
+
+* **state machine** — every submitted job ends in exactly one terminal
+  status (done / rejected / cancelled / expired / quarantined / shed);
+  cancellation is honored immediately for queued jobs and at the next
+  segment boundary for running ones (with a partial ``IPOPResult``);
+  queue-TTL and run deadlines retire jobs host-side at the existing
+  boundary pull; poison jobs (non-finite best_f, flat feval watermark)
+  are quarantined instead of spinning forever;
+* **zero-cost enforcement** — lifecycle verdicts ride the arrays the
+  boundary already pulled: no new device syncs (device_get count == pull
+  observations) and no new segment programs (compiles ≤ #buckets ×
+  #dim-classes throughout a chaos mix);
+* **priority shedding + dedup** — a full queue sheds its lowest-priority
+  pending ticket for a strictly higher-priority submit; resubmits with a
+  ``dedup_key`` are idempotent against live/completed tickets and admit
+  fresh after a shed/cancel/expiry;
+* **fleet composition** — a quarantined poison job is a JOB verdict, not
+  an island one: the health detector grades per-job progress, so the
+  island hosting a NaN job stays ALIVE and co-resident healthy jobs
+  complete bit-identically (the PR-8 stall-detector blind spot);
+* **registry generations** — registering a callable on a live server
+  opens generation g+1: new jobs compile fresh gen-g+1 program families
+  while resident gen-g lanes run their cached programs untouched (zero
+  recompiles, asserted via program-cache stats);
+* **durability** — terminal statuses, reasons, pending cancels and dedup
+  pins round-trip snapshots; pre-lifecycle (PR-8 shape) snapshots still
+  restore.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.ipop import run_ipop
+from repro.fleet import FleetConfig
+from repro.fleet.controller import FleetController
+from repro.obs import registry as reg_mod
+from repro.obs.registry import MetricsRegistry
+from repro.service import (AdmissionQueue, CampaignRequest, CampaignServer,
+                           CampaignTicket, FitnessRegistry, QueueFull)
+from repro.service.server import program_cache_stats
+
+KW = dict(lam_start=8, kmax_exp=2)
+
+
+def shifted_sphere(X):
+    return jnp.sum((X - 1.2) ** 2, axis=-1)
+
+
+def nan_fitness(X):
+    """A poison objective: every evaluation is NaN, so best_f never leaves
+    inf (NaN comparisons are False in the ladder's best update)."""
+    return jnp.full(X.shape[:-1], jnp.nan, X.dtype)
+
+
+def make_registry():
+    reg = FitnessRegistry()
+    reg.register("shifted_sphere", shifted_sphere)
+    reg.register("nan_fn", nan_fitness)
+    return reg
+
+
+def make_server(**extra):
+    kw = dict(registry=make_registry(), bbob_fids=(1, 8), max_budget=5000,
+              rows_per_island=2, **KW)
+    kw.update(extra)
+    return CampaignServer(**kw)
+
+
+@pytest.fixture
+def fresh_metrics():
+    prev = reg_mod.set_metrics(MetricsRegistry())
+    yield reg_mod.metrics()
+    reg_mod.set_metrics(prev)
+
+
+@pytest.fixture
+def count_device_get(monkeypatch):
+    calls = {"n": 0}
+    real = jax.device_get
+
+    def counting(x):
+        calls["n"] += 1
+        return real(x)
+
+    monkeypatch.setattr(jax, "device_get", counting)
+    return calls
+
+
+def series(reg, name):
+    return {lkey: s for (n, lkey), s in reg._series.items() if n == name}
+
+
+def counter_sum(reg, name, **labels):
+    return sum(s.value for lkey, s in series(reg, name).items()
+               if all(dict(lkey).get(k) == v for k, v in labels.items()))
+
+
+def heap_ok(heap):
+    """The binary-heap invariant every non-destructive operation must keep."""
+    return all(heap[(i - 1) // 2] <= heap[i] for i in range(1, len(heap)))
+
+
+# ---------------------------------------------------------------------------
+# the state machine: cancel / deadline / TTL / quarantine
+# ---------------------------------------------------------------------------
+
+def test_cancel_queued_and_running():
+    srv = make_server(rows_per_island=1)
+    t_run = srv.submit(CampaignRequest(dim=4, fid=8, budget=3000, seed=7))
+    t_q = srv.submit(CampaignRequest(dim=4, fid=1, budget=2000, seed=3))
+    srv.step()                          # t_run admitted, t_q queued (1 row)
+    assert t_run.status == "running" and t_q.status == "queued"
+
+    # queued cancel: immediate, idempotent
+    assert srv.cancel(t_q.job_id) is True
+    assert t_q.status == "cancelled" and t_q.reason == "cancelled by client"
+    assert srv.cancel(t_q.job_id) is False      # already terminal
+    assert len(srv.queue) == 0
+
+    # running cancel: honored at the next boundary, with a partial result
+    assert srv.cancel(t_run.job_id) is True
+    assert t_run.status == "running"            # not yet — boundary applies it
+    srv.step()
+    assert t_run.status == "cancelled"
+    assert t_run.reason == "cancelled by client"
+    assert t_run.result is not None             # trajectory up to the boundary
+    assert 0 < t_run.fevals < t_run.request.budget
+    assert t_run.result.total_fevals == t_run.fevals
+    assert srv.cancel(12345) is False           # unknown id
+    srv.drain()                                 # idles out cleanly
+    assert all(t.terminal for t in srv.tickets.values())
+
+
+def test_deadline_and_ttl_expiry():
+    srv = make_server(rows_per_island=1)
+    t_run = srv.submit(CampaignRequest(dim=4, fid=8, budget=3000, seed=7,
+                                       deadline_s=3600.0))
+    t_q = srv.submit(CampaignRequest(dim=4, fid=1, budget=2000, seed=3,
+                                     queue_ttl_s=3600.0))
+    assert t_run.deadline_at is not None and t_q.ttl_at is not None
+    srv.step()                          # t_run admitted (deadline survived)
+    assert t_run.status == "running" and t_q.status == "queued"
+
+    # queue TTL: force the armed instant into the past — next step expires
+    # the ticket before admission, host clock only
+    t_q.ttl_at = 0.0
+    srv.step()
+    assert t_q.status == "expired" and t_q.reason == "queue TTL exceeded"
+
+    # run deadline: enforced at the boundary pull, partial result lands
+    t_run.deadline_at = 0.0
+    srv.step()
+    assert t_run.status == "expired"
+    assert t_run.reason == "deadline exceeded while running"
+    assert t_run.result is not None and t_run.fevals > 0
+    srv.drain()
+
+
+def test_nan_poison_is_quarantined_with_partial_result(fresh_metrics):
+    reg = fresh_metrics
+    srv = make_server()
+    t_bad = srv.submit(CampaignRequest(dim=4, fitness="nan_fn",
+                                       budget=3000, seed=1))
+    t_ok = srv.submit(CampaignRequest(dim=4, fid=1, budget=1500, seed=3))
+    srv.drain()
+    assert t_bad.status == "quarantined"
+    assert "non-finite" in t_bad.reason
+    assert t_bad.result is not None and t_bad.fevals > 0
+    assert not np.isfinite(t_bad.best_f)
+    assert t_bad.fevals < t_bad.request.budget  # retired at the FIRST verdict
+    assert t_ok.done                            # co-tenant unaffected
+    assert counter_sum(reg, "service_quarantine_total",
+                       reason="nonfinite") == 1
+    assert counter_sum(reg, "service_job_lifecycle_total",
+                       **{"from": "running", "to": "quarantined"}) == 1
+
+
+def test_no_progress_watermark_verdict():
+    """Unit test of the flat-feval quarantine: only boundaries the job was
+    actually DISPATCHED charge the watermark, progress resets it, and the
+    explicit-cancel verdict outranks it."""
+    srv = make_server(quarantine_stall_boundaries=2)
+    t = CampaignTicket(job_id=99,
+                       request=CampaignRequest(dim=4, fid=1, budget=100))
+    v = srv._row_verdict(t, 99, 10, 1.0, True, now=0.0)
+    assert v is None                            # first observation
+    assert srv._row_verdict(t, 99, 10, 1.0, False, now=0.0) is None
+    assert srv._noprog[99][1] == 0              # not dispatched: not charged
+    assert srv._row_verdict(t, 99, 10, 1.0, True, now=0.0) is None  # flat #1
+    v = srv._row_verdict(t, 99, 10, 1.0, True, now=0.0)             # flat #2
+    assert v is not None and v[0] == "quarantined" and "no progress" in v[1]
+    assert 99 not in srv._noprog                # verdict clears the record
+    # progress resets the count
+    assert srv._row_verdict(t, 99, 10, 1.0, True, now=0.0) is None
+    assert srv._row_verdict(t, 99, 10, 1.0, True, now=0.0) is None
+    assert srv._row_verdict(t, 99, 20, 1.0, True, now=0.0) is None
+    assert srv._noprog[99] == (20, 0)
+    # precedence: cancel > deadline > poison
+    srv._cancels.add(99)
+    t.deadline_at = 0.0
+    assert srv._row_verdict(t, 99, 20, float("nan"), True,
+                            now=1.0)[0] == "cancelled"
+    srv._cancels.discard(99)
+    assert srv._row_verdict(t, 99, 20, float("nan"), True,
+                            now=1.0)[0] == "expired"
+    t.deadline_at = None
+    assert srv._row_verdict(t, 99, 20, float("nan"), True,
+                            now=1.0)[0] == "quarantined"
+
+
+# ---------------------------------------------------------------------------
+# admission queue: shedding, non-destructive take, no starvation
+# ---------------------------------------------------------------------------
+
+def test_queue_sheds_lowest_priority_on_strict_win():
+    q = AdmissionQueue(max_pending=2)
+    t_mid = q.submit(CampaignRequest(dim=4, fid=1, budget=100, priority=1))
+    t_lo = q.submit(CampaignRequest(dim=4, fid=1, budget=100, priority=0))
+    # an equal-priority submit still gets backpressure (ties never shed)
+    with pytest.raises(QueueFull):
+        q.submit(CampaignRequest(dim=4, fid=1, budget=100, priority=0))
+    # a strictly higher-priority submit displaces the lowest-priority ticket
+    t_hi = q.submit(CampaignRequest(dim=4, fid=1, budget=100, priority=5))
+    assert t_lo.status == "shed" and "priority-5" in t_lo.reason
+    # the new lowest is prio-1: another tie is backpressure again
+    with pytest.raises(QueueFull):
+        q.submit(CampaignRequest(dim=4, fid=1, budget=100, priority=1))
+    assert t_lo.terminal
+    assert q.drain_shed() == [t_lo] and q.drain_shed() == []
+    assert len(q) == 2 and heap_ok(q._heap)
+    assert {t.job_id for t in q.pending()} == {t_mid.job_id, t_hi.job_id}
+
+
+def test_take_is_nondestructive_and_never_starves():
+    rng = np.random.default_rng(0)
+    q = AdmissionQueue(max_pending=64)
+    wide = q.submit(CampaignRequest(dim=16, fid=1, budget=100, priority=9))
+    narrow = [q.submit(CampaignRequest(dim=4, fid=1, budget=100,
+                                       priority=int(rng.integers(0, 4))))
+              for _ in range(20)]
+    out = []
+    while True:
+        item = q.take(lambda r: r.dim == 4)
+        if item is None:
+            break
+        assert heap_ok(q._heap)         # removal never breaks the heap
+        out.append(item[1])
+    # the blocked high-priority wide job never starves placeable narrow ones
+    assert len(out) == len(narrow)
+    prios = [t.request.priority for t in out]
+    assert prios == sorted(prios, reverse=True)
+    for p in set(prios):                # FIFO within a priority
+        ids = [t.job_id for t in out if t.request.priority == p]
+        assert ids == sorted(ids)
+    assert len(q) == 1
+    assert q.take()[1] is wide
+    # remove + expire keep the invariant too
+    for _ in range(12):
+        q.submit(CampaignRequest(dim=4, fid=1, budget=100,
+                                 priority=int(rng.integers(0, 4))))
+    victims = [t for i, t in enumerate(q.pending()) if i % 3 == 0]
+    for t in victims[:2]:
+        assert q.remove(t.job_id) is t and heap_ok(q._heap)
+    for t in victims[2:]:
+        t.ttl_at = 0.0
+    expired = q.expire(now_s=1.0)
+    assert heap_ok(q._heap)
+    assert sorted(t.job_id for t in expired) == sorted(
+        t.job_id for t in victims[2:])
+    assert all(t.status == "expired" for t in expired)
+
+
+def test_server_shed_then_dedup_resubmit(fresh_metrics):
+    reg = fresh_metrics
+    srv = make_server(max_pending=2)
+    r1 = CampaignRequest(dim=4, fid=1, budget=1200, seed=0, dedup_key="a")
+    r2 = CampaignRequest(dim=4, fid=8, budget=1200, seed=1, dedup_key="b")
+    t1 = srv.submit(r1)
+    t2 = srv.submit(r2)
+    # dedup short-circuit: a live ticket's key returns the SAME ticket
+    assert srv.submit(CampaignRequest(dim=4, fid=1, budget=1200, seed=0,
+                                      dedup_key="a")) is t1
+    t3 = srv.submit(CampaignRequest(dim=4, fid=1, budget=800, seed=2,
+                                    priority=5))
+    assert t2.status == "shed"          # lowest-priority youngest displaced
+    assert counter_sum(reg, "service_shed_total") == 1
+    assert counter_sum(reg, "service_jobs_total", event="shed") == 1
+    srv.drain()
+    assert t1.done and t3.done
+    # terminal-failed key admits the retry fresh; done key stays pinned
+    t2b = srv.submit(CampaignRequest(dim=4, fid=8, budget=1200, seed=1,
+                                     dedup_key="b"))
+    assert t2b is not t2 and t2b.job_id != t2.job_id
+    assert srv.submit(CampaignRequest(dim=4, fid=1, budget=1200, seed=0,
+                                      dedup_key="a")) is t1   # done: pinned
+    srv.drain()
+    assert t2b.done
+    # releasing a ticket unpins its key: the next resubmit starts fresh
+    srv.release_ticket(t1.job_id)
+    t1b = srv.submit(CampaignRequest(dim=4, fid=1, budget=1200, seed=0,
+                                     dedup_key="a"))
+    assert t1b.job_id != t1.job_id
+    srv.drain()
+    assert t1b.done
+
+
+# ---------------------------------------------------------------------------
+# the zero-cost contract: no new syncs, no new programs
+# ---------------------------------------------------------------------------
+
+def test_lifecycle_mix_adds_no_syncs_or_programs(fresh_metrics,
+                                                 count_device_get):
+    reg = fresh_metrics
+    srv = make_server(rows_per_island=2, max_pending=2)
+    t_bad = srv.submit(CampaignRequest(dim=4, fitness="nan_fn",
+                                       budget=2500, seed=1))
+    t_run = srv.submit(CampaignRequest(dim=4, fid=8, budget=3000, seed=7))
+    srv.step()                          # both admitted
+    srv.cancel(t_run.job_id)
+    t_q1 = srv.submit(CampaignRequest(dim=4, fid=1, budget=1000, seed=2,
+                                      queue_ttl_s=3600.0))
+    t_q2 = srv.submit(CampaignRequest(dim=4, fid=1, budget=1000, seed=3))
+    t_hi = srv.submit(CampaignRequest(dim=4, fid=1, budget=800, seed=4,
+                                      priority=5))
+    assert t_q2.status == "shed"
+    t_q1.ttl_at = 0.0                   # expires at the next step
+    srv.drain()
+
+    assert t_bad.status == "quarantined"
+    assert t_run.status == "cancelled"
+    assert t_q1.status == "expired"
+    assert t_hi.done
+    assert all(t.terminal for t in srv.tickets.values())
+    # the whole state machine is in the lifecycle series
+    edges = {(dict(lkey)["from"], dict(lkey)["to"]): s.value
+             for lkey, s in series(reg, "service_job_lifecycle_total").items()}
+    assert edges[("new", "queued")] == 5
+    assert edges[("queued", "shed")] == 1
+    assert edges[("queued", "expired")] == 1
+    assert edges[("running", "cancelled")] == 1
+    assert edges[("running", "quarantined")] == 1
+    assert edges[("running", "done")] == 1
+
+    # zero new syncs: every device_get is an observed boundary pull —
+    # cancel/deadline/quarantine enforcement pulled nothing extra
+    pulls = sum(h.count for h in
+                series(reg, "service_boundary_pull_s").values())
+    assert pulls > 0
+    assert count_device_get["n"] == pulls
+    # zero new programs: the compile bound holds through the chaos mix
+    assert srv.segment_compiles() <= (KW["kmax_exp"] + 1) * len(srv.lanes)
+
+
+# ---------------------------------------------------------------------------
+# fleet composition: poison is a job verdict, never an island one
+# ---------------------------------------------------------------------------
+
+def test_poison_job_never_kills_island(fresh_metrics, tmp_path):
+    reg = fresh_metrics
+    # reference: the healthy job alone, unsupervised
+    ref = make_server()
+    t_ref = ref.submit(CampaignRequest(dim=4, fid=8, budget=2500, seed=7))
+    ref.drain()
+
+    # stall_boundaries=1: a single mis-graded no-progress round would kill
+    # the island — the tightest setting the blind spot could trip
+    srv = make_server(snapshot_dir=str(tmp_path / "ck"))
+    ctl = FleetController(srv, FleetConfig(snapshot_every=2,
+                                           stall_boundaries=1))
+    t_bad = srv.submit(CampaignRequest(dim=4, fitness="nan_fn",
+                                       budget=2500, seed=1))
+    t_ok = srv.submit(CampaignRequest(dim=4, fid=8, budget=2500, seed=7))
+    ctl.drain()
+    assert t_bad.status == "quarantined"
+    assert t_ok.done
+    assert ctl.sup.health.state(0) == "alive"
+    assert counter_sum(reg, "fleet_failures_total") == 0
+    # the healthy co-tenant is bit-identical to running alone (row-keyed
+    # sampling: a quarantined neighbour never perturbs a trajectory)
+    assert t_ok.fevals == t_ref.fevals
+    np.testing.assert_allclose(t_ok.best_f, t_ref.best_f,
+                               rtol=1e-12, atol=1e-12)
+    assert len(t_ok.result.descents) == len(t_ref.result.descents)
+    for a, b in zip(t_ref.result.descents, t_ok.result.descents):
+        np.testing.assert_array_equal(np.asarray(a.fevals),
+                                      np.asarray(b.fevals))
+        np.testing.assert_allclose(a.best_f, b.best_f,
+                                   rtol=1e-12, atol=1e-12)
+    # an island whose residents are all retired dispatches nothing and must
+    # never be graded "stalled" — idle supervised rounds keep it ALIVE
+    for _ in range(3):
+        ctl.step()
+    assert ctl.sup.health.state(0) == "alive"
+
+
+def test_slot_reuse_is_not_a_corrupt_read(fresh_metrics, tmp_path):
+    """Readmission into a freed row resets its feval counter to 0 — a
+    legitimate regress of the island's summed watermark that must trigger
+    neither the corrupt-read retry nor a stall/dead verdict."""
+    reg = fresh_metrics
+    srv = make_server(rows_per_island=1, snapshot_dir=str(tmp_path / "ck"))
+    ctl = FleetController(srv, FleetConfig(snapshot_every=2,
+                                           stall_boundaries=2, retries=1))
+    t_a = srv.submit(CampaignRequest(dim=4, fid=1, budget=1500, seed=3))
+    t_b = srv.submit(CampaignRequest(dim=4, fid=8, budget=1500, seed=5))
+    ctl.drain()                         # B re-uses A's row after A finishes
+    assert t_a.done and t_b.done
+    assert ctl.sup.health.state(0) == "alive"
+    assert counter_sum(reg, "fleet_pull_retries_total") == 0
+
+
+# ---------------------------------------------------------------------------
+# registry generations: versioned rollout without recompiling residents
+# ---------------------------------------------------------------------------
+
+def test_registry_rollout_zero_recompiles_of_resident_lanes():
+    srv = make_server()
+    t0 = srv.submit(CampaignRequest(dim=4, fitness="shifted_sphere",
+                                    budget=3000, seed=5))
+    for _ in range(2):
+        srv.step()                      # gen-0 lane is mid-flight
+    lane0 = srv.lanes[srv._lane_key(t0.request)]
+    assert lane0.key[4] == 0
+    progs0 = set(lane0.used_programs)
+    pc0 = program_cache_stats()
+
+    # live rollout: registering on a running server opens generation 1
+    srv.registry.register("late_sphere",
+                          lambda X: jnp.sum((X - 0.5) ** 2, axis=-1))
+    assert srv.registry.generation == 1
+    t1 = srv.submit(CampaignRequest(dim=4, fitness="late_sphere",
+                                    budget=1500, seed=9))
+    srv.drain()
+    assert t0.done and t1.done
+
+    lane1 = srv.lanes[srv._lane_key(t1.request)]
+    assert lane1.key[4] == 1 and lane1.key[:4] == lane0.key[:4]
+    assert len(lane1.custom_fns) == len(lane0.custom_fns) + 1
+    # every trace since the rollout is a NEW program key (gen-1 families or
+    # gen-0 buckets first reached post-rollout) — no resident family was
+    # re-traced: the cache delta equals exactly the set of new keys
+    pc1 = program_cache_stats()
+    new_keys = (lane0.used_programs | lane1.used_programs) - progs0
+    assert pc1["traces"] - pc0["traces"] == len(new_keys)
+    assert pc1["hits"] > pc0["hits"]    # the resident lane kept reusing
+    assert lane1.used_programs.isdisjoint(lane0.used_programs)
+    n_buckets = KW["kmax_exp"] + 1
+    assert srv.segment_compiles() <= n_buckets * len(srv.lanes)
+    # the resident gen-0 job ran to its normal trajectory through the rollout
+    r = run_ipop(shifted_sphere, 4, jax.random.PRNGKey(5),
+                 backend="bucketed", max_evals=3000, **KW)
+    assert r.total_fevals == t0.fevals
+    np.testing.assert_allclose(r.best_f, t0.best_f, rtol=1e-5, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# durability: lifecycle state rides snapshots; old snapshots still restore
+# ---------------------------------------------------------------------------
+
+def test_snapshot_roundtrips_lifecycle_states_and_dedup(tmp_path):
+    d = str(tmp_path / "ck")
+    srv = make_server(snapshot_dir=d)
+    t_run = srv.submit(CampaignRequest(dim=4, fid=8, budget=3000, seed=7,
+                                       dedup_key="keep"))
+    t_bad = srv.submit(CampaignRequest(dim=4, fitness="nan_fn",
+                                       budget=2000, seed=1))
+    srv.step()
+    srv.step()                          # nan job quarantined at boundary 2
+    assert t_bad.status == "quarantined"
+    t_c = srv.submit(CampaignRequest(dim=6, fid=1, budget=1000, seed=2))
+    srv.cancel(t_c.job_id)              # queued → cancelled
+    t_e = srv.submit(CampaignRequest(dim=6, fid=1, budget=1000, seed=3,
+                                     queue_ttl_s=3600.0))
+    t_e.ttl_at = 0.0
+    srv._expire_queued()                # queued → expired
+    srv.cancel(t_run.job_id)            # running → PENDING cancel
+    srv.snapshot()
+    del srv
+
+    srv2 = CampaignServer.restore(d, registry=make_registry())
+    r_run = srv2.tickets[t_run.job_id]
+    assert r_run.status == "running"
+    assert srv2._cancels == {t_run.job_id}      # pending cancel rode along
+    assert srv2._dedup == {"keep": t_run.job_id}
+    for t in (t_bad, t_c, t_e):
+        r = srv2.tickets[t.job_id]
+        assert r.status == t.status and r.reason == t.reason
+    assert srv2.tickets[t_bad.job_id].result is not None
+    # dedup against the restored live ticket returns it unchanged
+    assert srv2.submit(CampaignRequest(dim=4, fid=8, budget=3000, seed=7,
+                                       dedup_key="keep")) is r_run
+    srv2.drain()
+    assert r_run.status == "cancelled"          # honored post-restore
+    assert r_run.result is not None
+    # a terminal-failed key now admits fresh
+    t_new = srv2.submit(CampaignRequest(dim=4, fid=8, budget=1200, seed=7,
+                                        dedup_key="keep"))
+    assert t_new.job_id != t_run.job_id
+    srv2.drain()
+    assert t_new.done
+
+
+def test_pre_lifecycle_snapshot_still_restores(tmp_path):
+    """A PR-8-era snapshot — 4-tuple lane keys, no cancels/dedup/registry
+    meta, no lifecycle request fields — restores with empty defaults."""
+    d = str(tmp_path / "ck")
+    srv = make_server(snapshot_dir=d)
+    t_done = srv.submit(CampaignRequest(dim=4, fid=1, budget=1500, seed=5))
+    srv.drain()
+    t_live = srv.submit(CampaignRequest(dim=4, fid=8, budget=3000, seed=7))
+    for _ in range(3):
+        srv.step()
+    step = srv.snapshot()
+    srv.drain()                         # uninterrupted reference
+    ref_live = srv.tickets[t_live.job_id]
+    del srv
+
+    # strip every lifecycle-era key, reverting the snapshot to its PR-8 shape
+    p = os.path.join(d, f"step_{step:08d}", "meta.json")
+    with open(p) as fh:
+        meta = json.load(fh)
+    for k in ("cancels", "dedup", "registry"):
+        meta.pop(k)
+    for k in ("quarantine_nonfinite", "quarantine_stall_boundaries"):
+        meta["config"].pop(k)
+    for lm in meta["lanes"]:
+        assert len(lm["key"]) == 5
+        lm["key"] = lm["key"][:4]
+    for jm in meta["jobs"].values():
+        jm.pop("reason")
+        for k in ("queue_ttl_s", "deadline_s", "dedup_key"):
+            jm["request"].pop(k)
+    with open(p, "w") as fh:
+        json.dump(meta, fh)
+
+    srv2 = CampaignServer.restore(d, registry=make_registry())
+    assert all(len(k) == 5 and k[4] == 0 for k in srv2.lanes)   # padded
+    assert srv2._cancels == set() and srv2._dedup == {}
+    assert srv2.tickets[t_done.job_id].done
+    srv2.drain()
+    got = srv2.tickets[t_live.job_id]
+    assert got.done
+    assert got.fevals == ref_live.fevals
+    np.testing.assert_allclose(got.best_f, ref_live.best_f,
+                               rtol=1e-12, atol=1e-12)

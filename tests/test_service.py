@@ -309,8 +309,16 @@ def test_request_validation():
         srv.submit(CampaignRequest(dim=4, fid=24, budget=100))
     with pytest.raises(ValueError, match="unknown fitness"):
         srv.submit(CampaignRequest(dim=4, fitness="nope", budget=100))
-    with pytest.raises(RuntimeError, match="frozen"):
+    # registering after freeze() no longer raises: it opens generation g+1
+    g0 = srv.registry.generation
+    srv.registry.register("late", shifted_sphere)
+    assert srv.registry.generation == g0 + 1
+    assert "late" in srv.registry.names
+    assert "late" not in srv.registry.names_at(g0)
+    with pytest.raises(ValueError, match="already registered"):
         srv.registry.register("late", shifted_sphere)
+    with pytest.raises(ValueError, match="negative|>= 0"):
+        CampaignRequest(dim=4, fid=1, budget=100, deadline_s=-1).validate()
 
 
 def test_allocator_bitmap_and_repack():
