@@ -125,6 +125,12 @@ def _parser():
                          "backpressure + dedup resubmits)")
     ap.add_argument("--flood-jobs", type=int, default=12,
                     help="flood size for --overload")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Perfetto-loadable trace_event JSON of the "
+                         "measured pass here (raw spans beside it as .jsonl)")
+    ap.add_argument("--postmortem-dir", default=None,
+                    help="flight-recorder dump directory; in --chaos mode "
+                         "the gate asserts one postmortem per injected kill")
     return ap
 
 
@@ -150,6 +156,44 @@ def _max_rss_mb() -> float:
     import resource
     return round(resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
                  / 1024.0, 1)               # ru_maxrss is KB on Linux
+
+
+# span name -> soak phase (the wall breakdown is wholly derived from the
+# trace; "queued" is a job's wait for admission, the rest are boundary work)
+_PHASE_OF = {"queued": "admission", "dispatch": "dispatch",
+             "pull": "pull", "retire": "retire"}
+
+
+def _phase_walls(spans) -> dict:
+    """Per-phase wall totals of one measured pass, from its spans."""
+    out = {"admission": 0.0, "dispatch": 0.0, "pull": 0.0, "retire": 0.0}
+    for s in spans:
+        p = _PHASE_OF.get(s.name)
+        if p is not None:
+            out[p] += s.dur
+    return {k: round(v, 4) for k, v in out.items()}
+
+
+def _export_trace(args, violations=None):
+    """Export the tracer to ``--trace-out`` (Chrome JSON + raw .jsonl);
+    schema-validate the Chrome export, appending problems to
+    ``violations``.  No-op without the flag."""
+    if not args.trace_out:
+        return None
+    from repro import obs
+    from repro.obs.trace import to_chrome, validate_chrome
+
+    tr = obs.tracer()
+    n = tr.export_chrome(args.trace_out)
+    nj = tr.export_jsonl(args.trace_out + "l")
+    problems = validate_chrome(to_chrome(tr.finished(),
+                                         epoch_perf=tr.epoch_perf))
+    if problems and violations is not None:
+        violations.append(f"trace export failed schema validation: "
+                          f"{problems[:3]}")
+    print(f"[bench_service] wrote {args.trace_out} ({n} trace events; "
+          f"{nj} spans in {args.trace_out}l)")
+    return {"events": n, "spans": nj, "schema_errors": len(problems)}
 
 
 def _run_soak(args):
@@ -198,6 +242,7 @@ def _run_soak(args):
     warm.drain()
 
     obs.reset_metrics()                     # measured pass owns the registry
+    obs.reset_tracer()                      # ...and the span trace
     srv = make_server(metrics_out=args.metrics_out)
     t0 = time.perf_counter()
     stream = job_stream()
@@ -229,6 +274,18 @@ def _run_soak(args):
             break
     wall = time.perf_counter() - t0
     lat = obs.metrics().histogram("service_time_to_completion_s")
+    spans = obs.tracer().finished()
+    # reconciliation surface: every job root span ends at exactly one
+    # terminal lifecycle edge, so these two counts must agree (the trace↔
+    # metrics test in tests/test_trace.py asserts it; recorded here so a
+    # soak artifact carries its own cross-check)
+    job_roots = sum(1 for s in spans if s.name == "job")
+    edges = obs.metrics()
+    terminal_edges = int(sum(
+        s.value for (n, lkey), s in edges._series.items()
+        if n == "service_job_lifecycle_total"
+        and dict(lkey)["to"] in ("done", "rejected", "cancelled", "expired",
+                                 "quarantined", "shed")))
     return {
         "jobs": n_jobs,
         "dims": dims, "fids": list(fids), "budget": args.budget,
@@ -246,6 +303,11 @@ def _run_soak(args):
         "max_rss_mb": _max_rss_mb(),
         "segment_compiles": srv.segment_compiles(),
         "lanes": len(srv.lanes),
+        "phase_wall_s": _phase_walls(spans),
+        "trace_spans": len(spans),
+        "job_root_spans": job_roots,
+        "terminal_lifecycle_edges": terminal_edges,
+        "trace": _export_trace(args),
     }
 
 
@@ -302,7 +364,8 @@ def _run_chaos(args):
                                  devices=jax.devices(), snapshot_dir=td,
                                  snapshot_every=args.snapshot_every, **kw)
             ctl = FleetController(srv, FleetConfig(
-                snapshot_every=args.snapshot_every, plan=plan))
+                snapshot_every=args.snapshot_every, plan=plan,
+                postmortem_dir=args.postmortem_dir))
             tickets = submit_all(srv)
             t0 = time.perf_counter()
             ctl.drain()
@@ -310,6 +373,8 @@ def _run_chaos(args):
 
     ref, _ = run(supervised=False)          # also the warm compile pass
     obs.reset_metrics()                     # chaos pass owns the registry
+    obs.reset_tracer()                      # ...the span trace
+    obs.reset_recorder()                    # ...and the flight recorder
     got, wall = run(supervised=True)
 
     divergences = []
@@ -332,6 +397,48 @@ def _run_chaos(args):
         return {dict(lkey)[label]: s.value
                 for (n, lkey), s in reg._series.items() if n == name}
 
+    # -- observability gates: every recovered job's trace must link across
+    # the failure (recover event + a second running phase under the SAME
+    # root), and every injected failure must have dumped a post-mortem
+    # whose last-K timeline ends at the fault boundary itself ------------
+    obs_gate = []
+    spans = obs.tracer().finished()
+    by_id = {s.span_id: s for s in spans}
+    recovers = [s for s in spans if s.name == "recover" and "job" in s.attrs]
+    linked = 0
+    for s in recovers:
+        root = by_id.get(s.parent_id)
+        runs = [] if root is None else [
+            c for c in spans
+            if c.parent_id == root.span_id and c.name == "running"]
+        if root is not None and root.name == "job" and len(runs) >= 2:
+            linked += 1
+        else:
+            obs_gate.append(
+                f"job {s.attrs.get('job')} recovery trace is not linked "
+                f"to its pre-failure spans (parent chain broken)")
+    n_failures = int(sum(
+        label_counts("fleet_failures_total", "reason").values()))
+    pm_files = []
+    if args.postmortem_dir:
+        import glob
+        import os
+        pm_files = sorted(glob.glob(os.path.join(
+            args.postmortem_dir, "postmortem-*.json")))
+        if len(pm_files) < n_failures:
+            obs_gate.append(f"{len(pm_files)} postmortem artifacts for "
+                            f"{n_failures} injected failures")
+        for p in pm_files:
+            with open(p) as fh:
+                pm = json.load(fh)
+            tl = pm.get("timeline", [])
+            if not (tl and tl[-1].get("event") == "fault"
+                    and tl[-1].get("boundary") == pm["boundary"]):
+                obs_gate.append(
+                    f"{os.path.basename(p)}: last-K timeline does not end "
+                    f"at the injected fault boundary")
+    trace_rec = _export_trace(args, obs_gate)
+
     useful = sum(t.fevals for t in got if t.status == "done")
     record = {
         "jobs": args.jobs, "dims": dims, "fids": list(fids),
@@ -349,8 +456,11 @@ def _run_chaos(args):
         "recovery_events": rec_wall.count,
         "lost_work_evals_total": int(lost.sum),
         "divergences": divergences,
+        "postmortems": [p.rsplit("/", 1)[-1] for p in pm_files],
+        "recovered_trace_links": linked,
+        "trace": trace_rec,
     }
-    violations = list(divergences)
+    violations = list(divergences) + obs_gate
     if rec_wall.count == 0:
         violations.append("kill schedule injected no recovery "
                           "(plan never fired?)")
@@ -418,6 +528,7 @@ def _run_lifecycle(args):
     ref_srv.drain()
 
     obs.reset_metrics()                     # measured pass owns the registry
+    obs.reset_tracer()
     flood = [{
         "dim": int(rng.choice(dims)),
         "fid": int(rng.choice(fids)),
@@ -431,7 +542,8 @@ def _run_lifecycle(args):
         srv = make_server(snapshot_dir=td, snapshot_every=args.snapshot_every,
                           max_pending=4 if args.overload else 256)
         ctl = FleetController(srv, FleetConfig(
-            snapshot_every=args.snapshot_every))
+            snapshot_every=args.snapshot_every,
+            postmortem_dir=args.postmortem_dir))
         t0 = time.perf_counter()
         pending_prot = list(protected)
         pending_poison, pending_flood = [], []

@@ -363,6 +363,7 @@ def drive_segments(engine: BucketedLadderEngine, carry: ladder.LadderCarry,
             if supervisor is not None:
                 supervisor.before_dispatch(0, b)
             spec = dispatch(k_prev, seg_len[k_prev], carry)
+        pull_span = obs.tracer().start("pull", island="all", boundary=b)
         t0 = time.perf_counter()
         if supervisor is not None:
             k_idx, active, fevals, best_f = supervisor.pull(
@@ -370,6 +371,7 @@ def drive_segments(engine: BucketedLadderEngine, carry: ladder.LadderCarry,
         else:
             k_idx, active, fevals, best_f = pull(carry)
         sync_s = time.perf_counter() - t0
+        obs.tracer().end(pull_span)
         reg.histogram("bucketed_sync_s").observe(sync_s)
         fev_sum = float(np.sum(fevals))
         if fev_prev is not None:
@@ -386,6 +388,8 @@ def drive_segments(engine: BucketedLadderEngine, carry: ladder.LadderCarry,
                                budgets=budgets)
         if k is None:
             break
+        seg_span = obs.tracer().start("segment", island="all",
+                                      bucket=int(k), boundary=b)
         t0 = time.perf_counter()
         hit = spec is not None and k == k_prev
         if hit:
@@ -397,6 +401,9 @@ def drive_segments(engine: BucketedLadderEngine, carry: ladder.LadderCarry,
         if not overlap:
             jax.block_until_ready(carry.total_fevals)
         wall = time.perf_counter() - t0
+        obs.tracer().end(
+            seg_span, spec=("hit" if hit
+                            else "miss" if spec is not None else "sync"))
         seg_traces.append(tr)           # device-resident; transfer at the end
         seg = {"bucket": k, "gens": seg_len[k], "wall_s": round(wall, 5)}
         if overlap:

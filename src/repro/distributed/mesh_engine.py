@@ -297,8 +297,12 @@ class MeshCampaignEngine:
         instances — island bring-up is O(buckets), not O(buckets·calls)."""
         key = island_program_key(self.bucketed, k, seg_gens, branch_fids,
                                  fitness_fn, self.mesh.devices.flat)
-        fn = _ISLAND_CACHE.get(key, lambda: jax.jit(
-            self._seg_fn(k, seg_gens, branch_fids, fitness_fn)))
+        traces0 = _ISLAND_CACHE.stats["traces"]
+        with obs.tracer().span("compile", key=f"island.k{k}.g{seg_gens}") \
+                as sp:
+            fn = _ISLAND_CACHE.get(key, lambda: jax.jit(
+                self._seg_fn(k, seg_gens, branch_fids, fitness_fn)))
+            sp.attrs["hit"] = _ISLAND_CACHE.stats["traces"] == traces0
         self._island_keys.add(key)
         return fn
 
@@ -377,8 +381,14 @@ class MeshCampaignEngine:
             runner = self.ordered_runner(k, seg_gens, branch_fids,
                                          fitness_fn, cache=local_cache)
             args = (keys, c) if insts is None else (keys, insts, c)
+            # no island attr on purpose: drive_segments already covers this
+            # wall with its island="all" segment span — a second island-
+            # attributed span would double-count busy time in the digest
+            sp = obs.tracer().start("dispatch", strategy="ordered",
+                                    bucket=int(k))
             t0 = time.perf_counter()
             c, tr, g_fev, g_best = runner(*args)
+            obs.tracer().end(sp)
             reg.histogram("mesh_island_dispatch_s", strategy="ordered",
                           island="all").observe(time.perf_counter() - t0)
             inflight.append((c.total_fevals, int(k), g_fev, g_best))
@@ -460,6 +470,7 @@ class MeshCampaignEngine:
             for s, sh in enumerate(shards):
                 if sh["done"]:
                     continue
+                blk = obs.tracer().start("block", island=s, boundary=rnd)
                 t0 = time.perf_counter()
                 if supervisor is not None:
                     k_idx, active, fevals, best_f = supervisor.pull(
@@ -468,6 +479,7 @@ class MeshCampaignEngine:
                 else:
                     k_idx, active, fevals, best_f = bucketed.pull_schedule(
                         sh["carry"])             # blocks on THIS island only
+                obs.tracer().end(blk)
                 reg.histogram("mesh_island_block_s",
                               island=s).observe(time.perf_counter() - t0)
                 sh["best"] = float(best_f.min())
@@ -498,9 +510,12 @@ class MeshCampaignEngine:
                     else (sh["keys"], sh["insts"], sh["carry"])
                 if supervisor is not None:
                     supervisor.before_dispatch(s, rnd)
+                dsp = obs.tracer().start("dispatch", island=s,
+                                         bucket=int(k), boundary=rnd)
                 t0 = time.perf_counter()
                 sh["carry"], tr = runner(*args)   # async: no block here
                 wall = time.perf_counter() - t0
+                obs.tracer().end(dsp)
                 reg.histogram("mesh_island_dispatch_s",
                               strategy="concurrent",
                               island=s).observe(wall)

@@ -52,6 +52,7 @@ from repro import obs
 from repro.checkpoint import store
 from repro.fleet.faults import FaultPlan
 from repro.fleet.health import FleetHealth, HealthConfig
+from repro.obs.recorder import recorder as flight_recorder
 
 
 @dataclasses.dataclass
@@ -66,6 +67,7 @@ class FleetConfig:
     retries: int = 2                 # suspect pulls before dead; garbled-pull
     backoff_s: float = 0.0           # re-reads share the same retry budget
     skew_threshold: float = 0.5      # occupancy-fraction skew → lane repack
+    postmortem_dir: Optional[str] = None  # flight-recorder dump directory
 
     def health_config(self) -> HealthConfig:
         return HealthConfig(deadline_s=self.deadline_s,
@@ -91,6 +93,8 @@ class IslandSupervisor:
         self._statics: Dict[int, dict] = {}
         self._shard_dev: Dict[int, object] = {}
         self._dead_devs: set = set()
+        if self.cfg.postmortem_dir:
+            flight_recorder().out_dir = self.cfg.postmortem_dir
 
     # -- shared hooks (service + both engine drivers) -----------------------
 
@@ -116,9 +120,13 @@ class IslandSupervisor:
             fev = float(np.sum(fevals))
         expect = island in self._dispatched
         self._dispatched.discard(island)
-        self.health.observe(island, boundary, fev,
-                            time.perf_counter() - t0,
+        wall = time.perf_counter() - t0
+        self.health.observe(island, boundary, fev, wall,
                             expect_progress=expect)
+        # flight-recorder feed: host scalars already pulled, nothing new
+        flight_recorder().observe(island, boundary, wall=round(wall, 6),
+                                  fevals=fev,
+                                  grade=self.health.state(island))
         return k_idx, active, fevals, best_f
 
     def before_dispatch(self, island: int, boundary: int):
@@ -148,11 +156,17 @@ class IslandSupervisor:
             t0 = time.perf_counter()
             reg = obs.metrics()
             reg.counter("fleet_failures_total", reason=reason).inc()
+            rec = flight_recorder()
+            rec.observe(0, b, event="fault", grade="dead", reason=reason)
+            rec.dump(0, b, "dead", extra={"reason": reason, "mode": "replayed",
+                                          "snapshot_boundary": snap["boundary"]})
             lost = max(0.0, self.health.last_fev(0) - snap["fev"])
-            carry = jax.device_put(snap["carry"])
-            self.health.revive(0, b)
-            self.health.reset_progress(0, snap["fev"])
-            self._dispatched.discard(0)
+            with obs.tracer().span("recover", island=0, boundary=b,
+                                   reason=reason, mode="replayed"):
+                carry = jax.device_put(snap["carry"])
+                self.health.revive(0, b)
+                self.health.reset_progress(0, snap["fev"])
+                self._dispatched.discard(0)
             reg.counter("fleet_recoveries_total", mode="replayed").inc()
             reg.histogram("fleet_recovery_wall_s").observe(
                 time.perf_counter() - t0)
@@ -228,21 +242,27 @@ class IslandSupervisor:
         t0 = time.perf_counter()
         reg = obs.metrics()
         reg.counter("fleet_failures_total", reason=reason).inc()
+        rec = flight_recorder()
+        rec.observe(s, rnd, event="fault", grade="dead", reason=reason)
+        rec.dump(s, rnd, "dead", extra={"reason": reason, "mode": "replayed",
+                                        "snapshot_boundary": snap["boundary"]})
         lost = max(0.0, self.health.last_fev(s) - snap["fev"])
-        dev = self._replacement_device(s, devs)
-        sh, stat = shards[s], self._statics[s]
-        sh["keys"] = jax.device_put(stat["keys"], dev)
-        sh["insts"] = (None if stat["insts"] is None
-                       else jax.device_put(stat["insts"], dev))
-        sh["carry"] = jax.device_put(snap["carry"], dev)
-        sh["traces"] = list(snap["traces"])   # host trees; assembly is host
-        sh["segments"] = list(snap["segments"])
-        sh["done"], sh["best"] = snap["done"], snap["best"]
-        sh["fevals"] = snap["fevals"]
-        self._shard_dev[s] = dev
-        self.health.revive(s, rnd)
-        self.health.reset_progress(s, snap["fev"])
-        self._dispatched.discard(s)
+        with obs.tracer().span("recover", island=s, boundary=rnd,
+                               reason=reason, mode="replayed"):
+            dev = self._replacement_device(s, devs)
+            sh, stat = shards[s], self._statics[s]
+            sh["keys"] = jax.device_put(stat["keys"], dev)
+            sh["insts"] = (None if stat["insts"] is None
+                           else jax.device_put(stat["insts"], dev))
+            sh["carry"] = jax.device_put(snap["carry"], dev)
+            sh["traces"] = list(snap["traces"])  # host trees; assembly is host
+            sh["segments"] = list(snap["segments"])
+            sh["done"], sh["best"] = snap["done"], snap["best"]
+            sh["fevals"] = snap["fevals"]
+            self._shard_dev[s] = dev
+            self.health.revive(s, rnd)
+            self.health.reset_progress(s, snap["fev"])
+            self._dispatched.discard(s)
         reg.counter("fleet_recoveries_total", mode="replayed").inc()
         reg.histogram("fleet_recovery_wall_s").observe(
             time.perf_counter() - t0)
@@ -328,6 +348,14 @@ class FleetController:
         server.fleet = self
         if server.snapshot_dir and not server.snapshot_every:
             server.snapshot_every = self.cfg.snapshot_every
+        if self.cfg.postmortem_dir:
+            flight_recorder().out_dir = self.cfg.postmortem_dir
+
+    @property
+    def health(self) -> FleetHealth:
+        """The fleet's detector — the server's boundary code reads island
+        grades through ``server.fleet.health`` for its recorder feed."""
+        return self.sup.health
 
     # hook points the server calls (see server._island_boundary)
     def pull(self, island: int, boundary: int, fn, lane=None, jobs=None):
@@ -463,27 +491,43 @@ class FleetController:
         self._expect.pop(i, None)
         reg = obs.metrics()
         reg.counter("fleet_failures_total", reason=reason).inc()
+        frec = flight_recorder()
+        # guarantee the fault boundary itself is the last timeline entry of
+        # the post-mortem, whatever the island's pull cadence was
+        frec.observe(i, b, event="fault", grade="dead", reason=reason)
+        frec.dump(i, b, "dead",
+                  extra={"reason": reason, "down_for": down_for})
         snap = self._open_snapshot()
         lost = 0.0
-        for lane in srv.lanes.values():
-            al = lane.allocator
-            if i >= al.n_islands:
-                continue
-            for row in np.nonzero(al.row_jobs[i] >= 0)[0]:
-                job = int(al.row_jobs[i][row])
-                al.release(i, int(row))
-                t = srv.tickets[job]
-                vals, tr_row, own_row, fev_snap = self._recover_job(
-                    snap, lane, job, t)
-                lost += max(0.0, float(t.fevals) - fev_snap)
-                rec = {"lane_key": lane.key, "job": job, "vals": vals,
-                       "trace": tr_row, "own": own_row,
-                       "budget": int(t.request.budget)}
-                if not self._try_place(rec):
-                    self._pending.append(rec)
-                    t.island = t.row = None
-                    reg.counter("fleet_recoveries_total",
-                                mode="requeued").inc()
+        with obs.tracer().span("recover", island=i, boundary=b,
+                               reason=reason, mode="reassign") as rspan:
+            moved = parked = 0
+            for lane in srv.lanes.values():
+                al = lane.allocator
+                if i >= al.n_islands:
+                    continue
+                for row in np.nonzero(al.row_jobs[i] >= 0)[0]:
+                    job = int(al.row_jobs[i][row])
+                    al.release(i, int(row))
+                    t = srv.tickets[job]
+                    vals, tr_row, own_row, fev_snap = self._recover_job(
+                        snap, lane, job, t)
+                    lost += max(0.0, float(t.fevals) - fev_snap)
+                    rec = {"lane_key": lane.key, "job": job, "vals": vals,
+                           "trace": tr_row, "own": own_row,
+                           "budget": int(t.request.budget),
+                           "failed_island": i, "boundary": b}
+                    if self._try_place(rec):
+                        moved += 1
+                    else:
+                        parked += 1
+                        self._pending.append(rec)
+                        t.island = t.row = None
+                        reg.counter("fleet_recoveries_total",
+                                    mode="requeued").inc()
+                        srv.note_recovery(job, i, "requeued", b)
+            rspan.attrs["reassigned"] = moved
+            rspan.attrs["requeued"] = parked
         if down_for:
             self._down_until[i] = b + down_for
         reg.histogram("fleet_recovery_wall_s").observe(
@@ -577,6 +621,10 @@ class FleetController:
         t.lane, t.island, t.row = lane.key, j, nr
         obs.metrics().counter("fleet_recoveries_total",
                               mode="reassigned").inc()
+        # stitch the job's trace across the failure: close the pre-failure
+        # phase, mark the recovery, open a post-failure phase on the same root
+        srv.note_recovery(rec["job"], rec.get("failed_island", -1),
+                          "reassigned", rec.get("boundary", 0))
         return True
 
     def _place_pending(self):

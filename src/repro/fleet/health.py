@@ -87,6 +87,10 @@ class FleetHealth:
         rec.reason = reason if state == DEAD else ""
         rec.down_since = boundary if state == DEAD else None
         self._emit(i)
+        # the detection timestamp of a kill→detect→restore recovery trace:
+        # an instantaneous marker on the island's lane track
+        obs.tracer().event("health", island=i, state=state,
+                           boundary=boundary, reason=reason)
 
     # -- observations -------------------------------------------------------
 

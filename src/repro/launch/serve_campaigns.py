@@ -4,12 +4,22 @@
       [--requests reqs.json | --synthetic 8] [--devices 4] \
       [--snapshot-dir ckpt --snapshot-every 4] [--resume] [--out results.json] \
       [--fleet] [--chaos-kills "0:3:2"] [--metrics-out metrics.jsonl] \
-      [--metrics-port 9100]
+      [--metrics-port 9100] [--trace-out trace.json] [--postmortem-dir pm]
 
 ``--metrics-out`` appends one JSONL record of every live ``repro.obs``
 series per service round (docs/METRICS.md documents the series and how to
 read a run); ``--metrics-port`` additionally serves the prometheus-style
-text exposition at ``GET /metrics`` for dashboards to scrape.
+text exposition at ``GET /metrics`` for dashboards to scrape, plus a JSON
+``GET /statusz`` snapshot (lanes, per-island occupancy + health grade,
+queue depth, registry generation, active trace count).
+
+``--trace-out PATH`` exports the run's span trace on exit: PATH gets the
+Chrome ``trace_event`` JSON (open it in ui.perfetto.dev — one lane track
+per island, one async track per job) and ``PATH + 'l'`` (``.jsonl``) gets
+the raw span records that ``python -m repro.obs.trace --summarize``
+digests.  ``--postmortem-dir`` arms the flight recorder: an island graded
+DEAD or a job quarantine dumps ``postmortem-<island>-<boundary>.json``
+there with the island's last-K boundary observations and spans.
 
 ``--fleet`` wraps the service in a ``repro.fleet.FleetController``:
 boundary pulls are health-graded (deadline/stall detection), dead islands
@@ -89,6 +99,12 @@ def _parser():
                     help="append a metrics JSONL record every service round")
     ap.add_argument("--metrics-port", type=int, default=None,
                     help="serve GET /metrics on 127.0.0.1:PORT (0=ephemeral)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Perfetto-loadable trace_event JSON here "
+                         "on exit (raw spans land beside it as .jsonl)")
+    ap.add_argument("--postmortem-dir", default=None,
+                    help="flight-recorder dump directory (island death or "
+                         "job quarantine writes postmortem-*.json here)")
     return ap
 
 
@@ -173,11 +189,15 @@ def _serve(args):
                              snapshot_dir=args.snapshot_dir,
                              snapshot_every=args.snapshot_every,
                              metrics_out=args.metrics_out)
+    from repro import obs
+    from repro.obs.recorder import recorder as flight_recorder
+    if args.postmortem_dir:
+        flight_recorder().out_dir = args.postmortem_dir
     if args.metrics_port is not None:
-        from repro import obs
-        _httpd, port = obs.start_metrics_server(port=args.metrics_port)
-        print(f"[serve] metrics at http://127.0.0.1:{port}/metrics",
-              flush=True)
+        _httpd, port = obs.start_metrics_server(port=args.metrics_port,
+                                                status_fn=srv.statusz)
+        print(f"[serve] metrics at http://127.0.0.1:{port}/metrics, "
+              f"status at /statusz", flush=True)
 
     ctl = None
     if args.fleet or args.chaos_kills:
@@ -187,7 +207,8 @@ def _serve(args):
         ctl = FleetController(srv, FleetConfig(
             snapshot_every=args.snapshot_every or 4, plan=plan,
             deadline_s=args.fleet_deadline_s,
-            skew_threshold=args.fleet_skew))
+            skew_threshold=args.fleet_skew,
+            postmortem_dir=args.postmortem_dir))
         print(f"[serve] fleet supervision on "
               f"(snapshot_every={srv.snapshot_every or ctl.cfg.snapshot_every}"
               f"{', chaos plan ' + args.chaos_kills if plan else ''})",
@@ -263,6 +284,11 @@ def _serve(args):
         with open(args.out, "w") as fh:
             json.dump(summary, fh, indent=2)
         print(f"[serve] wrote {args.out}")
+    if args.trace_out:
+        n = obs.tracer().export_chrome(args.trace_out)
+        nj = obs.tracer().export_jsonl(args.trace_out + "l")
+        print(f"[serve] wrote {args.trace_out} ({n} trace events; "
+              f"{nj} spans in {args.trace_out}l) — open in ui.perfetto.dev")
     return 0
 
 

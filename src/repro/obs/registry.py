@@ -27,9 +27,10 @@ Two read surfaces:
 from __future__ import annotations
 
 import json
+import os
 import threading
 import time
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Iterator, List, Optional, Tuple
 
 from repro.obs import schema as schema_mod
 
@@ -177,12 +178,17 @@ class MetricsRegistry:
     def flush_jsonl(self, path: str):
         """Append one flush record (all live series) as a single JSON line.
         Lines carry a per-registry ``seq`` and a wall-clock ``unix_s`` so a
-        soak run's file replays as a time series."""
+        soak run's file replays as a time series.  Each append is flushed
+        AND fsync'd before close so a soak killed mid-run (the chaos gate's
+        whole point) leaves at most one torn trailing line — which
+        ``read_jsonl`` skips on replay."""
         rec = {"seq": self._flush_seq, "unix_s": round(time.time(), 3),
                "metrics": self.collect()}
         self._flush_seq += 1
         with open(path, "a") as fh:
             fh.write(json.dumps(rec) + "\n")
+            fh.flush()
+            os.fsync(fh.fileno())
 
     def render_text(self) -> str:
         """Prometheus-style text exposition (the ``/metrics`` body)."""
@@ -223,6 +229,25 @@ def _fmt_labels(labels: dict) -> str:
     return "{" + body + "}"
 
 
+def read_jsonl(path: str) -> Iterator[dict]:
+    """Crash-safe JSONL reader: yield each parseable record, skipping a
+    torn final line (a process killed mid-``flush_jsonl`` / mid-trace
+    export).  A malformed line anywhere BUT the end raises — that is
+    corruption, not a crash artifact."""
+    with open(path) as fh:
+        lines = fh.readlines()
+    for i, line in enumerate(lines):
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            yield json.loads(line)
+        except json.JSONDecodeError:
+            if i == len(lines) - 1:
+                return                    # torn tail from a dying writer
+            raise
+
+
 # ---------------------------------------------------------------------------
 # the process-wide registry
 # ---------------------------------------------------------------------------
@@ -260,17 +285,40 @@ def reset_metrics():
 # ---------------------------------------------------------------------------
 
 def start_metrics_server(registry: Optional[MetricsRegistry] = None,
-                         host: str = "127.0.0.1", port: int = 0):
+                         host: str = "127.0.0.1", port: int = 0,
+                         status_fn=None):
     """Serve ``registry.render_text()`` at ``GET /metrics`` from a daemon
     thread; returns ``(httpd, port)`` (``port=0`` binds an ephemeral port).
-    Call ``httpd.shutdown()`` to stop.  Standard-library only."""
+    Call ``httpd.shutdown()`` to stop.  Standard-library only.
+
+    ``status_fn`` (a zero-arg callable returning a JSON-able dict) adds a
+    ``GET /statusz`` introspection endpoint next to ``/metrics`` — the
+    campaign server passes its ``statusz()`` (lanes, per-island occupancy
+    and health grade, registry generation, queue depth, active trace
+    count) so an operator can ask a live service "what are you doing"
+    without parsing the prometheus exposition.  The callable runs on the
+    HTTP thread: it must only read host-side state, never touch a device.
+    """
     from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 
     reg = metrics() if registry is None else registry
 
     class Handler(BaseHTTPRequestHandler):
         def do_GET(self):
-            if self.path.split("?")[0] not in ("/", "/metrics"):
+            route = self.path.split("?")[0]
+            if route == "/statusz" and status_fn is not None:
+                try:
+                    body = json.dumps(status_fn(), indent=2).encode("utf-8")
+                except Exception as e:       # surface, don't kill the thread
+                    self.send_error(500, str(e))
+                    return
+                self.send_response(200)
+                self.send_header("Content-Type", "application/json")
+                self.send_header("Content-Length", str(len(body)))
+                self.end_headers()
+                self.wfile.write(body)
+                return
+            if route not in ("/", "/metrics"):
                 self.send_error(404)
                 return
             body = reg.render_text().encode("utf-8")

@@ -242,6 +242,33 @@ SCHEMA: Tuple[MetricSpec, ...] = (
                "Cross-island lane repacks scheduled by the controller, "
                "trigger=skew (occupancy imbalance) | rejoin (island "
                "re-admitted)."),
+    # -- causal tracing + flight recorder (obs/trace.py, obs/recorder.py) ---
+    MetricSpec("service_trace_spans_total", COUNTER, "spans", ("span",),
+               "obs/trace.py:Tracer.end",
+               "Finished spans appended to the process-wide tracer ring, "
+               "by span name (job|queued|running|recover|segment|pull|"
+               "dispatch|block|compile|...)."),
+    MetricSpec("service_trace_active", GAUGE, "spans", (),
+               "obs/trace.py:Tracer.start/end",
+               "Currently open (started, not yet ended) spans — exposed "
+               "on /statusz as the live-trace count."),
+    MetricSpec("service_trace_dropped_total", COUNTER, "spans", (),
+               "obs/trace.py:Tracer.end",
+               "Finished spans evicted from the bounded tracer ring "
+               "(capacity overflow on a long soak; raise Tracer capacity "
+               "or export more often)."),
+    MetricSpec("obs_recorder_observations_total", COUNTER, "observations",
+               ("island",),
+               "obs/recorder.py:FlightRecorder.observe",
+               "Boundary observations fed into the per-island flight-"
+               "recorder ring (wall, fevals delta, health grade, "
+               "verdicts)."),
+    MetricSpec("obs_recorder_postmortems_total", COUNTER, "dumps",
+               ("trigger",),
+               "obs/recorder.py:FlightRecorder.dump",
+               "Post-mortem dumps assembled on failure, trigger=dead "
+               "(island graded DEAD by fleet supervision) | quarantine "
+               "(poison job pulled from a row)."),
 )
 
 SPECS: Dict[str, MetricSpec] = {s.name: s for s in SCHEMA}
@@ -309,6 +336,17 @@ def main(argv=None) -> int:
         if check_file(args.check):
             print(f"[obs.schema] {args.check} matches the schema")
             return 0
+        # show WHAT drifted, not just that it did: unified diff of the
+        # file as-is vs the file with the generated block refreshed.
+        import difflib
+        with open(args.check) as fh:
+            current = fh.read()
+        diff = difflib.unified_diff(
+            current.splitlines(keepends=True),
+            _splice(current).splitlines(keepends=True),
+            fromfile=f"{args.check} (on disk)",
+            tofile=f"{args.check} (from schema)")
+        sys.stderr.writelines(diff)
         print(f"[obs.schema] {args.check} is STALE — regenerate with:\n"
               f"  PYTHONPATH=src python -m repro.obs.schema --write "
               f"{args.check}", file=sys.stderr)

@@ -51,6 +51,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
+from repro.obs.recorder import recorder as flight_recorder
 from repro.checkpoint import store
 from repro.core import bucketed, ipop as ipop_mod, ladder
 from repro.distributed.mesh_engine import ProgramCache
@@ -261,8 +262,13 @@ class _Lane:
 
     def runner(self, k: int, seg_gens: int) -> Callable:
         key = self.program_key(k, seg_gens)
-        fn = _SEGMENT_CACHE.get(key,
-                                lambda: self._build_runner(k, seg_gens))
+        traces0 = _SEGMENT_CACHE.stats["traces"]
+        with obs.tracer().span(
+                "compile", key=f"{_lane_label(self.key)}.k{k}.g{seg_gens}",
+                lane=_lane_label(self.key)) as sp:
+            fn = _SEGMENT_CACHE.get(key,
+                                    lambda: self._build_runner(k, seg_gens))
+            sp.attrs["hit"] = _SEGMENT_CACHE.stats["traces"] == traces0
         self.used_programs.add(key)
         return fn
 
@@ -365,6 +371,10 @@ class CampaignServer:
         self.lanes: Dict[tuple, _Lane] = {}
         self._completed: set = set()
         self._boundary_n = 0
+        # per-job trace spans (obs/trace.py): root "job" span + the current
+        # lifecycle phase child ("queued"/"running") — kept OFF the ticket
+        # so snapshots stay span-free (a restore re-opens fresh spans)
+        self._job_spans: Dict[int, dict] = {}
         # request lifecycle state (all host-side)
         self._cancels: set = set()      # running job ids to retire at boundary
         self._dedup: Dict[str, int] = {}        # dedup_key -> job id
@@ -438,6 +448,7 @@ class CampaignServer:
         reg.counter("service_jobs_total", event="submitted").inc()
         reg.counter("service_job_lifecycle_total",
                     **{"from": "new", "to": JOB_QUEUED}).inc()
+        self._open_job_trace(t)
         self._settle_shed()             # the submit may have evicted a victim
         return t
 
@@ -462,15 +473,74 @@ class CampaignServer:
         return True
 
     # -- lifecycle bookkeeping ------------------------------------------------
+    _TERMINAL_STATES = (JOB_DONE, JOB_REJECTED, JOB_CANCELLED, JOB_EXPIRED,
+                        JOB_QUARANTINED, JOB_SHED)
+
+    def _open_job_trace(self, t: CampaignTicket, phase: str = JOB_QUEUED):
+        """Start a job's root trace span plus its current lifecycle-phase
+        child.  The root spans submit → terminal; phase children ("queued",
+        "running", "recover") chain through parent_id so the whole
+        lifecycle — including post-failure recovery — is one trace."""
+        tr = obs.tracer()
+        root = tr.start("job", job=t.job_id, dim=t.request.dim,
+                        priority=t.request.priority)
+        ph = tr.start("running" if phase == JOB_RUNNING else "queued",
+                      parent=root, job=t.job_id)
+        self._job_spans[t.job_id] = {"root": root, "phase": ph}
+
+    def _close_job_trace(self, t: CampaignTicket):
+        """End a job's open phase + root spans with its terminal status and
+        reason as span attrs (no-op for jobs without a live trace)."""
+        spans = self._job_spans.pop(t.job_id, None)
+        if spans is None:
+            return
+        tr = obs.tracer()
+        ph = spans.get("phase")
+        if ph is not None and ph.t1 is None:
+            tr.end(ph)
+        tr.end(spans["root"], status=t.status, reason=t.reason)
+
+    def note_recovery(self, job_id: int, island: int, mode: str,
+                      boundary: int):
+        """Fleet hook: stitch a recovered job's trace across the failure.
+        Ends the pre-failure "running" phase, drops a "recover" marker, and
+        opens the post-failure "running" phase — all children of the SAME
+        root span, so the pre/post parent_id chain is intact (asserted by
+        the chaos gate)."""
+        spans = self._job_spans.get(job_id)
+        if spans is None:
+            return
+        tr = obs.tracer()
+        ph = spans.get("phase")
+        if ph is not None and ph.t1 is None:
+            tr.end(ph, failed_island=island)
+        tr.event("recover", parent=spans["root"], job=job_id, mode=mode,
+                 failed_island=island, boundary=boundary)
+        spans["phase"] = tr.start("running", parent=spans["root"],
+                                  job=job_id)
+
     def _transition(self, t: CampaignTicket, status: str, reason: str = ""):
         """Move a ticket to ``status``, recording the edge in the lifecycle
-        counter (every state-machine transition is observable)."""
+        counter (every state-machine transition is observable) and keeping
+        the job's trace spans in step: entering ``running`` swaps the phase
+        child, a terminal status ends the root span."""
         frm = t.status
         t.status = status
         if reason:
             t.reason = reason
         obs.metrics().counter("service_job_lifecycle_total",
                               **{"from": frm, "to": status}).inc()
+        if status in self._TERMINAL_STATES:
+            self._close_job_trace(t)
+        elif status == JOB_RUNNING:
+            spans = self._job_spans.get(t.job_id)
+            if spans is not None:
+                tr = obs.tracer()
+                ph = spans.get("phase")
+                if ph is not None and ph.t1 is None:
+                    tr.end(ph)
+                spans["phase"] = tr.start("running", parent=spans["root"],
+                                          job=t.job_id)
 
     def _settle_shed(self, stats: Optional[StepStats] = None):
         """Account tickets the queue shed since the last settle: lifecycle +
@@ -482,6 +552,7 @@ class CampaignServer:
                         **{"from": JOB_QUEUED, "to": JOB_SHED}).inc()
             reg.counter("service_shed_total").inc()
             reg.counter("service_jobs_total", event="shed").inc()
+            self._close_job_trace(t)
             if stats is not None:
                 stats.shed += 1
 
@@ -494,6 +565,7 @@ class CampaignServer:
             reg.counter("service_job_lifecycle_total",
                         **{"from": JOB_QUEUED, "to": JOB_EXPIRED}).inc()
             reg.counter("service_jobs_total", event="expired").inc()
+            self._close_job_trace(t)
             if stats is not None:
                 stats.expired += 1
 
@@ -612,6 +684,7 @@ class CampaignServer:
         al = lane.allocator
         reg = obs.metrics()
         lbl = _lane_label(lane.key)
+        pull_span = obs.tracer().start("pull", lane=lbl, island=i)
         t0 = time.perf_counter()
         if self.fleet is not None:
             k_idx, active, fevals, best_f = self.fleet.pull(
@@ -621,8 +694,9 @@ class CampaignServer:
         else:
             k_idx, active, fevals, best_f = bucketed.pull_schedule(
                 isl.arrays["carry"])
-        reg.histogram("service_boundary_pull_s",
-                      lane=lbl).observe(time.perf_counter() - t0)
+        pull_wall = time.perf_counter() - t0
+        obs.tracer().end(pull_span, boundary=self._boundary_n)
+        reg.histogram("service_boundary_pull_s", lane=lbl).observe(pull_wall)
         k_idx, active, fevals = k_idx.copy(), active.copy(), fevals.copy()
         lam_cur = lane.engine.lam_start * (2 ** k_idx)
 
@@ -658,16 +732,31 @@ class CampaignServer:
                 done = True
             if done:
                 finish.append((int(row), job, None if hit else verdict))
+        # flight-recorder feed: one observation per island boundary, built
+        # entirely from the arrays this boundary ALREADY pulled plus the
+        # fleet's (host-side) health grade — the last K of these become the
+        # post-mortem timeline when this island dies or quarantines a job
+        flight_recorder().observe(
+            i, self._boundary_n, lane=lbl,
+            wall=round(pull_wall, 6), fevals=int(np.sum(fevals)),
+            grade=(self.fleet.health.state(i) if self.fleet is not None
+                   else "alive"),
+            verdicts=[{"job": job, "status": v[0], "reason": v[1]}
+                      for _row, job, v in finish if v is not None])
         if deact.any():
             isl.arrays["carry"] = lane._deactivate(
                 isl.arrays["carry"], jax.device_put(deact, isl.device))
-        for row, job, verdict in finish:
-            if verdict is None:
-                self._finalize(lane, i, isl, row, job)
-            else:
-                self._finalize(lane, i, isl, row, job,
-                               status=verdict[0], reason=verdict[1])
-            stats.finalized += 1
+        if finish:
+            with obs.tracer().span("retire", lane=lbl, island=i,
+                                   boundary=self._boundary_n,
+                                   rows=len(finish)):
+                for row, job, verdict in finish:
+                    if verdict is None:
+                        self._finalize(lane, i, isl, row, job)
+                    else:
+                        self._finalize(lane, i, isl, row, job,
+                                       status=verdict[0], reason=verdict[1])
+                    stats.finalized += 1
         self._prune_traces(isl)
 
         # -- admission (highest priority first, this island's free rows) --
@@ -694,13 +783,15 @@ class CampaignServer:
         self._seg_jobs[(lane.key, i)] = {
             int(al.row_jobs[i][r]) for r in np.nonzero(live)[0]
             if al.row_jobs[i][r] >= 0}
-        runner = lane.runner(k, lane.seg_len[k])
-        if self.fleet is not None:
-            self.fleet.before_dispatch(i, self._boundary_n,
-                                       live_rows=int(np.sum(live)))
-        a = isl.arrays
-        carry, tr = runner(a["keys"], a["fn_idx"], a["budgets"], a["insts"],
-                           a["carry"])
+        with obs.tracer().span("dispatch", lane=lbl, island=i, bucket=int(k),
+                               boundary=self._boundary_n):
+            runner = lane.runner(k, lane.seg_len[k])
+            if self.fleet is not None:
+                self.fleet.before_dispatch(i, self._boundary_n,
+                                           live_rows=int(np.sum(live)))
+            a = isl.arrays
+            carry, tr = runner(a["keys"], a["fn_idx"], a["budgets"],
+                               a["insts"], a["carry"])
         isl.arrays["carry"] = carry
         own = np.repeat(al.row_jobs[i].copy()[:, None], lane.seg_len[k],
                         axis=1)
@@ -767,7 +858,7 @@ class CampaignServer:
         _i, row = placed
         vals = self._job_vals(lane, req)
         isl.arrays = lane._write_row(isl.arrays, vals, row)
-        t.status = JOB_RUNNING
+        self._transition(t, JOB_RUNNING)
         t.lane, t.island, t.row = lane.key, i, row
         t.admit_s = time.monotonic()
         t.admit_boundary = self._boundary_n
@@ -825,6 +916,12 @@ class CampaignServer:
                 kind = ("nonfinite" if "non-finite" in reason
                         else "no_progress")
                 reg.counter("service_quarantine_total", reason=kind).inc()
+                # a poisoned job is a failure artifact worth a post-mortem:
+                # dump the island's last-K boundary timeline around it
+                flight_recorder().dump(
+                    i, self._boundary_n, "quarantine",
+                    extra={"job": job, "reason": reason,
+                           "lane": _lane_label(lane.key), "row": row})
 
     def _prune_traces(self, isl: _Island):
         def live(own):
@@ -849,6 +946,33 @@ class CampaignServer:
             "segment_compiles": self.segment_compiles(),
             "program_cache": program_cache_stats(),
         }
+
+    def statusz(self) -> dict:
+        """Live introspection snapshot for the HTTP ``/statusz`` endpoint
+        (``start_metrics_server(status_fn=srv.statusz)``): lanes with
+        per-island occupancy and health grade, registry generation, queue
+        depth, active trace count.  Reads only host-side bookkeeping —
+        safe to call from the HTTP thread mid-round."""
+        lanes = {}
+        for key, lane in self.lanes.items():
+            al = lane.allocator
+            lanes[_lane_label(key)] = {
+                "islands": {
+                    str(i): {
+                        "occupancy": round(
+                            1.0 - al.free_rows(i) / al.rows_per_island, 4),
+                        "health": (self.fleet.health.state(i)
+                                   if self.fleet is not None else "alive"),
+                        "down": i in self.down_islands,
+                    } for i in range(al.n_islands)},
+            }
+        return {"boundary": self._boundary_n,
+                "lanes": lanes,
+                "queue_depth": len(self.queue),
+                "resident_jobs": self._resident_jobs(),
+                "registry_generation": self.registry.generation,
+                "active_traces": obs.tracer().active_count(),
+                "down_islands": sorted(self.down_islands)}
 
     # -- durability -----------------------------------------------------------
     def snapshot(self) -> int:
@@ -996,6 +1120,9 @@ class CampaignServer:
             t.updates = list(jm.get("updates", []))
             if not t.terminal:
                 t.arm(now)
+                # spans are process-local (never snapshotted): a restored
+                # live job gets a fresh trace rooted at the resume
+                srv._open_job_trace(t, phase=t.status)
             srv.tickets[t.job_id] = t
             if t.terminal and t.status != JOB_REJECTED:
                 # any terminal resident job must be recognised by trace

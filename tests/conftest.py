@@ -12,6 +12,7 @@ tests spawn subprocesses (see tests/test_strategies.py) or use
 import os
 
 import jax
+import pytest
 
 jax.config.update("jax_enable_x64", True)
 
@@ -19,6 +20,23 @@ jax.config.update("jax_enable_x64", True)
 # impl= A/B test (e.g. the fused-vs-unfused HLO pins) to one path; the
 # suite must see the caller's impl verbatim
 os.environ.pop("REPRO_KERNEL_IMPL", None)
+
+
+@pytest.fixture
+def count_device_get(monkeypatch):
+    """Count ``jax.device_get`` calls — ``bucketed.pull_schedule`` is the
+    tree's only call site, so the count IS the number of device syncs.
+    Shared by test_obs.py and test_trace.py: both pin the zero-new-syncs
+    contract (every sync is an observed boundary pull)."""
+    calls = {"n": 0}
+    real = jax.device_get
+
+    def counting(x):
+        calls["n"] += 1
+        return real(x)
+
+    monkeypatch.setattr(jax, "device_get", counting)
+    return calls
 
 
 def hermetic_subproc_env() -> dict:

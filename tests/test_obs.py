@@ -102,7 +102,7 @@ def test_schema_table_conventions():
     assert len(schema_mod.SPECS) == len(schema_mod.SCHEMA)
     for s in schema_mod.SCHEMA:
         assert s.name.split("_")[0] in ("bucketed", "mesh", "service",
-                                        "fleet")
+                                        "fleet", "obs")
         if s.kind == schema_mod.COUNTER:
             assert s.name.endswith("_total"), s.name
         if s.kind == schema_mod.HISTOGRAM:
@@ -174,7 +174,8 @@ def test_text_exposition_and_http_endpoint():
 def test_obs_package_is_jax_and_numpy_free():
     """The schema drift check (CI lint step) and the registry must not pay
     a jax/numpy import — pinned in a clean interpreter."""
-    code = ("import sys, repro.obs.registry, repro.obs.schema; "
+    code = ("import sys, repro.obs.registry, repro.obs.schema, "
+            "repro.obs.trace, repro.obs.recorder; "
             "assert 'jax' not in sys.modules, 'obs imported jax'; "
             "assert 'numpy' not in sys.modules, 'obs imported numpy'")
     subprocess.run([sys.executable, "-c", code], check=True, cwd=ROOT,
@@ -191,21 +192,6 @@ def test_metrics_docs_match_schema():
 # ---------------------------------------------------------------------------
 # the instrumented vertical + the zero-overhead contract
 # ---------------------------------------------------------------------------
-
-@pytest.fixture
-def count_device_get(monkeypatch):
-    """Count ``jax.device_get`` calls — ``bucketed.pull_schedule`` is the
-    tree's only call site, so the count IS the number of device syncs."""
-    calls = {"n": 0}
-    real = jax.device_get
-
-    def counting(x):
-        calls["n"] += 1
-        return real(x)
-
-    monkeypatch.setattr(jax, "device_get", counting)
-    return calls
-
 
 def test_bucketed_run_emits_series_without_new_syncs(fresh_metrics,
                                                      count_device_get):
